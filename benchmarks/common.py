@@ -1,0 +1,178 @@
+"""Shared benchmark harness: train the classifier zoo once, cache
+predictions, and provide the five comparison methods of the paper
+(Baseline / IDK / ConfNet / Temp. Scaling / LtC).
+
+All benchmarks run on the synthetic teacher task (DESIGN.md §6) with the
+paper's protocol: train/val/test split, δ chosen on val by best cascade
+accuracy, metrics reported on test over `n_seeds` seeds (mean ± stderr).
+"""
+from __future__ import annotations
+
+import functools
+import os
+import pickle
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration, cascade, losses, thresholds
+from repro.core import confidence as conf_lib
+from repro.data.synthetic import teacher_task
+from repro.models import classifier as clf
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "experiments/bench_cache")
+EPOCHS = int(os.environ.get("REPRO_BENCH_EPOCHS", "6"))
+NUM_SAMPLES = int(os.environ.get("REPRO_BENCH_SAMPLES", "200000"))
+SEEDS = int(os.environ.get("REPRO_BENCH_SEEDS", "3"))
+
+FAST_MODELS = ("alexnet", "vgg11", "mobilenetv2")
+EXP_MODELS = ("resnet18", "resnet152")
+METHODS = ("baseline", "idk", "confnet", "temp_scaling", "ltc")
+
+
+def _cache(path, fn):
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    full = os.path.join(CACHE_DIR, path)
+    if os.path.exists(full):
+        with open(full, "rb") as f:
+            return pickle.load(f)
+    out = fn()
+    with open(full, "wb") as f:
+        pickle.dump(out, f)
+    return out
+
+
+@dataclass
+class World:
+    """One seed's data + trained zoo + cached predictions."""
+    seed: int
+    data: dict          # split -> Dataset
+    zoo_cfgs: dict
+    logits: dict        # (model, split) -> np.ndarray
+    feats: dict         # (model, split) -> np.ndarray (penultimate)
+    ltc_logits: dict    # (fast, exp, split) -> np.ndarray
+    heads: dict         # (fast, kind) -> ConfHead params (np tree)
+
+
+def _train_and_predict(cfg, tr, splits, key, **kw):
+    p = clf.train_classifier(cfg, jnp.asarray(tr.x), jnp.asarray(tr.y),
+                             key=key, epochs=EPOCHS, lr=0.03,
+                             batch_size=512, **kw)
+    out_l, out_f = {}, {}
+    for name, split in splits.items():
+        logits, feats = clf.mlp_apply(p, jnp.asarray(split.x),
+                                      with_features=True)
+        out_l[name] = np.asarray(logits)
+        out_f[name] = np.asarray(feats)
+    return p, out_l, out_f
+
+
+def build_world(seed: int, verbose: bool = True) -> World:
+    def make():
+        t0 = time.time()
+        ds = teacher_task(num_samples=NUM_SAMPLES, seed=seed)
+        tr, va, te = ds.split((0.9, 0.05, 0.05), seed=seed)
+        splits = {"train": tr, "val": va, "test": te}
+        zoo_cfgs = clf.zoo(in_dim=tr.x.shape[1], num_classes=int(tr.y.max()) + 1)
+        logits, feats, params = {}, {}, {}
+        for name, cfg in zoo_cfgs.items():
+            key = jax.random.PRNGKey(seed * 100 + hash(name) % 97)
+            p, ls, fs = _train_and_predict(cfg, tr, splits, key)
+            params[name] = p
+            for s in splits:
+                logits[(name, s)] = ls[s]
+                feats[(name, s)] = fs[s]
+            if verbose:
+                acc = (ls["test"].argmax(-1) == te.y).mean()
+                print(f"  [seed {seed}] {name}: test acc {acc*100:.2f}% "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+
+        # LtC retrainings: fast model per expensive model (Eq 5 order).
+        # The extra (resnet18 -> resnet152) pair supports the Table-4
+        # three-element cascade (mobilenet -> r18 -> r152).
+        pairs = [(fast, exp) for exp in EXP_MODELS for fast in FAST_MODELS]
+        pairs.append(("resnet18", "resnet152"))
+        ltc_logits = {}
+        for fast, exp in pairs:
+            exp_tr = jnp.asarray(logits[(exp, "train")])
+            key = jax.random.PRNGKey(seed * 1000 + hash(fast + exp) % 97)
+            p, ls, _ = _train_and_predict(
+                zoo_cfgs[fast], tr, splits, key,
+                exp_logits=exp_tr, ltc_w=1.0, cost_c=0.5)
+            for s in splits:
+                ltc_logits[(fast, exp, s)] = ls[s]
+            if verbose:
+                acc = (ls["test"].argmax(-1) == te.y).mean()
+                print(f"  [seed {seed}] LtC {fast}|{exp}: "
+                      f"test acc {acc*100:.2f}%", flush=True)
+
+        # auxiliary heads (ConfNet / IDK), post-hoc on val features
+        heads = {}
+        for fast in FAST_MODELS:
+            for kind in ("confnet", "idk"):
+                key = jax.random.PRNGKey(seed * 7 + hash(fast + kind) % 97)
+                head = calibration.fit_conf_head(
+                    key, jnp.asarray(feats[(fast, "train")]),
+                    jnp.asarray(logits[(fast, "train")]),
+                    jnp.asarray(tr.y), kind=kind, steps=400)
+                heads[(fast, kind)] = jax.tree.map(np.asarray, head)
+
+        return World(seed=seed, data={"train": tr, "val": va, "test": te},
+                     zoo_cfgs=zoo_cfgs, logits=logits, feats=feats,
+                     ltc_logits=ltc_logits, heads=heads)
+
+    return _cache(f"world_s{seed}_n{NUM_SAMPLES}_e{EPOCHS}.pkl", make)
+
+
+def conf_for(world: World, method: str, fast: str, exp: str, split: str):
+    """Confidence scores of `fast` under a method (paper §5 baselines)."""
+    y = world.data[split].y
+    if method == "ltc":
+        fl = world.ltc_logits[(fast, exp, split)]
+        return np.asarray(conf_lib.max_prob(jnp.asarray(fl))), fl
+    fl = world.logits[(fast, split)]
+    if method == "baseline":
+        return np.asarray(conf_lib.max_prob(jnp.asarray(fl))), fl
+    if method == "temp_scaling":
+        t = calibration.fit_temperature(
+            jnp.asarray(world.logits[(fast, "val")]),
+            jnp.asarray(world.data["val"].y), steps=200)
+        return np.asarray(conf_lib.max_prob(jnp.asarray(fl), t)), fl
+    if method in ("confnet", "idk"):
+        head = calibration.ConfHead(*[jnp.asarray(a) for a in
+                                      world.heads[(fast, method)]])
+        c = calibration.conf_head_apply(head,
+                                        jnp.asarray(world.feats[(fast, split)]))
+        return np.asarray(c), fl
+    raise ValueError(method)
+
+
+def cascade_eval(world: World, method: str, fast: str, exp: str):
+    """Paper protocol: δ from val (best cascade accuracy), report test
+    Acc^casc (Eq 2) and MACs^casc (Eq 7)."""
+    costs = [world.zoo_cfgs[fast].macs, world.zoo_cfgs[exp].macs]
+
+    def cc(split):
+        conf, fl = conf_for(world, method, fast, exp, split)
+        y = jnp.asarray(world.data[split].y)
+        fc = np.asarray(losses.correct(jnp.asarray(fl), y))
+        ec = np.asarray(losses.correct(
+            jnp.asarray(world.logits[(exp, split)]), y))
+        return conf, fc, ec
+
+    conf_v, fc_v, ec_v = cc("val")
+    delta, _, _ = thresholds.best_accuracy_delta(conf_v, fc_v, ec_v, costs)
+    conf_t, fc_t, ec_t = cc("test")
+    acc, cost, n_exp = cascade.two_element_metrics(
+        jnp.asarray(conf_t), jnp.asarray(fc_t), jnp.asarray(ec_t),
+        costs[0], costs[1], delta)
+    return {"acc": float(acc), "macs": float(cost), "delta": float(delta),
+            "n_exp": float(n_exp), "n": len(fc_t)}
+
+
+def mean_stderr(vals):
+    a = np.asarray(vals, np.float64)
+    return float(a.mean()), float(a.std(ddof=1) / np.sqrt(len(a))) if len(a) > 1 else 0.0

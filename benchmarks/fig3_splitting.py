@@ -1,0 +1,90 @@
+"""Paper Figure 3: model splitting (early-exit backbone, the MSDNet
+stand-in) with and without LtC (Eq 6), over several architecture
+parameterizations.  Reports the (MACs, Acc) trade-off point at the
+best-val δ for each exit-gate configuration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import cascade, losses
+from repro.core import confidence as conf_lib
+from repro.models import classifier as clf
+
+# (name, widths, exits) — analogues of the four MSDNet settings in Fig 3
+SETTINGS = [
+    ("nB2_s2_b4", (64,) * 4, (1,)),
+    ("nB5_s1_b4", (64,) * 8, (1, 2, 3, 5)),
+    ("nB7_s1_b1", (96,) * 7, (0, 1, 2, 3, 4, 5)),
+    ("nB10_s2_b4", (96,) * 10, (1, 3, 5, 7)),
+]
+
+
+def eval_setting(name, widths, exits, seed, ltc_w):
+    return common._cache(
+        f"fig3_{name}_s{seed}_w{ltc_w}_n{common.NUM_SAMPLES}.pkl",
+        lambda: _eval_setting(name, widths, exits, seed, ltc_w))
+
+
+def _eval_setting(name, widths, exits, seed, ltc_w):
+    ds = common.teacher_task(num_samples=common.NUM_SAMPLES, seed=seed)
+    tr, va, te = ds.split((0.9, 0.05, 0.05), seed=seed)
+    nc = int(tr.y.max()) + 1
+    cfg = clf.EarlyExitConfig(name, widths, exits, nc, tr.x.shape[1])
+    params = clf.train_early_exit(cfg, jnp.asarray(tr.x), jnp.asarray(tr.y),
+                                  key=jax.random.PRNGKey(seed), ltc_w=ltc_w,
+                                  epochs=common.EPOCHS, lr=0.03)
+
+    def stats(split):
+        chain = clf.early_exit_apply(params, cfg, jnp.asarray(split.x))
+        y = jnp.asarray(split.y)
+        confs = np.stack([np.asarray(conf_lib.max_prob(c))
+                          for c in chain[:-1]])
+        corr = np.stack([np.asarray(losses.correct(c, y)) for c in chain])
+        return confs, corr
+
+    costs = np.array([cfg.macs_upto(i) for i in range(len(exits) + 1)],
+                     np.float32)
+    # marginal cost per member (shared backbone: later exits only pay the
+    # increment, per the paper's model-splitting cost model)
+    marg = np.concatenate([[costs[0]], np.diff(costs)])
+
+    confs_v, corr_v = stats(va)
+    # single shared δ swept on val (the paper's per-figure operating curve)
+    grid = np.linspace(0, 1, 41)
+    deltas = np.repeat(grid[:, None], len(exits), 1)
+    out_v = cascade.evaluate_cascade(confs_v, corr_v, marg, deltas)
+    i = int(np.argmax(np.asarray(out_v["acc"])
+                      - 1e-9 * np.asarray(out_v["cost"])))
+    confs_t, corr_t = stats(te)
+    out_t = cascade.evaluate_cascade(confs_t, corr_t, marg,
+                                     deltas[i:i + 1])
+    return float(out_t["acc"][0]) * 100, float(out_t["cost"][0])
+
+
+def run(seeds=None):
+    seeds = list(seeds or range(min(common.SEEDS, 2)))
+    rows = []
+    for name, widths, exits in SETTINGS:
+        for variant, w in (("msdnet", 0.0), ("msdnet_ltc", 1.0)):
+            accs, macs = [], []
+            for seed in seeds:
+                a, c = eval_setting(name, widths, exits, seed, w)
+                accs.append(a)
+                macs.append(c)
+            rows.append({"setting": name, "variant": variant,
+                         "acc": common.mean_stderr(accs),
+                         "macs": common.mean_stderr(macs)})
+    return rows
+
+
+def main():
+    print("fig3,setting,variant,acc_pct,acc_se,macs,macs_se")
+    for r in run():
+        print(f"splitting,{r['setting']},{r['variant']},"
+              f"{r['acc'][0]:.2f},{r['acc'][1]:.2f},"
+              f"{r['macs'][0]:.0f},{r['macs'][1]:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Figure 4: sensitivity of Acc^casc / MACs^casc to the LtC
+parameters C and w (mobilenetv2 -> {resnet18, resnet152}).
+
+Expected reproduction of the paper's findings: C anticorrelates with
+MACs^casc (bigger claimed cost => fewer escalations) and is uncorrelated
+with Acc^casc; w shows no monotone trend."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import cascade, losses, thresholds
+from repro.core import confidence as conf_lib
+from repro.models import classifier as clf
+
+C_GRID = (0.1, 0.3, 0.5, 0.7, 0.9)
+W_GRID = (0.25, 0.5, 1.0, 2.0, 4.0)
+
+
+def eval_point(exp_name, c, w_coef, seed=0):
+    return common._cache(
+        f"fig4_{exp_name}_c{c}_w{w_coef}_s{seed}.pkl",
+        lambda: _eval_point(exp_name, c, w_coef, seed))
+
+
+def _eval_point(exp_name, c, w_coef, seed=0):
+    wld = common.build_world(seed)
+    tr = wld.data["train"]
+    fast_cfg = wld.zoo_cfgs["mobilenetv2"]
+    exp_tr = jnp.asarray(wld.logits[(exp_name, "train")])
+    p = clf.train_classifier(fast_cfg, jnp.asarray(tr.x), jnp.asarray(tr.y),
+                             key=jax.random.PRNGKey(seed * 31 + 7),
+                             epochs=common.EPOCHS, lr=0.03, batch_size=512,
+                             exp_logits=exp_tr, ltc_w=w_coef, cost_c=c)
+
+    costs = [fast_cfg.macs, wld.zoo_cfgs[exp_name].macs]
+
+    def stats(split_name):
+        split = wld.data[split_name]
+        fl, _ = clf.predict(p, jnp.asarray(split.x))
+        y = jnp.asarray(split.y)
+        conf = np.asarray(conf_lib.max_prob(fl))
+        fc = np.asarray(losses.correct(fl, y))
+        ec = np.asarray(losses.correct(
+            jnp.asarray(wld.logits[(exp_name, split_name)]), y))
+        return conf, fc, ec
+
+    cv, fv, ev = stats("val")
+    delta, _, _ = thresholds.best_accuracy_delta(cv, fv, ev, costs)
+    ct, ft, et = stats("test")
+    acc, macs, _ = cascade.two_element_metrics(
+        jnp.asarray(ct), jnp.asarray(ft), jnp.asarray(et),
+        costs[0], costs[1], delta)
+    return float(acc) * 100, float(macs)
+
+
+def run(seed=0):
+    rows = []
+    for exp_name in common.EXP_MODELS:
+        for c in C_GRID:
+            a, m = eval_point(exp_name, c, 1.0, seed)
+            rows.append({"exp": exp_name, "param": "C", "value": c,
+                         "acc": a, "macs": m})
+        for w in W_GRID:
+            a, m = eval_point(exp_name, 0.5, w, seed)
+            rows.append({"exp": exp_name, "param": "w", "value": w,
+                         "acc": a, "macs": m})
+    return rows
+
+
+def main():
+    rows = run()
+    print("fig4,exp,param,value,acc_pct,macs")
+    for r in rows:
+        print(f"params,{r['exp']},{r['param']},{r['value']},"
+              f"{r['acc']:.2f},{r['macs']:.0f}")
+    # correlation summary (the paper's claim)
+    for exp_name in common.EXP_MODELS:
+        cs = [(r["value"], r["macs"]) for r in rows
+              if r["exp"] == exp_name and r["param"] == "C"]
+        corr = np.corrcoef([c for c, _ in cs], [m for _, m in cs])[0, 1]
+        print(f"# corr(C, MACs) {exp_name}: {corr:.3f} (paper: negative)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+prints the per-(arch x shape x mesh) roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, and memory footprint."""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dryrun_dir=DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("# no dry-run artifacts found; run "
+              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return
+    print("roofline,arch,shape,mesh,chips,t_compute_ms,t_memory_ms,"
+          "t_collective_ms,bottleneck,useful_flops_ratio,temp_gb,note")
+    for r in recs:
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},{r['chips']},"
+              f"{r['t_compute']*1e3:.2f},{r['t_memory']*1e3:.2f},"
+              f"{r['t_collective']*1e3:.2f},{r['bottleneck']},"
+              f"{r['useful_flops_ratio']:.3f},"
+              f"{(r.get('peak_memory_gb') or 0):.1f},"
+              f"\"{r.get('note','')}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 1: accuracy and MACs of each zoo member."""
+import numpy as np
+
+from benchmarks import common
+
+
+def run(seeds=None):
+    seeds = seeds or range(common.SEEDS)
+    rows = {}
+    for seed in seeds:
+        w = common.build_world(seed)
+        te = w.data["test"]
+        for name, cfg in w.zoo_cfgs.items():
+            acc = (w.logits[(name, "test")].argmax(-1) == te.y).mean()
+            rows.setdefault(name, {"macs": cfg.macs, "accs": []})
+            rows[name]["accs"].append(acc * 100)
+    out = []
+    for name, r in rows.items():
+        m, se = common.mean_stderr(r["accs"])
+        out.append({"model": name, "acc_mean": m, "acc_stderr": se,
+                    "macs": r["macs"]})
+    return out
+
+
+def main():
+    print("table1_model,acc_pct,stderr,macs")
+    for r in run():
+        print(f"{r['model']},{r['acc_mean']:.2f},{r['acc_stderr']:.2f},"
+              f"{r['macs']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Tables 2+3: cascade accuracy (Eq 2) and MACs (Eq 7) for every
+(fast x expensive) pair under the five methods."""
+import numpy as np
+
+from benchmarks import common
+
+
+def run(seeds=None):
+    seeds = list(seeds or range(common.SEEDS))
+    rows = []
+    for fast in common.FAST_MODELS:
+        for exp in common.EXP_MODELS:
+            per_method = {}
+            for method in common.METHODS:
+                accs, macs = [], []
+                for seed in seeds:
+                    w = common.build_world(seed)
+                    r = common.cascade_eval(w, method, fast, exp)
+                    accs.append(r["acc"] * 100)
+                    macs.append(r["macs"])
+                per_method[method] = {
+                    "acc": common.mean_stderr(accs),
+                    "macs": common.mean_stderr(macs),
+                }
+            rows.append({"fast": fast, "exp": exp, "methods": per_method})
+    return rows
+
+
+def main():
+    rows = run()
+    print("table23,fast,exp,method,acc_pct,acc_se,macs,macs_se")
+    for r in rows:
+        for m, v in r["methods"].items():
+            print(f"cascade,{r['fast']},{r['exp']},{m},"
+                  f"{v['acc'][0]:.2f},{v['acc'][1]:.2f},"
+                  f"{v['macs'][0]:.0f},{v['macs'][1]:.0f}")
+    # paper claim check: LtC achieves lowest MACs in most pairs
+    wins = 0
+    for r in rows:
+        best = min(r["methods"], key=lambda m: r["methods"][m]["macs"][0])
+        wins += best == "ltc"
+    print(f"# LtC lowest-MACs pairs: {wins}/{len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Paper Table 4: three-element cascade (mobilenetv2 -> resnet18 ->
+resnet152), Baseline vs LtC (Eq 5 training order)."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import cascade, losses, thresholds
+from repro.core import confidence as conf_lib
+
+
+def _three_el(w, method):
+    """members: mobilenetv2, resnet18, resnet152."""
+    fast, mid, exp = "mobilenetv2", "resnet18", "resnet152"
+    costs = np.array([w.zoo_cfgs[m].macs for m in (fast, mid, exp)],
+                     np.float32)
+
+    def logits_of(member, prev_exp, split):
+        if method == "ltc" and member in (fast, mid):
+            return w.ltc_logits[(member, prev_exp, split)] if \
+                (member, prev_exp, split) in w.ltc_logits else \
+                w.logits[(member, split)]
+        return w.logits[(member, split)]
+
+    def stats(split):
+        y = jnp.asarray(w.data[split].y)
+        lf = logits_of(fast, mid if method == "ltc" else None, split)
+        lm = logits_of(mid, exp if method == "ltc" else None, split)
+        le = w.logits[(exp, split)]
+        confs = np.stack([
+            np.asarray(conf_lib.max_prob(jnp.asarray(lf))),
+            np.asarray(conf_lib.max_prob(jnp.asarray(lm)))])
+        corrects = np.stack([
+            np.asarray(losses.correct(jnp.asarray(l), y))
+            for l in (lf, lm, le)])
+        return confs, corrects
+
+    # δ search on val: grid over both gates (coarse, as the paper sweeps)
+    confs_v, corr_v = stats("val")
+    grid = np.linspace(0, 1, 21)
+    best = None
+    for d1 in grid:
+        out = cascade.evaluate_cascade(
+            confs_v, corr_v, costs,
+            np.stack([np.full_like(grid, d1), grid], 1))
+        accs = np.asarray(out["acc"])
+        cost = np.asarray(out["cost"])
+        for i in range(len(grid)):
+            key = (round(float(accs[i]), 6), -float(cost[i]))
+            if best is None or key > best[0]:
+                best = (key, (d1, grid[i]))
+    deltas = np.array([best[1]])
+
+    confs_t, corr_t = stats("test")
+    out = cascade.evaluate_cascade(confs_t, corr_t, costs, deltas)
+    return float(out["acc"][0]) * 100, float(out["cost"][0])
+
+
+def run(seeds=None):
+    seeds = list(seeds or range(common.SEEDS))
+    res = {}
+    for method in ("baseline", "ltc"):
+        accs, macs = [], []
+        for seed in seeds:
+            w = common.build_world(seed)
+            a, c = _three_el(w, method)
+            accs.append(a)
+            macs.append(c)
+        res[method] = {"acc": common.mean_stderr(accs),
+                       "macs": common.mean_stderr(macs)}
+    return res
+
+
+def main():
+    res = run()
+    print("table4,method,acc_pct,acc_se,macs,macs_se")
+    for m, v in res.items():
+        print(f"three_element,{m},{v['acc'][0]:.2f},{v['acc'][1]:.2f},"
+              f"{v['macs'][0]:.0f},{v['macs'][1]:.0f}")
+
+
+if __name__ == "__main__":
+    main()

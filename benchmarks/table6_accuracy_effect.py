@@ -1,0 +1,34 @@
+"""Paper Table 6: does adding L_casc hurt the fast model's own accuracy?
+Reports acc(LtC-trained fast) - acc(CE-trained fast) per (fast, exp)."""
+import numpy as np
+
+from benchmarks import common
+
+
+def run(seeds=None):
+    seeds = list(seeds or range(common.SEEDS))
+    rows = []
+    for fast in common.FAST_MODELS:
+        for exp in common.EXP_MODELS:
+            diffs = []
+            for seed in seeds:
+                w = common.build_world(seed)
+                te = w.data["test"]
+                base = (w.logits[(fast, "test")].argmax(-1) == te.y).mean()
+                ltc = (w.ltc_logits[(fast, exp, "test")].argmax(-1)
+                       == te.y).mean()
+                diffs.append((ltc - base) * 100)
+            m, se = common.mean_stderr(diffs)
+            rows.append({"fast": fast, "exp": exp, "diff": m, "se": se})
+    return rows
+
+
+def main():
+    print("table6,fast,exp,acc_diff_pct,se")
+    for r in run():
+        print(f"acc_effect,{r['fast']},{r['exp']},{r['diff']:+.2f},"
+              f"{r['se']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Quickstart: the paper's loss + cascade metrics in ~60 lines.
+
+Trains a fast and an expensive classifier on the synthetic task, retrains
+the fast one with Learning to Cascade (Eq 4), and compares the
+accuracy/MACs trade-off (Eqs 2 and 7) of both cascades.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cascade, losses, thresholds
+from repro.core import confidence as conf_lib
+from repro.data.synthetic import teacher_task
+from repro.models import classifier as clf
+
+
+def main():
+    print("1) data (synthetic stand-in for CIFAR-100, see DESIGN.md §6)")
+    ds = teacher_task(num_samples=60000, seed=0)
+    tr, va, te = ds.split((0.8, 0.1, 0.1))
+    nc = int(tr.y.max()) + 1
+    zoo = clf.zoo(in_dim=tr.x.shape[1], num_classes=nc)
+    fast_cfg, exp_cfg = zoo["mobilenetv2"], zoo["resnet18"]
+
+    print("2) train the expensive model (CE only)")
+    key = jax.random.PRNGKey(0)
+    exp_p = clf.train_classifier(exp_cfg, jnp.asarray(tr.x),
+                                 jnp.asarray(tr.y), key=key, epochs=6,
+                                 lr=0.03, batch_size=512)
+    exp_train_logits, _ = clf.predict(exp_p, jnp.asarray(tr.x))
+
+    print("3) train the fast model twice: CE (Baseline) and LtC (Eq 4)")
+    fast_base = clf.train_classifier(fast_cfg, jnp.asarray(tr.x),
+                                     jnp.asarray(tr.y), key=key, epochs=6,
+                                     lr=0.03, batch_size=512)
+    fast_ltc = clf.train_classifier(fast_cfg, jnp.asarray(tr.x),
+                                    jnp.asarray(tr.y), key=key, epochs=6,
+                                    lr=0.03, batch_size=512,
+                                    exp_logits=exp_train_logits, ltc_w=1.0,
+                                    cost_c=0.5)
+
+    print("4) sweep δ on val, report test Acc^casc / MACs^casc (Eqs 2, 7)")
+    costs = [fast_cfg.macs, exp_cfg.macs]
+    for name, fp in (("baseline", fast_base), ("ltc", fast_ltc)):
+        def stats(split):
+            fl, _ = clf.predict(fp, jnp.asarray(split.x))
+            y = jnp.asarray(split.y)
+            return (np.asarray(conf_lib.max_prob(fl)),
+                    np.asarray(losses.correct(fl, y)),
+                    np.asarray(losses.correct(
+                        clf.predict(exp_p, jnp.asarray(split.x))[0], y)))
+
+        cv, fv, ev = stats(va)
+        delta, _, _ = thresholds.best_accuracy_delta(cv, fv, ev, costs)
+        ct, ft, et = stats(te)
+        acc, macs, n_exp = cascade.two_element_metrics(
+            jnp.asarray(ct), jnp.asarray(ft), jnp.asarray(et),
+            costs[0], costs[1], delta)
+        print(f"   {name:8s}: δ={delta:.2f}  Acc^casc={float(acc)*100:.2f}%"
+              f"  MACs^casc={float(macs):.0f}"
+              f"  (exp alone: {et.mean()*100:.2f}% @ {costs[1]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry.  Importing this package registers every assigned
+architecture (plus the paper-faithful cascade classifier zoo in
+``repro.models.classifier``)."""
+from repro.configs.base import (Attn, Dense, Layer, Mamba, MoE, ModelConfig,
+                                RWKV6, get_config, list_configs,
+                                long_context_variant, register, smoke_variant)
+
+# Assigned architectures (import order = registry order).
+from repro.configs import (  # noqa: F401
+    jamba_v0_1_52b,
+    musicgen_large,
+    phi4_mini_3_8b,
+    starcoder2_7b,
+    kimi_k2_1t_a32b,
+    moonshot_v1_16b_a3b,
+    qwen2_vl_72b,
+    rwkv6_3b,
+    granite_moe_3b_a800m,
+    gemma3_1b,
+)
+
+ASSIGNED = (
+    "jamba-v0.1-52b",
+    "musicgen-large",
+    "phi4-mini-3.8b",
+    "starcoder2-7b",
+    "kimi-k2-1t-a32b",
+    "moonshot-v1-16b-a3b",
+    "qwen2-vl-72b",
+    "rwkv6-3b",
+    "granite-moe-3b-a800m",
+    "gemma3-1b",
+)
+
+__all__ = [
+    "Attn", "Dense", "Layer", "Mamba", "MoE", "ModelConfig", "RWKV6",
+    "get_config", "list_configs", "long_context_variant", "register",
+    "smoke_variant", "ASSIGNED",
+]

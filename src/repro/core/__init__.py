@@ -1,0 +1,23 @@
+"""Learning to Cascade (Enomoto & Eda, AAAI 2021) — core library.
+
+The paper's contribution as composable pieces:
+
+  * losses       — Eq 3 (L_casc), Eq 4 (LtC), Eq 5/6 (M-element chains)
+  * cascade      — Eq 1/2/7 metrics + offline/online cascade executors
+  * confidence   — conf scores (max-prob is the paper's choice)
+  * calibration  — the comparison baselines: temperature scaling, ConfNet,
+                   IDK heads; ECE
+  * thresholds   — δ search policies on the validation split
+"""
+from repro.core import calibration, cascade, confidence, losses, thresholds  # noqa: F401
+from repro.core.cascade import CascadeExecutor, Member, evaluate_cascade, two_element_metrics
+from repro.core.losses import (cascade_loss, cross_entropy, ltc_chain_loss,
+                               ltc_loss, moe_aux_loss)
+from repro.core.thresholds import best_accuracy_delta, min_cost_delta
+
+__all__ = [
+    "calibration", "cascade", "confidence", "losses", "thresholds",
+    "CascadeExecutor", "Member", "evaluate_cascade", "two_element_metrics",
+    "cascade_loss", "cross_entropy", "ltc_chain_loss", "ltc_loss",
+    "moe_aux_loss", "best_accuracy_delta", "min_cost_delta",
+]

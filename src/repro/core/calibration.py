@@ -1,0 +1,123 @@
+"""Confidence-calibration baselines the paper compares against (§5).
+
+  * Baseline           — raw max softmax probability (no calibration).
+  * TemperatureScaling — Guo et al. 2017: one scalar T fit by NLL on the
+    validation split.
+  * ConfNet / IDK      — auxiliary confidence heads (one hidden layer on
+    the fast model's features).  ConfNet is trained to predict the fast
+    model's correctness (BCE); IDK optimizes the oracle-expensive cascade
+    objective.  Their losses live in repro.core.losses; here is the head
+    itself + the post-hoc fitting loops.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+
+
+# --------------------------------------------------------------------------
+# Temperature scaling
+# --------------------------------------------------------------------------
+
+
+def fit_temperature(logits, labels, *, steps: int = 200, lr: float = 0.01):
+    """Fit T minimizing NLL(logits/T, labels) by gradient descent on log T."""
+
+    def nll(log_t):
+        return losses.cross_entropy(logits / jnp.exp(log_t), labels)
+
+    g = jax.jit(jax.value_and_grad(nll))
+    log_t = jnp.zeros(())
+    for _ in range(steps):
+        _, grad = g(log_t)
+        log_t = log_t - lr * grad
+    return float(jnp.exp(log_t))
+
+
+# --------------------------------------------------------------------------
+# Auxiliary confidence head (ConfNet / IDK)
+# --------------------------------------------------------------------------
+
+
+class ConfHead(NamedTuple):
+    w1: jnp.ndarray
+    b1: jnp.ndarray
+    w2: jnp.ndarray
+    b2: jnp.ndarray
+
+
+def init_conf_head(key, feat_dim: int, hidden: int = 64) -> ConfHead:
+    k1, k2 = jax.random.split(key)
+    return ConfHead(
+        w1=jax.random.normal(k1, (feat_dim, hidden)) / jnp.sqrt(feat_dim),
+        b1=jnp.zeros((hidden,)),
+        w2=jax.random.normal(k2, (hidden, 1)) / jnp.sqrt(hidden),
+        b2=jnp.zeros((1,)),
+    )
+
+
+def conf_head_apply(head: ConfHead, feats) -> jnp.ndarray:
+    h = jax.nn.relu(feats @ head.w1 + head.b1)
+    return jax.nn.sigmoid((h @ head.w2 + head.b2)[..., 0])
+
+
+def fit_conf_head(key, feats, fast_logits, labels, *, kind: str = "confnet",
+                  cost_c: float = 0.5, steps: int = 500, lr: float = 1e-2,
+                  hidden: int = 64):
+    """Post-hoc training of the auxiliary head on held-out features.
+
+    kind: 'confnet' (BCE to self-correctness) | 'idk' (oracle cascade
+    objective)."""
+    head = init_conf_head(key, feats.shape[-1], hidden)
+    # correctness of the (frozen) fast model is a constant of the fit
+    target = losses.correct(fast_logits, labels)
+    fast_wrong = 1.0 - target
+
+    def loss_fn(h, feats, target, fast_wrong):
+        conf = conf_head_apply(h, feats)
+        p = jnp.clip(conf, 1e-6, 1 - 1e-6)
+        if kind == "confnet":
+            return -jnp.mean(target * jnp.log(p)
+                             + (1 - target) * jnp.log(1 - p))
+        return jnp.mean(conf * fast_wrong + (1.0 - conf) * cost_c)
+
+    # data enters as jit args (not closure constants: XLA would
+    # constant-fold the whole-split argmax on every compile)
+    g = jax.jit(jax.value_and_grad(loss_fn))
+    # plain Adam
+    m = jax.tree.map(jnp.zeros_like, head)
+    v = jax.tree.map(jnp.zeros_like, head)
+    for t in range(1, steps + 1):
+        _, grad = g(head, feats, target, fast_wrong)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, grad)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, grad)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        head = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8),
+                            head, mh, vh)
+    return head
+
+
+# --------------------------------------------------------------------------
+# Metrics
+# --------------------------------------------------------------------------
+
+
+def ece(confs, corrects, bins: int = 15) -> float:
+    """Expected Calibration Error (Guo et al. 2017)."""
+    confs = jnp.asarray(confs)
+    corrects = jnp.asarray(corrects, jnp.float32)
+    edges = jnp.linspace(0.0, 1.0, bins + 1)
+    total = confs.shape[0]
+    err = 0.0
+    for i in range(bins):
+        in_bin = (confs > edges[i]) & (confs <= edges[i + 1])
+        n = jnp.sum(in_bin)
+        avg_conf = jnp.sum(jnp.where(in_bin, confs, 0)) / jnp.maximum(n, 1)
+        avg_acc = jnp.sum(jnp.where(in_bin, corrects, 0)) / jnp.maximum(n, 1)
+        err += jnp.where(n > 0, n / total * jnp.abs(avg_conf - avg_acc), 0.0)
+    return float(err)

@@ -1,0 +1,132 @@
+"""Cascade inference executor and metrics (paper §3, Eqs 1, 2, 7).
+
+Two ways to use it:
+
+  * Offline / evaluation: you already have every member's predictions on a
+    dataset — :func:`evaluate_cascade` computes Acc^casc, N^exp and
+    MACs^casc for a δ (or a vector of δs) without re-running the models.
+    This is exactly how the paper evaluates (predictions are collected
+    once; δ is swept on the validation split).
+  * Online serving: :class:`CascadeExecutor` routes a live batch through
+    member predict functions, only invoking member m+1 on the sub-batch
+    whose confidence fell below δ_m (computed densely with masking under
+    jit — shapes stay static, cost accounting reflects true escalations).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import confidence as C
+
+
+@dataclass(frozen=True)
+class Member:
+    """One cascade element.  cost = MACs (or FLOPs) per sample."""
+    name: str
+    cost: float
+    predict: Optional[Callable] = None   # batch -> logits (online mode)
+
+
+# --------------------------------------------------------------------------
+# Offline evaluation (paper Eqs 1, 2, 7) — vectorized over thresholds
+# --------------------------------------------------------------------------
+
+
+def evaluate_cascade(confs, corrects, costs, deltas):
+    """Generic M-element cascade evaluation.
+
+    confs:    [M-1, N] confidence of members 0..M-2 (the last member has no
+              gate).
+    corrects: [M, N]  1/0 correctness of each member's prediction.
+    costs:    [M]     per-sample cost of each member.
+    deltas:   [M-1] or [D, M-1] thresholds (broadcasts over a sweep).
+
+    Returns dict with acc [D], cost [D], frac_used [D, M] (fraction of
+    samples that *ran* each member), n_exp [D, M-1] (Eq 1 per gate).
+    """
+    confs = jnp.asarray(confs, jnp.float32)
+    corrects = jnp.asarray(corrects, jnp.float32)
+    costs = jnp.asarray(costs, jnp.float32)
+    deltas = jnp.atleast_2d(jnp.asarray(deltas, jnp.float32))  # [D, M-1]
+    M, N = corrects.shape
+
+    def one(delta):
+        active = jnp.ones((N,), jnp.float32)        # sample still cascading
+        acc = jnp.zeros((N,), jnp.float32)
+        total_cost = 0.0
+        frac_used = []
+        n_exp = []
+        for m in range(M):
+            frac_used.append(jnp.mean(active))
+            total_cost = total_cost + jnp.mean(active) * costs[m]
+            if m < M - 1:
+                stop = active * (confs[m] > delta[m]).astype(jnp.float32)
+                escalate = active - stop
+                n_exp.append(jnp.sum(escalate))
+                acc = acc + stop * corrects[m]
+                active = escalate
+            else:
+                acc = acc + active * corrects[m]
+        return {"acc": jnp.mean(acc), "cost": total_cost,
+                "frac_used": jnp.stack(frac_used),
+                "n_exp": jnp.stack(n_exp) if n_exp else jnp.zeros((0,))}
+
+    out = jax.vmap(one)(deltas)
+    return out
+
+
+def two_element_metrics(conf, fast_correct, exp_correct, macs_fast,
+                        macs_exp, delta):
+    """Paper's two-element special case.  Returns (Acc^casc, MACs^casc, N^exp)
+    per Eqs 2, 7, 1."""
+    out = evaluate_cascade(conf[None, :],
+                           jnp.stack([fast_correct, exp_correct]),
+                           jnp.array([macs_fast, macs_exp]),
+                           jnp.reshape(delta, (-1, 1)))
+    d = jnp.ndim(delta)
+    sq = (lambda x: x[0]) if d == 0 else (lambda x: x)
+    return sq(out["acc"]), sq(out["cost"]), sq(out["n_exp"][:, 0])
+
+
+# --------------------------------------------------------------------------
+# Online executor
+# --------------------------------------------------------------------------
+
+
+class CascadeExecutor:
+    """Run a live cascade over members with per-gate thresholds.
+
+    Every member's ``predict`` runs on the full (static-shape) batch but
+    only escalated rows are *accounted* (and, on a real deployment, only
+    those rows would be sent — the escalation mask is returned so a serving
+    layer can pack them; see repro.launch.serve for the packed version).
+    """
+
+    def __init__(self, members: Sequence[Member], deltas: Sequence[float],
+                 conf_kind: str = "max_prob"):
+        assert len(deltas) == len(members) - 1
+        self.members = tuple(members)
+        self.deltas = tuple(float(d) for d in deltas)
+        self.conf_kind = conf_kind
+
+    def __call__(self, batch):
+        """Returns (predictions [B], info dict)."""
+        logits0 = self.members[0].predict(batch)
+        preds = jnp.argmax(logits0, -1)
+        active = jnp.ones(preds.shape, jnp.float32)
+        cost = jnp.full(preds.shape, self.members[0].cost, jnp.float32)
+        escalations = []
+        for m, member in enumerate(self.members[1:]):
+            conf = C.score(logits0, self.conf_kind)
+            esc = active * (conf <= self.deltas[m]).astype(jnp.float32)
+            escalations.append(esc)
+            logits1 = member.predict(batch)
+            preds = jnp.where(esc > 0, jnp.argmax(logits1, -1), preds)
+            cost = cost + esc * member.cost
+            active = esc
+            logits0 = logits1
+        return preds, {"cost": cost, "escalated": escalations}

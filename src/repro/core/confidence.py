@@ -1,0 +1,67 @@
+"""Confidence scores.
+
+The paper uses the maximum softmax probability of the fast model as the
+confidence score ``conf`` (§3, §4).  We provide the standard alternatives
+as well; all are differentiable in the logits (the indicator terms of the
+LtC loss are the non-differentiable parts and are stop-gradiented in
+``repro.core.losses``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def max_prob(logits, temperature: float = 1.0):
+    """Maximum softmax probability — the paper's conf (Eq 3)."""
+    return jnp.max(jax.nn.softmax(logits / temperature, axis=-1), axis=-1)
+
+
+def entropy(logits, temperature: float = 1.0):
+    """Shannon entropy of the predictive distribution (nats)."""
+    logp = jax.nn.log_softmax(logits / temperature, axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def entropy_confidence(logits, temperature: float = 1.0):
+    """1 - H/log(K): entropy mapped to a [0,1] confidence."""
+    k = logits.shape[-1]
+    return 1.0 - entropy(logits, temperature) / jnp.log(k)
+
+
+def margin(logits, temperature: float = 1.0):
+    """Top-1 minus top-2 softmax probability."""
+    p = jax.nn.softmax(logits / temperature, axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return top2[..., 0] - top2[..., 1]
+
+
+SCORES = {
+    "max_prob": max_prob,
+    "entropy": entropy_confidence,
+    "margin": margin,
+}
+
+
+def score(logits, kind: str = "max_prob", temperature: float = 1.0):
+    return SCORES[kind](logits, temperature)
+
+
+def sequence_confidence(token_conf, mask=None, reduce: str = "mean"):
+    """Aggregate per-token confidences to a per-sequence score.
+
+    Used by the LLM cascade server: a sequence is escalated when its
+    aggregate confidence falls below δ.  reduce: 'mean' | 'min' | 'prod'.
+    """
+    if mask is None:
+        mask = jnp.ones_like(token_conf)
+    mask = mask.astype(token_conf.dtype)
+    if reduce == "mean":
+        return jnp.sum(token_conf * mask, -1) / jnp.maximum(jnp.sum(mask, -1), 1)
+    if reduce == "min":
+        big = jnp.where(mask > 0, token_conf, jnp.inf)
+        return jnp.min(big, axis=-1)
+    if reduce == "prod":
+        logc = jnp.where(mask > 0, jnp.log(jnp.clip(token_conf, 1e-9, 1.0)), 0.0)
+        return jnp.exp(jnp.sum(logc, axis=-1))
+    raise ValueError(reduce)

@@ -1,0 +1,50 @@
+"""δ selection on the validation split (paper §5: 'We used a set of
+validation images to search for the δ with the highest cascade accuracy').
+
+Two policies are provided:
+
+  * :func:`best_accuracy_delta` — the paper's: δ* = argmax Acc^casc(δ)
+    (ties broken toward lower cost).
+  * :func:`min_cost_delta` — the §3 optimization problem: minimize cost
+    subject to Acc^casc ≥ (1-ε)·Acc_target.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cascade import evaluate_cascade
+
+
+def _sweep(conf, fast_correct, exp_correct, costs, num: int = 201):
+    deltas = jnp.linspace(0.0, 1.0, num)
+    out = evaluate_cascade(conf[None, :],
+                           jnp.stack([fast_correct, exp_correct]),
+                           jnp.asarray(costs, jnp.float32),
+                           deltas[:, None])
+    return deltas, out
+
+
+def best_accuracy_delta(conf, fast_correct, exp_correct, costs, num=201):
+    """Paper policy.  Returns (delta, acc, cost)."""
+    deltas, out = _sweep(conf, fast_correct, exp_correct, costs, num)
+    acc, cost = out["acc"], out["cost"]
+    # lexicographic: max acc, then min cost
+    score = acc - 1e-9 * cost / jnp.maximum(jnp.max(cost), 1e-9)
+    i = int(jnp.argmax(score))
+    return float(deltas[i]), float(acc[i]), float(cost[i])
+
+
+def min_cost_delta(conf, fast_correct, exp_correct, costs, acc_target,
+                   eps: float = 0.0, num=201):
+    """§3 objective: min N^exp s.t. Acc^casc >= (1-eps)·acc_target.
+    Falls back to best-accuracy δ if the constraint is infeasible."""
+    deltas, out = _sweep(conf, fast_correct, exp_correct, costs, num)
+    acc, cost = out["acc"], out["cost"]
+    ok = acc >= (1.0 - eps) * acc_target
+    feasible = bool(jnp.any(ok))
+    if not feasible:
+        i = int(jnp.argmax(acc))
+    else:
+        big = jnp.where(ok, cost, jnp.inf)
+        i = int(jnp.argmin(big))
+    return float(deltas[i]), float(acc[i]), float(cost[i]), feasible

@@ -1,0 +1,5 @@
+from repro.data.pipeline import Batches, batch_pspec, shard_batch
+from repro.data.synthetic import Dataset, bigram_lm, gaussian_mixture
+
+__all__ = ["Batches", "batch_pspec", "shard_batch", "Dataset", "bigram_lm",
+           "gaussian_mixture"]

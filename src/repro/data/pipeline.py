@@ -1,0 +1,47 @@
+"""Batching + device placement.
+
+``Batches`` is a light epoch-shuffling iterator.  ``shard_batch`` places a
+host batch onto a mesh with the canonical batch sharding (('pod','data')
+when present), which is all the input pipeline needs to feed pjit."""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+class Batches:
+    def __init__(self, arrays: dict, batch_size: int, *, shuffle: bool = True,
+                 seed: int = 0, drop_last: bool = True):
+        self.arrays = arrays
+        n = next(iter(arrays.values())).shape[0]
+        assert all(a.shape[0] == n for a in arrays.values())
+        self.n = n
+        self.batch_size = batch_size
+        self.shuffle = shuffle
+        self.drop_last = drop_last
+        self.rng = np.random.default_rng(seed)
+
+    def epoch(self) -> Iterator[dict]:
+        idx = self.rng.permutation(self.n) if self.shuffle else np.arange(self.n)
+        stop = self.n - self.batch_size + 1 if self.drop_last else self.n
+        for s in range(0, stop, self.batch_size):
+            sl = idx[s:s + self.batch_size]
+            yield {k: v[sl] for k, v in self.arrays.items()}
+
+    def __iter__(self):
+        while True:
+            yield from self.epoch()
+
+
+def batch_pspec(mesh, ndim: int) -> PartitionSpec:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return PartitionSpec(lead, *([None] * (ndim - 1)))
+
+
+def shard_batch(batch: dict, mesh) -> dict:
+    return {k: jax.device_put(v, NamedSharding(mesh, batch_pspec(mesh, v.ndim)))
+            for k, v in batch.items()}

@@ -1,0 +1,115 @@
+"""Flash attention (Pallas TPU kernel): causal / sliding-window / GQA.
+
+Online-softmax blocked attention.  Grid = (batch, q_heads, q_tiles,
+kv_tiles) with the KV sweep innermost: the accumulator (o, m, l) lives in
+VMEM scratch and persists across the kv tiles of one q tile (TPU grids run
+sequentially per core).  GQA is handled in the kv BlockSpec index map
+(query head h reads kv head h // group).
+
+Tiles default to (128, 128): MXU-aligned on both matmul dims.  head_dim is
+loaded whole (<= 256 for every assigned arch).  On real TPU a fully-masked
+kv tile would be skipped via grid pruning; interpret-mode validation
+computes it masked (correctness identical, noted for the roofline).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_TILE = 128
+KV_TILE = 128
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window, nk: int,
+                  q_len: int, kv_len: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # [qt, d]
+    k = k_ref[0, 0].astype(jnp.float32)                      # [kt, d]
+    v = v_ref[0, 0].astype(jnp.float32)                      # [kt, d]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * q_ref.shape[2] + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 0)
+    kpos = jk * k_ref.shape[2] + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    mask = (qpos < q_len) & (kpos < kv_len)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    interpret: bool = False):
+    """q [B,H,S,d]; k,v [B,KV,T,d] (H % KV == 0).  Returns [B,H,S,d]."""
+    B, H, S, d = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(d)
+
+    qpad = (-S) % Q_TILE
+    kpad = (-T) % KV_TILE
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0))) if qpad else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0))) if kpad else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0))) if kpad else v
+    Sp, Tp = S + qpad, T + kpad
+    nq, nk = Sp // Q_TILE, Tp // KV_TILE
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, nk=nk,
+        q_len=S, kv_len=T)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q_TILE, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, KV_TILE, d),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, KV_TILE, d),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q_TILE, d),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Q_TILE, d), jnp.float32),
+            pltpu.VMEM((Q_TILE,), jnp.float32),
+            pltpu.VMEM((Q_TILE,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :S]

@@ -1,0 +1,80 @@
+"""Mamba-1 selective scan (Pallas TPU kernel).
+
+Recurrence (diagonal A, per-channel dt, shared B_t/C_t across channels):
+
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t ⊙ x_t) B_tᵀ      h ∈ R^{d x n}
+    y_t = h_t · C_t
+
+Grid = (batch, d_inner_tiles, time_chunks), time innermost; the state tile
+h [d_tile, n] persists in VMEM scratch across chunks.  Channels are
+independent, so d_inner is tiled freely; n (= d_state, 16) rides in the
+lane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+T_CHUNK = 128
+D_TILE = 512
+
+
+def _mamba_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, h_ref, *,
+                  ct: int):
+    t0 = pl.program_id(2)
+
+    @pl.when(t0 == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)           # [ct, dt]
+    dt = dt_ref[0].astype(jnp.float32)         # [ct, dt]
+    bt = b_ref[0].astype(jnp.float32)          # [ct, n]
+    c = c_ref[0].astype(jnp.float32)           # [ct, n]
+    A = a_ref[...].astype(jnp.float32)         # [dt, n]
+
+    def step(t, h):
+        da = jnp.exp(dt[t][:, None] * A)                    # [dt, n]
+        h = da * h + (dt[t] * x[t])[:, None] * bt[t][None, :]
+        y = jnp.sum(h * c[t][None, :], axis=1)              # [dt]
+        o_ref[0, t, :] = y.astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, ct, step, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mamba_scan(x, dt, B_t, C_t, A, *, interpret: bool = False):
+    """x,dt [B,T,d]; B_t,C_t [B,T,n]; A [d,n].  Returns y [B,T,d] (f32)."""
+    Bsz, T, d = x.shape
+    n = A.shape[1]
+    tpad = (-T) % T_CHUNK
+    if tpad:
+        pad3 = lambda a: jnp.pad(a, ((0, 0), (0, tpad), (0, 0)))  # noqa: E731
+        x, dt, B_t, C_t = pad3(x), pad3(dt), pad3(B_t), pad3(C_t)
+    dpad = (-d) % D_TILE if d > D_TILE else 0
+    dtile = min(d, D_TILE)
+    if dpad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, dpad)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, dpad)))
+        A = jnp.pad(A, ((0, dpad), (0, 0)))
+    Tp, dp = T + tpad, d + dpad
+    nt, nd = Tp // T_CHUNK, dp // dtile
+
+    chan_spec = pl.BlockSpec((1, T_CHUNK, dtile), lambda b, i, t: (b, t, i))
+    state_spec = pl.BlockSpec((1, T_CHUNK, n), lambda b, i, t: (b, t, 0))
+    out = pl.pallas_call(
+        functools.partial(_mamba_kernel, ct=T_CHUNK),
+        grid=(Bsz, nd, nt),
+        in_specs=[chan_spec, chan_spec, state_spec, state_spec,
+                  pl.BlockSpec((dtile, n), lambda b, i, t: (i, 0))],
+        out_specs=chan_spec,
+        out_shape=jax.ShapeDtypeStruct((Bsz, Tp, dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dtile, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B_t, C_t, A)
+    return out[:, :T, :d]

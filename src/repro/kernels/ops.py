@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container (kernel bodies execute in Python) and compile to Mosaic on
+real TPU.  Model code opts in via config/env; the jnp paths in
+repro.models.blocks remain the default substrate.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.confidence_gate import confidence_gate as _gate
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.router_gate import router_gate as _router
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def confidence_gate(logits, *, interpret=None):
+    return _gate(logits, interpret=_default_interpret()
+                 if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, interpret=None):
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_default_interpret()
+                  if interpret is None else interpret)
+
+
+def rwkv6_scan(r, k, v, w, u, *, interpret=None):
+    return _rwkv(r, k, v, w, u, interpret=_default_interpret()
+                 if interpret is None else interpret)
+
+
+def mamba_scan(x, dt, B_t, C_t, A, *, interpret=None):
+    return _mamba(x, dt, B_t, C_t, A, interpret=_default_interpret()
+                  if interpret is None else interpret)
+
+
+def router_gate(logits, k, *, interpret=None):
+    return _router(logits, k, interpret=_default_interpret()
+                   if interpret is None else interpret)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+the per-kernel tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def confidence_gate_ref(logits):
+    x = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(x, axis=-1)
+    p = jax.nn.softmax(x, axis=-1)
+    return {
+        "conf": jnp.max(p, axis=-1),
+        "entropy": -jnp.sum(p * jax.nn.log_softmax(x, -1), axis=-1),
+        "argmax": jnp.argmax(x, axis=-1).astype(jnp.int32),
+        "logz": logz,
+    }
+
+
+def router_gate_ref(logits, k: int):
+    """softmax -> top-k -> renormalize (the jnp path in models.blocks)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(p, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, idx.astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        scale=None):
+    """q [B,H,S,d]; k,v [B,KV,T,d] (GQA: H % KV == 0)."""
+    B, H, S, d = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, S, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32)) * scale
+    T = k.shape[2]
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, d).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """All inputs [B,H,T,hd] except u [H,hd].  Returns y [B,H,T,hd].
+
+        y_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    B, H, T, hd = r.shape
+    r32, k32, v32, w32 = (a.astype(jnp.float32) for a in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u32[..., None] * kv)
+        return w_t[..., None] * S + kv, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (r32, k32, v32, w32))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)
+
+
+def mamba_scan_ref(x, dt, B_t, C_t, A):
+    """Selective scan.  x,dt [B,T,d]; B_t,C_t [B,T,n]; A [d,n].  y [B,T,d].
+
+        h_t = exp(dt_t A) ⊙ h_{t-1} + (dt_t x_t) B_tᵀ;  y_t = h_t · C_t
+    """
+    x32, dt32, Bt, Ct = (a.astype(jnp.float32) for a in (x, dt, B_t, C_t))
+    A32 = A.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * A32)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    Bsz, T, d = x.shape
+    n = A.shape[1]
+    h0 = jnp.zeros((Bsz, d, n), jnp.float32)
+    xs = (x32.transpose(1, 0, 2), dt32.transpose(1, 0, 2),
+          Bt.transpose(1, 0, 2), Ct.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype)

@@ -1,0 +1,73 @@
+"""MoE router gate (Pallas TPU kernel): fused softmax + top-k + renorm.
+
+Every token of every MoE layer runs this (kimi-k2: 60 layers x 1M tokens
+per train step).  The fused kernel does one VMEM pass over the expert
+logits per row tile: softmax statistics, K iterative argmax extractions
+(K is small and static — unrolled), and gate renormalization, without
+materializing the full softmax in HBM.
+
+Grid: (row_tiles,); the expert dim lives in one block (E <= 1024 covers
+every assigned config; padded to the lane multiple with -inf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+_NEG = -1e30
+
+
+def _router_kernel(x_ref, gates_ref, idx_ref, *, k: int, e: int):
+    x = x_ref[...].astype(jnp.float32)                     # [R, Ep]
+    m = jnp.max(x, axis=1, keepdims=True)
+    p = jnp.exp(x - m)
+    s = jnp.sum(p, axis=1, keepdims=True)
+
+    cur = x
+    cols = jax.lax.broadcasted_iota(jnp.int32, cur.shape, 1)
+    total = jnp.zeros((x.shape[0],), jnp.float32)
+    gates = []
+    idxs = []
+    for j in range(k):                                      # static unroll
+        best = jnp.max(cur, axis=1)
+        arg = jnp.argmax(cur, axis=1).astype(jnp.int32)
+        gate = jnp.exp(best - m[:, 0]) / s[:, 0]
+        gates.append(gate)
+        idxs.append(arg)
+        total = total + gate
+        cur = jnp.where(cols == arg[:, None], _NEG, cur)
+
+    denom = jnp.maximum(total, 1e-9)
+    for j in range(k):
+        gates_ref[:, j] = gates[j] / denom
+        idx_ref[:, j] = idxs[j]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def router_gate(logits, k: int, *, interpret: bool = False):
+    """logits [..., E] -> (gates [..., k] renormalized, idx [..., k])."""
+    orig = logits.shape[:-1]
+    E = logits.shape[-1]
+    x = logits.reshape(-1, E)
+    R = x.shape[0]
+    rpad = (-R) % ROW_TILE
+    epad = (-E) % 128
+    if rpad or epad:
+        x = jnp.pad(x, ((0, rpad), (0, epad)), constant_values=_NEG)
+    Rp = R + rpad
+
+    gates, idx = pl.pallas_call(
+        functools.partial(_router_kernel, k=k, e=E),
+        grid=(Rp // ROW_TILE,),
+        in_specs=[pl.BlockSpec((ROW_TILE, E + epad), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((ROW_TILE, k), lambda i: (i, 0)),
+                   pl.BlockSpec((ROW_TILE, k), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Rp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Rp, k), jnp.int32)),
+        interpret=interpret,
+    )(x)
+    return (gates[:R].reshape(*orig, k), idx[:R].reshape(*orig, k))

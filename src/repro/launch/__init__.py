@@ -1,0 +1,10 @@
+"""Distributed launch layer: production meshes, input shape specs, step
+functions, the multi-pod dry-run, and the roofline extraction that reads
+its compiled artifacts.  ``repro.launch.dryrun`` must stay import-safe
+only as __main__ (it sets XLA_FLAGS at import)."""
+from repro.launch import hlo, mesh, roofline, shapes, steps  # noqa: F401
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.shapes import SHAPES, input_specs
+
+__all__ = ["hlo", "mesh", "roofline", "shapes", "steps",
+           "make_production_mesh", "make_test_mesh", "SHAPES", "input_specs"]

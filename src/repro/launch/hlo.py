@@ -1,0 +1,94 @@
+"""Post-partitioning HLO analysis: collective traffic extraction.
+
+``compiled.as_text()`` is the SPMD-partitioned per-device module; every
+cross-device transfer appears as an explicit collective op whose output
+shape is per-device.  We sum output bytes per op kind and convert to
+on-wire bytes with the standard ring factors:
+
+    all-reduce         2(n-1)/n ~ 2x output size
+    all-gather         (n-1)/n  ~ 1x
+    reduce-scatter     (n-1)/n  ~ 1x
+    all-to-all         (n-1)/n  ~ 1x
+    collective-permute 1x
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?P<outs>[^=]*?)\s*(?P<op>" + "|".join(_COLLECTIVES) +
+    r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(_WIRE_FACTOR[k] * v for k, v in self.bytes_by_op.items())
+
+    @property
+    def total_raw_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic from post-SPMD HLO text.
+
+    Skips `-done` ops (the payload was counted at `-start`) and
+    get-tuple-element wrappers.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "get-tuple-element" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if f"{m.group('op')}-done(" in line:
+            continue
+        b = _shape_bytes(m.group("outs"))
+        op = m.group("op")
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + b
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+def op_histogram(hlo_text: str, top: int = 20):
+    """Instruction-name histogram — handy for spotting remat recompute and
+    layout-change churn during §Perf iterations."""
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*[^ ]+ ([a-z][a-z0-9-]*)\(", line)
+        if m:
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Target hardware: TPU v5e pods — 256 chips per pod, 2 pods for the
+multi-pod configuration.  Axes:
+
+  * ``data``  — batch (and, for batch=1 long-context, KV-cache sequence)
+  * ``model`` — tensor/expert parallelism
+  * ``pod``   — data parallelism across pods (multi-pod only)
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def _mk(shape, axes):
+    kinds = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=kinds)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(devices: int = 8):
+    """Small mesh for CI-style dry-run tests (host platform devices)."""
+    if devices % 4 == 0:
+        return _mk((devices // 4, 4), ("data", "model"))
+    return _mk((1, devices), ("data", "model"))
+
+
+def num_chips(mesh) -> int:
+    return mesh.devices.size

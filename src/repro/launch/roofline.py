@@ -1,0 +1,101 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e constants).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() on the partitioned module reports *per-device* FLOPs and
+bytes, and the HLO parser reports per-device wire bytes, so the per-chip
+times are those values divided by the single-chip rates; the table also
+re-derives the spec's global formulation (x chips on both sides — same
+number) for the record.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+from repro.launch import hlo as hlo_lib
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw measurements (per device)
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+    collective_detail: dict
+    # analytic
+    model_flops: float           # 6*N*D (dense) / 6*N_active*D (MoE), global
+    # derived times (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    useful_flops_ratio: float    # MODEL_FLOPS / (HLO_FLOPs*chips)
+    memory_per_device_gb: float
+    peak_memory_gb: Optional[float] = None
+    note: str = ""
+
+    def to_json(self):
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            memory_stats=None, note: str = "") -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    stats = hlo_lib.collective_stats(hlo_text)
+    wire = stats.total_wire_bytes
+
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = nbytes / HBM_BW
+    t_x = wire / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+
+    mem_gb = None
+    arg_gb = 0.0
+    if memory_stats is not None:
+        arg = memory_stats.argument_size_in_bytes
+        tmp = memory_stats.temp_size_in_bytes
+        out = memory_stats.output_size_in_bytes
+        alias = memory_stats.alias_size_in_bytes
+        mem_gb = (arg + tmp + out - alias) / 1e9
+        arg_gb = arg / 1e9
+
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=nbytes,
+        wire_bytes_per_chip=wire,
+        collective_detail={"bytes_by_op": stats.bytes_by_op,
+                           "count_by_op": stats.count_by_op},
+        model_flops=model_flops,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        useful_flops_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+        memory_per_device_gb=arg_gb,
+        peak_memory_gb=mem_gb,
+        note=note,
+    )
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """6*N*D rule.  Train counts fwd+bwd (6ND); prefill counts forward only
+    (2ND); decode counts one token (2*N_active per token * batch)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

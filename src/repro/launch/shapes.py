@@ -1,0 +1,89 @@
+"""Assigned input shapes and per-(arch × shape) input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for everything a step function takes
+*except* params/opt-state (those come from repro.models.params /
+launch.steps).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.models.cache import cache_shapes
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _bspec(mesh, ndim, batch_shardable: bool):
+    axes = _batch_axes(mesh)
+    lead = None
+    if batch_shardable and axes:
+        lead = axes if len(axes) > 1 else axes[0]
+    return PartitionSpec(lead, *([None] * (ndim - 1)))
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh,
+                dtype=jnp.bfloat16, seq_over_model: bool = False) -> dict:
+    """ShapeDtypeStructs for one (arch × shape) pair on a mesh.
+
+    train/prefill: {"tokens" [B,S] (+ "frontend_embeds")}.
+    decode:        {"token" [B,1], "pos" [B,1], "cache": tree} — one new
+                   token against a seq_len KV cache.  For batch=1
+                   (long_500k) the cache sequence dim is sharded over the
+                   data axis instead of batch (see models.cache).
+    """
+    s = SHAPES[shape_name]
+    import math
+    n_batch_axes = math.prod(
+        dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        for a in _batch_axes(mesh)) if _batch_axes(mesh) else 1
+    batch_shardable = s.global_batch % max(n_batch_axes, 1) == 0
+
+    if s.kind in ("train", "prefill"):
+        specs = {"tokens": _sds((s.global_batch, s.seq_len), jnp.int32, mesh,
+                                _bspec(mesh, 2, batch_shardable))}
+        if cfg.frontend:
+            specs["frontend_embeds"] = _sds(
+                (s.global_batch, cfg.frontend_len, cfg.frontend_dim), dtype,
+                mesh, _bspec(mesh, 3, batch_shardable))
+        return specs
+
+    # decode
+    shard_seq = not batch_shardable   # batch=1 -> sequence-parallel cache
+    return {
+        "token": _sds((s.global_batch, 1), jnp.int32, mesh,
+                      _bspec(mesh, 2, batch_shardable)),
+        "pos": _sds((s.global_batch, 1), jnp.int32, mesh,
+                    _bspec(mesh, 2, batch_shardable)),
+        "cache": cache_shapes(cfg, s.global_batch, s.seq_len, mesh=mesh,
+                              dtype=dtype, shard_seq=shard_seq,
+                              seq_over_model=seq_over_model),
+    }

@@ -1,0 +1,212 @@
+"""Step functions (train / prefill / serve) + their sharding trees.
+
+These are the functions the dry-run lowers and a real deployment jits.
+``make_train_step`` is standard next-token LM training (L_org + MoE aux);
+``make_ltc_train_step`` is the paper's Eq 4 applied to the fast member of
+a cascade pair with the expensive member frozen (see repro.core.losses).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.core import losses
+from repro.models import cache as cache_lib
+from repro.models import params as params_lib
+from repro.models import transformer
+from repro.optim import get_optimizer
+
+
+def make_optimizer(cfg: ModelConfig):
+    if cfg.optimizer in ("sgd", "sgd_momentum"):
+        return get_optimizer("sgd_momentum", momentum=0.9)
+    if cfg.optimizer == "adamw":
+        return get_optimizer("adamw", weight_decay=0.01)
+    return get_optimizer("adafactor")
+
+
+# --------------------------------------------------------------------------
+# Train
+# --------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg: ModelConfig, batch, chunked_ce: int = 0):
+    labels = batch["tokens"][:, 1:]
+    if chunked_ce:
+        hidden, _, aux = transformer.forward(params, cfg, batch,
+                                             mode="train",
+                                             return_hidden=True)
+        proj = transformer.lm_proj(params, cfg)
+        l = losses.chunked_lm_loss(hidden[:, :-1], proj, labels,
+                                   chunk=min(chunked_ce, labels.shape[1]))
+    else:
+        logits, aux = transformer.train_logits(params, cfg, batch)
+        l = losses.cross_entropy(logits[:, :-1], labels)
+    l = l + losses.moe_aux_loss(aux)
+    return l, {"loss": l}
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-3,
+                    force_remat: bool = True, microbatches: int = 1,
+                    chunked_ce: int = 0):
+    # Activation checkpointing around the period scan body is the training
+    # default: without it the scan saves every layer's attention/FFN
+    # intermediates for backward (measured 138 GB/chip on gemma3 train_4k
+    # — see EXPERIMENTS.md §Perf iteration 0).
+    if force_remat and cfg.num_periods and not cfg.remat:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=True)
+    opt = make_optimizer(cfg)
+
+    def loss_fn(p, b):
+        return lm_loss(p, cfg, b, chunked_ce=chunked_ce)
+
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            (l, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            params, opt_state = opt.update(params, grads, opt_state, lr)
+            return params, opt_state, m
+
+        return train_step, opt
+
+    # Gradient accumulation (§Perf hillclimb): activations, logits and
+    # remat checkpoints scale with the live microbatch — M microbatches
+    # cut the activation term ~M× for one extra grads-sized accumulator.
+    from repro.models.sharding import shard_hint
+
+    def train_step(params, opt_state, batch):
+        M = microbatches
+
+        def split(a):
+            a = a.reshape(M, a.shape[0] // M, *a.shape[1:])
+            return a
+
+        mbs = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            mb = jax.tree.map(
+                lambda a: shard_hint(a, "batch", *([None] * (a.ndim - 1))),
+                mb)
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return acc, l
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        grads, ls = jax.lax.scan(body, zeros, mbs)
+        grads = jax.tree.map(lambda g: g / M, grads)
+        params, opt_state = opt.update(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": jnp.mean(ls)}
+
+    return train_step, opt
+
+
+def make_ltc_train_step(fast_cfg: ModelConfig, exp_cfg: ModelConfig,
+                        *, w: float = 1.0, cost_c: float = 0.5,
+                        lr: float = 1e-3):
+    """Eq 4 for LM cascades: the frozen expensive model's forward runs on
+    the same batch to supply the 1[exp wrong] indicator."""
+    opt = make_optimizer(fast_cfg)
+
+    def loss_fn(fast_params, exp_params, batch):
+        fast_logits, aux = transformer.train_logits(fast_params, fast_cfg, batch)
+        exp_logits, _ = transformer.train_logits(
+            jax.lax.stop_gradient(exp_params), exp_cfg, batch)
+        labels = batch["tokens"][:, 1:]
+        l, m = losses.ltc_loss(fast_logits[:, :-1],
+                               jax.lax.stop_gradient(exp_logits[:, :-1]),
+                               labels, w=w, cost_c=cost_c)
+        l = l + losses.moe_aux_loss(aux)
+        return l, m
+
+    def train_step(fast_params, opt_state, exp_params, batch):
+        (l, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            fast_params, exp_params, batch)
+        fast_params, opt_state = opt.update(fast_params, grads, opt_state, lr)
+        return fast_params, opt_state, m
+
+    return train_step, opt
+
+
+# --------------------------------------------------------------------------
+# Serve
+# --------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache, _ = transformer.forward(params, cfg, batch,
+                                               mode="prefill")
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: next-token logits + updated cache + the cascade
+    gate's confidence (max softmax prob) — the paper's conf, computed
+    where the logits live."""
+
+    def serve_step(params, token, pos, cache):
+        logits, new_cache = transformer.decode_step(params, cfg, token,
+                                                    cache, pos)
+        conf = jnp.max(jax.nn.softmax(logits.astype(jnp.float32), -1), -1)
+        return logits, conf, new_cache
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# Sharding trees
+# --------------------------------------------------------------------------
+
+
+def opt_state_specs(opt_name: str, cfg: ModelConfig, mesh):
+    """PartitionSpecs for the optimizer state, derived from param specs.
+
+    sgd: mu mirrors params.  adamw: m, v mirror params.  adafactor:
+    vr drops the last param dim, vc drops the second-to-last.
+    """
+    pspecs = params_lib.param_specs(cfg, mesh)
+
+    if opt_name in ("sgd_momentum", "sgd"):
+        return {"mu": pspecs, "step": PartitionSpec()}
+    if opt_name == "adamw":
+        return {"m": pspecs, "v": pspecs, "step": PartitionSpec()}
+
+    def leaf(spec, decl):
+        dims = tuple(spec)
+        # pad dims with None to param rank
+        nd = len(decl.shape)
+        dims = dims + (None,) * (nd - len(dims))
+        if nd >= 2:
+            return {"vr": PartitionSpec(*dims[:-1]),
+                    "vc": PartitionSpec(*(dims[:-2] + dims[-1:]))}
+        return {"v": PartitionSpec(*dims)}
+
+    decl = params_lib.declare_model(cfg)
+    v = jax.tree.map(leaf, pspecs, decl,
+                     is_leaf=lambda x: isinstance(x, PartitionSpec))
+    return {"v": v, "step": PartitionSpec()}
+
+
+def opt_state_shapes(opt, cfg: ModelConfig, mesh, dtype=jnp.float32):
+    """ShapeDtypeStructs (sharded) for the optimizer state without
+    materializing params: eval_shape over opt.init."""
+    pshapes = params_lib.param_shapes(cfg, dtype=dtype, mesh=mesh)
+    state_shape = jax.eval_shape(opt.init, pshapes)
+    specs = opt_state_specs(opt.name, cfg, mesh)
+
+    def attach(sds, spec):
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=jax.sharding.NamedSharding(mesh, spec))
+
+    return jax.tree.map(attach, state_shape, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

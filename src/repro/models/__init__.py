@@ -1,0 +1,11 @@
+from repro.models import blocks, cache, params, transformer  # noqa: F401
+from repro.models.params import init_params, param_shapes, param_specs
+from repro.models.cache import cache_shapes, cache_specs, init_cache
+from repro.models.transformer import decode_step, forward, prefill, train_logits
+
+__all__ = [
+    "blocks", "cache", "params", "transformer",
+    "init_params", "param_shapes", "param_specs",
+    "cache_shapes", "cache_specs", "init_cache",
+    "decode_step", "forward", "prefill", "train_logits",
+]

@@ -1,0 +1,499 @@
+"""Transformer / SSM / linear-attention building blocks (pure functions).
+
+Every mixer has the signature::
+
+    y, new_cache, = mixer(p, cfg, spec, x, cache, pos, mode)
+
+with ``mode in {'train', 'prefill', 'decode'}``.  In train mode caches are
+ignored (``None`` in / ``None`` out); prefill returns a populated cache;
+decode consumes ``x`` of seq-len 1 and a cache, and returns the updated
+cache.  ``pos`` is ``[B, S]`` int32 absolute positions (decode: ``[B, 1]``).
+
+Every ffn has the signature ``y, aux = ffn(p, cfg, spec, x, cache, mode)``
+where ``aux`` is a dict of auxiliary scalars (MoE load-balance / router
+z-loss; zeros elsewhere).  The RWKV channel-mix is the one stateful ffn
+(token shift) and uses the cache slot.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import shard_hint
+
+# Attention q-chunking threshold: above this seq-len, queries are processed
+# in chunks via lax.scan to bound the materialized score matrix (the jnp
+# stand-in for the Pallas flash kernel; see repro.kernels.flash_attention).
+_Q_CHUNK = 1024
+_CHUNK_THRESHOLD = 4096
+
+# MoE dispatch group size (tokens per GShard group).
+MOE_GROUP_SIZE = 1024
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def _rope_angles(pos, dim, theta):
+    """pos [..., S] -> cos/sin [..., S, dim//2] (float32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = pos.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rot(x, cos, sin):
+    """x [..., S, H, d]; cos/sin [..., S, d//2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def apply_rope(q, k, pos, cfg: ModelConfig, kind: str, frontend_len: int = 0):
+    """kind: 'rope' | 'mrope' | 'none'.  q [B,S,H,d], k [B,S,KV,d], pos [B,S]."""
+    if kind == "none":
+        return q, k
+    d = q.shape[-1]
+    if kind == "rope":
+        cos, sin = _rope_angles(pos, d, cfg.rope_theta)
+        return _apply_rot(q, cos, sin), _apply_rot(k, cos, sin)
+    # M-RoPE [arXiv:2409.12191]: head_dim split into (t, h, w) sections.
+    # Vision tokens (pos < frontend_len) take a 2D grid position; text
+    # tokens use pos for all three sections.
+    sec = _mrope_sections(d)
+    is_img = pos < frontend_len
+    grid = 32  # dry-run patch grid width
+    p_t = jnp.where(is_img, 0, pos)
+    p_h = jnp.where(is_img, pos // grid, pos)
+    p_w = jnp.where(is_img, pos % grid, pos)
+    qs, ks = [], []
+    off = 0
+    for p_sec, n in zip((p_t, p_h, p_w), sec):
+        cos, sin = _rope_angles(p_sec, n, cfg.rope_theta)
+        qs.append(_apply_rot(q[..., off:off + n], cos, sin))
+        ks.append(_apply_rot(k[..., off:off + n], cos, sin))
+        off += n
+    return jnp.concatenate(qs, axis=-1), jnp.concatenate(ks, axis=-1)
+
+
+def _mrope_sections(d):
+    t = d // 8            # e.g. 16 for d=128
+    hw = (d - t) // 2
+    return (t, hw, d - t - hw)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+def _quant_i8(x, eps=1e-8):
+    """Symmetric per-(token, head) int8 quantization of [B,S,KV,d]."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + eps
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def _gqa_scores_to_out(q, k, v, mask, seq_hint: bool = False,
+                       k_scale=None, v_scale=None):
+    """q [B,S,KV,G,d]; k,v [B,T,KV,d]; mask [B,1,1,S,T] or broadcastable.
+
+    seq_hint (full-seq paths): shard the key dim of the scores over the
+    model axis — with few KV heads (kv < mesh model size) the head dims
+    cannot absorb the model axis and unhinted scores replicate
+    (bkgst f32 at 4k seq is the largest training transient).
+
+    k_scale/v_scale [B,T,KV] (int8 KV cache): the per-token dequant scales
+    are folded into the score matrix / attention probs so the int8 cache
+    feeds the dots directly (one HBM read at 1 byte/element)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if k.dtype == jnp.int8:
+        # the convert fuses into the dot on TPU: the cache is read at
+        # 1 byte/element and dequantized in VREGs
+        k = k.astype(jnp.bfloat16)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    if seq_hint:
+        scores = shard_hint(scores, "batch", None, None, None, "model")
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    probs = probs.astype(v.dtype if v.dtype != jnp.int8 else jnp.bfloat16)
+    if seq_hint:
+        probs = shard_hint(probs, "batch", None, None, None, "model")
+    out = jnp.einsum("bkgst,btkd->bskgd", probs,
+                     v if v.dtype != jnp.int8 else v.astype(jnp.bfloat16))
+    return out
+
+
+def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    q = (x @ p["wq"]).reshape(B, S, KV, G, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    qr, kr = apply_rope(q.reshape(B, S, H, hd), k, pos, cfg, spec.rope,
+                        cfg.frontend_len)
+    q = qr.reshape(B, S, KV, G, hd)
+    k = kr
+
+    if mode == "decode":
+        # one new token (S == 1) against a fixed-size cache
+        p0 = pos[0, 0]  # static batching: all rows share the decode position
+        quant = "k_scale" in cache
+        if quant:
+            kq, ksc = _quant_i8(k)
+            vq, vsc = _quant_i8(v)
+            ck = lax.dynamic_update_slice(cache["k"], kq, (0, p0, 0, 0))
+            cv = lax.dynamic_update_slice(cache["v"], vq, (0, p0, 0, 0))
+            cks = lax.dynamic_update_slice(cache["k_scale"], ksc, (0, p0, 0))
+            cvs = lax.dynamic_update_slice(cache["v_scale"], vsc, (0, p0, 0))
+        else:
+            ck = lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, p0, 0, 0))
+            cv = lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, p0, 0, 0))
+        T = ck.shape[1]
+        idx = jnp.arange(T)[None, None, None, None, :]
+        mask = idx <= p0
+        if spec.window is not None:
+            mask &= idx > p0 - spec.window
+        if quant:
+            out = _gqa_scores_to_out(q, ck, cv, mask, k_scale=cks,
+                                     v_scale=cvs)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        else:
+            out = _gqa_scores_to_out(q, ck, cv, mask)
+            new_cache = {"k": ck, "v": cv}
+        y = out.reshape(B, S, H * hd) @ p["wo"]
+        return y, new_cache
+
+    # full-sequence (train / prefill)
+    if cfg.kv_seq_hint:
+        # T-shard k/v over 'model' (only when kv heads can't shard it) so
+        # the scores/probs contractions stay shard-aligned (partial sums +
+        # small out all-reduce) instead of all-gathering the T-sharded
+        # probs — measured 130s -> 4.4s collective on starcoder2 train
+        # (§Perf iteration 4)
+        from repro.models.sharding import shard_seq_if_heads_unshardable
+        k = shard_seq_if_heads_unshardable(k, KV)
+        v = shard_seq_if_heads_unshardable(v, KV)
+    q_pos = pos[:, None, None, :, None]        # [B,1,1,S,1]
+    k_pos = pos[:, None, None, None, :]        # [B,1,1,1,S]
+    mask = k_pos <= q_pos
+    if spec.window is not None:
+        mask &= k_pos > q_pos - spec.window
+
+    if S >= _CHUNK_THRESHOLD:
+        n = S // _Q_CHUNK
+        kp = pos[:, None, None, None, :]                     # [B,1,1,1,S]
+
+        def body(_, qc_qp):
+            qc, qp = qc_qp                                   # qp [B,chunk]
+            qpb = qp[:, None, None, :, None]                 # [B,1,1,c,1]
+            m = kp <= qpb
+            if spec.window is not None:
+                m &= kp > qpb - spec.window
+            # seq_hint here too: without it the per-chunk scores replicate
+            # over the model axis (kimi train: 216 GB/chip vs 88 GB with
+            # the hint, despite the SPMD resharding-copy warning)
+            return None, _gqa_scores_to_out(qc, k, v, m, seq_hint=True)
+
+        qs = q.reshape(B, n, _Q_CHUNK, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = pos.reshape(B, n, _Q_CHUNK).transpose(1, 0, 2)
+        _, outs = lax.scan(body, None, (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, G, hd)
+    else:
+        out = _gqa_scores_to_out(q, k, v, mask, seq_hint=True)
+
+    y = out.reshape(B, S, H * hd) @ p["wo"]
+    new_cache = None
+    if mode == "prefill":
+        if cfg.kv_quant == "int8":
+            kq, ksc = _quant_i8(k)
+            vq, vsc = _quant_i8(v)
+            new_cache = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+        else:
+            new_cache = {"k": k, "v": v}
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# Mamba (selective SSM)
+# --------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b, cache, mode):
+    """Depthwise causal conv. x [B,S,d_in], w [d_conv,d_in].  cache holds the
+    trailing d_conv-1 inputs for decode."""
+    d_conv = w.shape[0]
+    if mode == "decode":
+        window = jnp.concatenate([cache, x], axis=1)        # [B,d_conv,d]
+        y = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                       w.astype(jnp.float32))[:, None]
+        new_cache = window[:, 1:]
+        return (y + b).astype(x.dtype), new_cache
+    pads = [jnp.pad(x, ((0, 0), (d_conv - 1 - i, 0), (0, 0)))[:, :x.shape[1]]
+            for i in range(d_conv)]
+    y = sum(pads[i].astype(jnp.float32) * w[i].astype(jnp.float32)
+            for i in range(d_conv)) + b
+    new_cache = None
+    if mode == "prefill":
+        new_cache = x[:, -(d_conv - 1):].astype(jnp.float32).astype(x.dtype)
+    return y.astype(x.dtype), new_cache
+
+
+def mamba(p, cfg: ModelConfig, spec, x, cache, pos, mode):
+    B, S, D = x.shape
+    d_in = spec.expand * cfg.d_model
+    n = spec.d_state
+    dt_rank = math.ceil(cfg.d_model / 16)
+
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_cache, mode)
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"]                                  # [B,S,r+2n]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"]
+                         + p["dt_bias"]).astype(jnp.float32)  # [B,S,d_in]
+    Bt = proj[..., dt_rank:dt_rank + n].astype(jnp.float32)   # [B,S,n]
+    Ct = proj[..., dt_rank + n:].astype(jnp.float32)          # [B,S,n]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [d_in,n]
+    xf = xi.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp                 # [B,d_in],[B,n],[B,n],[B,d_in]
+        da = jnp.exp(dt_t[..., None] * A)                       # [B,d_in,n]
+        dbx = (dt_t * x_t)[..., None] * B_t[:, None, :]          # [B,d_in,n]
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    if mode == "decode":
+        h0 = cache["ssm"].astype(jnp.float32)
+        h1, y = step(h0, (dt[:, 0], Bt[:, 0], Ct[:, 0], xf[:, 0]))
+        y = y[:, None]
+        new_ssm = h1
+    else:
+        h0 = jnp.zeros((B, d_in, n), jnp.float32)
+        xs = (dt.transpose(1, 0, 2), Bt.transpose(1, 0, 2),
+              Ct.transpose(1, 0, 2), xf.transpose(1, 0, 2))
+        h1, ys = lax.scan(step, h0, xs)
+        y = ys.transpose(1, 0, 2)
+        new_ssm = h1
+
+    y = y + xf * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv, "ssm": new_ssm.astype(jnp.float32)}
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# RWKV-6 time mix
+# --------------------------------------------------------------------------
+
+
+def _token_shift(x, x_prev, mode):
+    """Returns x_{t-1} per position.  x_prev: [B,1,D] last token of the
+    previous segment (zeros at sequence start)."""
+    if mode == "decode":
+        return x_prev
+    shifted = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    return shifted
+
+
+def rwkv6(p, cfg: ModelConfig, spec, x, cache, pos, mode):
+    B, S, D = x.shape
+    hd = spec.head_dim
+    H = D // hd
+
+    x_prev = cache["x_prev"] if cache is not None else None
+    xs = _token_shift(x, x_prev, mode)
+
+    def lerp(mix):
+        return x + (xs - x) * mix
+
+    r = (lerp(p["mix_r"]) @ p["wr"]).reshape(B, S, H, hd)
+    k = (lerp(p["mix_k"]) @ p["wk"]).reshape(B, S, H, hd)
+    v = (lerp(p["mix_v"]) @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(lerp(p["mix_g"]) @ p["wg"])
+    # data-dependent decay (the Finch contribution): w in (0,1)
+    xw = lerp(p["mix_w"])
+    w = jnp.exp(-jnp.exp((p["w0"] + jnp.tanh(xw @ p["wA"]) @ p["wB"])
+                         .astype(jnp.float32))).reshape(B, S, H, hd)
+
+    u = p["bonus"].astype(jnp.float32)                      # [H,hd]
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp            # [B,H,hd] each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, y
+
+    if mode == "decode":
+        s0 = cache["state"].astype(jnp.float32)
+        s1, y = step(s0, (r32[:, 0], k32[:, 0], v32[:, 0], w[:, 0]))
+        y = y[:, None]
+    else:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        seq = (r32.transpose(1, 0, 2, 3), k32.transpose(1, 0, 2, 3),
+               v32.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+        s1, ys = lax.scan(step, s0, seq)
+        y = ys.transpose(1, 0, 2, 3)
+
+    # per-head group norm, then output gate + projection
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, S, D) * p["ln_x"].astype(jnp.float32)
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"x_prev": x[:, -1:], "state": s1}
+    return out, new_cache
+
+
+MIXERS = {"attn": attention, "mamba": mamba, "rwkv6": rwkv6}
+
+
+# --------------------------------------------------------------------------
+# FFNs
+# --------------------------------------------------------------------------
+
+
+def _zero_aux():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+
+
+def dense_ffn(p, cfg: ModelConfig, spec, x, cache, mode):
+    if spec.act == "rwkv_cmix":
+        x_prev = cache["x_prev"] if cache is not None else None
+        xs = _token_shift(x, x_prev, mode)
+        xk = x + (xs - x) * p["mix_k"]
+        xr = x + (xs - x) * p["mix_r"]
+        k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+        out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+        new_cache = {"x_prev": x[:, -1:]} if mode in ("decode", "prefill") else None
+        return out, new_cache, _zero_aux()
+    if spec.act == "swiglu":
+        h = jax.nn.silu(x @ p["wi0"]) * (x @ p["wi1"])
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"], None, _zero_aux()
+
+
+def moe_ffn(p, cfg: ModelConfig, spec, x, cache, mode):
+    """GShard-style token-choice top-k MoE with einsum dispatch.
+
+    Tokens are split into groups of MOE_GROUP_SIZE (groups align with data
+    shards); each expert takes at most ``capacity`` tokens per group,
+    overflow is dropped (residual passes through).
+    """
+    B, S, D = x.shape
+    E, K = spec.num_experts, spec.top_k
+    N = B * S
+    gs = min(MOE_GROUP_SIZE, N)
+    G = N // gs
+    xg = shard_hint(x.reshape(G, gs, D), "batch", None, None)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)          # [G,s,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = lax.top_k(probs, K)                     # [G,s,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(math.ceil(gs * K * spec.capacity_factor / E)))
+    cap = min(cap, gs)
+
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # [G,s,K,E]
+    sel = shard_hint(sel, "batch", None, None, "model")
+    # position of each (token, k) within its expert queue, in (s, k) order
+    flat = sel.reshape(G, gs * K, E)
+    ranks = (jnp.cumsum(flat, axis=1) - flat).reshape(G, gs, K, E)
+    keep = ranks < cap
+    sel = sel * keep
+    slot = jnp.einsum("gske,gske->gsk", ranks, sel)          # rank of chosen
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * \
+        jnp.sum(sel, -1, keepdims=True)                      # [G,s,K,C]
+    dispatch = jnp.einsum("gske,gskc->gsec", sel, slot_oh)   # [G,s,E,C]
+    dispatch = shard_hint(dispatch, "batch", None, "model", None)
+    combine = jnp.einsum("gsk,gske,gskc->gsec", gate_vals, sel, slot_oh)
+    combine = shard_hint(combine, "batch", None, "model", None)
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xg)
+    xin = shard_hint(xin, "model", "batch", None, None)
+    if spec.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["wi0"])) * \
+            jnp.einsum("egcd,edf->egcf", xin, p["wi1"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xin, p["wi"]))
+    h = shard_hint(h, "model", "batch", None, None)
+    eout = jnp.einsum("egcf,efd->egcd", h, p["wo"])
+    eout = shard_hint(eout, "model", "batch", None, None)
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), eout)
+    out = shard_hint(out, "batch", None, None)
+
+    # aux losses (Switch Transformer): load balance + router z-loss
+    me = jnp.mean(probs, axis=(0, 1))                        # [E]
+    ce = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))         # fraction routed
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return out.reshape(B, S, D), None, {"lb_loss": lb, "z_loss": z}
+
+
+def apply_ffn(p, cfg, spec, x, cache, mode):
+    if spec.kind == "moe":
+        return moe_ffn(p, cfg, spec, x, cache, mode)
+    return dense_ffn(p, cfg, spec, x, cache, mode)
+
+
+# --------------------------------------------------------------------------
+# Layer
+# --------------------------------------------------------------------------
+
+
+def apply_layer(p, cfg: ModelConfig, layer, x, cache, pos, mode):
+    """Pre-norm residual layer: x + mixer(norm(x)); x + ffn(norm(x))."""
+    mix_cache = cache.get("mixer") if cache else None
+    ffn_cache = cache.get("ffn") if cache else None
+
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    y, new_mix = MIXERS[layer.mixer.kind](p["mixer"], cfg, layer.mixer, h,
+                                          mix_cache, pos, mode)
+    x = x + y
+    h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    y, new_ffn, aux = apply_ffn(p["ffn"], cfg, layer.ffn, h, ffn_cache, mode)
+    x = x + y
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"mixer": new_mix if new_mix is not None else {},
+                     "ffn": new_ffn if new_ffn is not None else {}}
+    return x, new_cache, aux

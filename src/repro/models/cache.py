@@ -1,0 +1,161 @@
+"""Decode/prefill cache: per-layer state pytrees.
+
+Cache structure mirrors the model layout::
+
+    {"head": {"layer0": {...}}, "period": {"block0": stacked...}, "tail": ...}
+
+Each layer slot is ``{"mixer": <per-kind state>, "ffn": <per-kind state>}``:
+
+  * attn  -> {"k": [B,S,KV,hd], "v": [B,S,KV,hd]}
+  * mamba -> {"conv": [B,d_conv-1,d_in], "ssm": [B,d_in,d_state] f32}
+  * rwkv6 -> {"x_prev": [B,1,D], "state": [B,H,hd,hd] f32}
+  * rwkv_cmix ffn -> {"x_prev": [B,1,D]}; other ffns -> {}
+
+Period entries carry a leading ``num_periods`` stack dim (scanned).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import Layer, ModelConfig
+
+
+class CP(NamedTuple):
+    """Cache leaf declaration: shape + logical axes + dtype."""
+    shape: tuple
+    axes: tuple
+    dtype: object
+
+
+def _mixer_cache_decl(cfg: ModelConfig, m, B: int, S: int, dtype) -> dict:
+    if m.kind == "attn":
+        kv = (B, S, cfg.num_kv_heads, cfg.head_dim)
+        ax = ("batch", "kv_seq", "kv_heads", None)
+        if cfg.kv_quant == "int8":
+            sc = (B, S, cfg.num_kv_heads)
+            sax = ("batch", "kv_seq", "kv_heads")
+            return {"k": CP(kv, ax, jnp.int8), "v": CP(kv, ax, jnp.int8),
+                    "k_scale": CP(sc, sax, jnp.float32),
+                    "v_scale": CP(sc, sax, jnp.float32)}
+        return {"k": CP(kv, ax, dtype), "v": CP(kv, ax, dtype)}
+    if m.kind == "mamba":
+        d_in = m.expand * cfg.d_model
+        return {"conv": CP((B, m.d_conv - 1, d_in), ("batch", None, "d_inner"), dtype),
+                "ssm": CP((B, d_in, m.d_state), ("batch", "d_inner", None), jnp.float32)}
+    if m.kind == "rwkv6":
+        h = cfg.d_model // m.head_dim
+        return {"x_prev": CP((B, 1, cfg.d_model), ("batch", None, None), dtype),
+                "state": CP((B, h, m.head_dim, m.head_dim),
+                            ("batch", "heads", None, None), jnp.float32)}
+    raise ValueError(m.kind)
+
+
+def _ffn_cache_decl(cfg: ModelConfig, f, B: int, dtype) -> dict:
+    if f.kind == "dense" and f.act == "rwkv_cmix":
+        return {"x_prev": CP((B, 1, cfg.d_model), ("batch", None, None), dtype)}
+    return {}
+
+
+def _layer_cache_decl(cfg, layer: Layer, B, S, dtype):
+    return {"mixer": _mixer_cache_decl(cfg, layer.mixer, B, S, dtype),
+            "ffn": _ffn_cache_decl(cfg, layer.ffn, B, dtype)}
+
+
+def _stack(decl, n):
+    return jax.tree.map(
+        lambda c: CP((n,) + c.shape, ("stack",) + c.axes, c.dtype), decl,
+        is_leaf=lambda x: isinstance(x, CP))
+
+
+def declare_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    decl = {}
+    if cfg.head:
+        decl["head"] = {f"layer{i}": _layer_cache_decl(cfg, l, batch, seq_len, dtype)
+                        for i, l in enumerate(cfg.head)}
+    if cfg.num_periods:
+        period = {f"block{i}": _layer_cache_decl(cfg, l, batch, seq_len, dtype)
+                  for i, l in enumerate(cfg.period)}
+        decl["period"] = _stack(period, cfg.num_periods)
+    if cfg.tail:
+        decl["tail"] = {f"layer{i}": _layer_cache_decl(cfg, l, batch, seq_len, dtype)
+                        for i, l in enumerate(cfg.tail)}
+    return decl
+
+
+_IS_CP = lambda x: isinstance(x, CP)  # noqa: E731
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.float32):
+    decl = declare_cache(cfg, batch, seq_len, dtype)
+    return jax.tree.map(lambda c: jnp.zeros(c.shape, c.dtype), decl,
+                        is_leaf=_IS_CP)
+
+
+def cache_spec_leaf(c: CP, mesh, *, shard_seq: bool,
+                    seq_over_model: bool = False) -> PartitionSpec:
+    """Sharding rule for one cache leaf.
+
+    Default: batch -> ('pod','data'), kv heads/d_inner -> 'model' when
+    divisible.  When ``shard_seq`` (long-context, batch=1): the KV seq dim
+    is sharded over 'data' (sequence-parallel cache) instead of batch.
+    ``seq_over_model``: additionally shard the KV seq dim over 'model' —
+    the §Perf lever for GQA archs whose kv_heads don't divide the model
+    axis (their caches otherwise replicate across it; attention reductions
+    over the sharded seq dim become all-reduces).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    data_total = math.prod(sizes[a] for a in data_axes) if data_axes else 1
+    model = sizes.get("model", 1)
+    kv_shardable = any(a in ("kv_heads", "d_inner", "heads")
+                       and s % model == 0
+                       for a, s in zip(c.axes, c.shape)) and model > 1
+    spec = [None] * len(c.shape)
+    for i, (a, s) in enumerate(zip(c.axes, c.shape)):
+        if a == "batch" and not shard_seq and data_total > 1 and s % data_total == 0:
+            spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+        elif a == "kv_seq":
+            axes = []
+            if shard_seq and data_total > 1:
+                axes.extend(data_axes)
+            if seq_over_model and not kv_shardable and model > 1:
+                axes.append("model")
+            total = math.prod(sizes[x] for x in axes) if axes else 1
+            if axes and s % total == 0:
+                spec[i] = tuple(axes) if len(axes) > 1 else axes[0]
+        elif a in ("kv_heads", "d_inner", "heads") and model > 1 and s % model == 0:
+            spec[i] = "model"
+    return PartitionSpec(*spec)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int, mesh=None,
+                 dtype=jnp.bfloat16, shard_seq: bool = False,
+                 seq_over_model: bool = False):
+    """ShapeDtypeStructs (with shardings when mesh given) for dry-run."""
+    decl = declare_cache(cfg, batch, seq_len, dtype)
+
+    def leaf(c: CP):
+        if mesh is not None:
+            s = jax.sharding.NamedSharding(
+                mesh, cache_spec_leaf(c, mesh, shard_seq=shard_seq,
+                                      seq_over_model=seq_over_model))
+            return jax.ShapeDtypeStruct(c.shape, c.dtype, sharding=s)
+        return jax.ShapeDtypeStruct(c.shape, c.dtype)
+
+    return jax.tree.map(leaf, decl, is_leaf=_IS_CP)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, mesh,
+                dtype=jnp.bfloat16, shard_seq: bool = False,
+                seq_over_model: bool = False):
+    decl = declare_cache(cfg, batch, seq_len, dtype)
+    return jax.tree.map(
+        lambda c: cache_spec_leaf(c, mesh, shard_seq=shard_seq,
+                                  seq_over_model=seq_over_model),
+        decl, is_leaf=_IS_CP)

@@ -1,0 +1,278 @@
+"""Classifier zoo for the paper-faithful reproduction (Tables 1–6, Fig 3–5).
+
+The container has no CIFAR-100/ImageNet, so the zoo re-creates the paper's
+*relative structure* on the synthetic hierarchical-mixture task: a family
+of MLP classifiers whose analytic MACs and capacities mirror the ordering
+of (MobileNetV2, VGG11, AlexNet, ResNet18, ResNet152) in Table 1 — a
+shallow-but-wide member with poor cost/accuracy (AlexNet's role), compact
+members, and deep expensive members that are genuinely more accurate.
+
+Also includes the early-exit stack (the MSDNet stand-in for Fig 3): one
+backbone with exit heads after chosen depths, trained jointly (Eq 6).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.optim import get_optimizer
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    name: str
+    width: int                        # residual trunk width
+    depth: int                        # number of residual blocks
+    num_classes: int
+    in_dim: int
+
+    @property
+    def macs(self) -> int:
+        # stem + depth residual blocks (2 matmuls each) + head
+        return (self.in_dim * self.width
+                + self.depth * 2 * self.width * self.width
+                + self.width * self.num_classes)
+
+
+def zoo(in_dim: int, num_classes: int) -> dict:
+    """The five paper roles.  MACs ordering mirrors Table 1
+    (mobilenet < vgg < alexnet < resnet18 << resnet152) and the AlexNet
+    member is wide-but-shallow: costly without matching accuracy."""
+    return {
+        "mobilenetv2": MLPConfig("mobilenetv2", 64, 2, num_classes, in_dim),
+        "vgg11": MLPConfig("vgg11", 96, 3, num_classes, in_dim),
+        "alexnet": MLPConfig("alexnet", 160, 1, num_classes, in_dim),
+        "resnet18": MLPConfig("resnet18", 128, 6, num_classes, in_dim),
+        "resnet152": MLPConfig("resnet152", 224, 12, num_classes, in_dim),
+    }
+
+
+def init_mlp(cfg: MLPConfig, key):
+    key, k = jax.random.split(key)
+    params = {"stem": {"w": jax.random.normal(k, (cfg.in_dim, cfg.width))
+                       * math.sqrt(2.0 / cfg.in_dim),
+                       "b": jnp.zeros((cfg.width,))},
+              "blocks": [], }
+    for _ in range(cfg.depth):
+        key, k1, k2 = jax.random.split(key, 3)
+        params["blocks"].append({
+            "w1": jax.random.normal(k1, (cfg.width, cfg.width))
+            * math.sqrt(2.0 / cfg.width),
+            "b1": jnp.zeros((cfg.width,)),
+            "w2": jax.random.normal(k2, (cfg.width, cfg.width))
+            * math.sqrt(0.5 / cfg.width),   # small init: near-identity blocks
+            "b2": jnp.zeros((cfg.width,)),
+        })
+    key, k = jax.random.split(key)
+    params["head"] = {"w": jax.random.normal(k, (cfg.width, cfg.num_classes))
+                      / math.sqrt(cfg.width),
+                      "b": jnp.zeros((cfg.num_classes,))}
+    return params
+
+
+def _lnorm(h):
+    m = jnp.mean(h, -1, keepdims=True)
+    v = jnp.var(h, -1, keepdims=True)
+    return (h - m) * jax.lax.rsqrt(v + 1e-6)
+
+
+def mlp_apply(params, x, *, with_features: bool = False):
+    h = jax.nn.relu(x @ params["stem"]["w"] + params["stem"]["b"])
+    for blk in params["blocks"]:
+        u = jax.nn.relu(_lnorm(h) @ blk["w1"] + blk["b1"])   # pre-norm residual
+        h = h + (u @ blk["w2"] + blk["b2"])
+    feats = h
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    if with_features:
+        return logits, feats
+    return logits
+
+
+# --------------------------------------------------------------------------
+# Training (original loss or LtC — Eq 4)
+# --------------------------------------------------------------------------
+
+
+def train_classifier(cfg: MLPConfig, data_x, data_y, *, key,
+                     exp_logits=None, ltc_w: float = 0.0, cost_c: float = 0.5,
+                     epochs: int = 30, batch_size: int = 256, lr: float = 0.05,
+                     weight_decay: float = 5e-4, conf_head: bool = False,
+                     conf_head_kind: str = "confnet", verbose: bool = False):
+    """SGD+momentum training (the paper's optimizer, step-decayed LR).
+
+    exp_logits + ltc_w > 0 => LtC training (Eq 4) with the frozen expensive
+    model's precomputed logits.  conf_head => jointly train an auxiliary
+    confidence head (ConfNet / IDK baselines).
+    """
+    params = init_mlp(cfg, key)
+    if conf_head:
+        kh, key = jax.random.split(key)
+        hid = cfg.width
+        head = {"w1": jax.random.normal(kh, (hid, 64)) / math.sqrt(hid),
+                "b1": jnp.zeros((64,)),
+                "w2": jnp.zeros((64, 1)), "b2": jnp.zeros((1,))}
+        params = {"mlp": params, "head": head}
+
+    opt = get_optimizer("sgd_momentum", momentum=0.9, weight_decay=weight_decay)
+    state = opt.init(params)
+    n = data_x.shape[0]
+    steps_per_epoch = max(1, n // batch_size)
+    total = epochs * steps_per_epoch
+    b1, b2 = int(0.3 * total), int(0.6 * total)
+
+    def loss_fn(p, xb, yb, eb):
+        mlp = p["mlp"] if conf_head else p
+        logits, feats = mlp_apply(mlp, xb, with_features=True)
+        l = losses.cross_entropy(logits, yb)
+        metrics = {}
+        if ltc_w > 0.0 and eb is not None:
+            l_casc = losses.cascade_loss(logits, eb, yb, cost_c)
+            l = l + ltc_w * l_casc
+            metrics["l_casc"] = l_casc
+        if conf_head:
+            h = jax.nn.relu(feats @ p["head"]["w1"] + p["head"]["b1"])
+            conf = jax.nn.sigmoid((h @ p["head"]["w2"] + p["head"]["b2"])[..., 0])
+            if conf_head_kind == "confnet":
+                l = l + losses.confnet_loss(conf, logits, yb)
+            else:
+                l = l + losses.idk_loss(conf, logits, yb, cost_c)
+        return l, metrics
+
+    @jax.jit
+    def step(p, s, xb, yb, eb, lr_now):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, xb, yb, eb)
+        g = clip_by_global_norm(g, 1.0)
+        p, s = opt.update(p, g, s, lr_now)
+        return p, s, l
+
+    rng = jax.random.PRNGKey(hash(cfg.name) % (2 ** 31))
+    t = 0
+    for ep in range(epochs):
+        rng, kp = jax.random.split(rng)
+        perm = jax.random.permutation(kp, n)
+        for i in range(steps_per_epoch):
+            sl = perm[i * batch_size:(i + 1) * batch_size]
+            xb, yb = data_x[sl], data_y[sl]
+            eb = exp_logits[sl] if exp_logits is not None else None
+            lr_now = lr * (0.2 ** ((t >= b1) + (t >= b2)))
+            params, state, l = step(params, state, xb, yb, eb, lr_now)
+            t += 1
+        if verbose and (ep + 1) % 10 == 0:
+            print(f"  [{cfg.name}] epoch {ep+1}: loss {float(l):.4f}")
+    return params
+
+
+def predict(params, x, *, conf_head: bool = False):
+    """Returns (logits, conf_head_scores or None)."""
+    if conf_head:
+        logits, feats = mlp_apply(params["mlp"], x, with_features=True)
+        h = jax.nn.relu(feats @ params["head"]["w1"] + params["head"]["b1"])
+        conf = jax.nn.sigmoid((h @ params["head"]["w2"] + params["head"]["b2"])[..., 0])
+        return logits, conf
+    return mlp_apply(params, x), None
+
+
+# --------------------------------------------------------------------------
+# Early-exit backbone (MSDNet stand-in, Fig 3) — Eq 6 joint training
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EarlyExitConfig:
+    name: str
+    widths: Tuple[int, ...]          # backbone widths, one block per entry
+    exits: Tuple[int, ...]           # exit after block i (0-based); last
+                                     # block always has the final exit
+    num_classes: int
+    in_dim: int
+
+    def macs_upto(self, exit_idx: int) -> int:
+        """Cumulative MACs through exit `exit_idx` (incl. its head)."""
+        dims = (self.in_dim,) + self.widths
+        block_end = (self.exits + (len(self.widths) - 1,))[exit_idx]
+        macs = sum(dims[i] * dims[i + 1] for i in range(block_end + 1))
+        macs += dims[block_end + 1] * self.num_classes
+        return macs
+
+
+def init_early_exit(cfg: EarlyExitConfig, key):
+    dims = (cfg.in_dim,) + cfg.widths
+    blocks, heads = [], []
+    for a, b in zip(dims[:-1], dims[1:]):
+        key, k = jax.random.split(key)
+        blocks.append({"w": jax.random.normal(k, (a, b)) * math.sqrt(2.0 / a),
+                       "b": jnp.zeros((b,))})
+    for i in tuple(cfg.exits) + (len(cfg.widths) - 1,):
+        key, k = jax.random.split(key)
+        d = cfg.widths[i]
+        heads.append({"w": jax.random.normal(k, (d, cfg.num_classes)) / math.sqrt(d),
+                      "b": jnp.zeros((cfg.num_classes,))})
+    return {"blocks": blocks, "heads": heads}
+
+
+def early_exit_apply(params, cfg: EarlyExitConfig, x):
+    """Returns list of logits, one per exit (fast -> final)."""
+    outs = []
+    h = x
+    exit_points = tuple(cfg.exits) + (len(cfg.widths) - 1,)
+    head_i = 0
+    for i, blk in enumerate(params["blocks"]):
+        h = jax.nn.relu(h @ blk["w"] + blk["b"])
+        if head_i < len(exit_points) and i == exit_points[head_i]:
+            hd = params["heads"][head_i]
+            outs.append(h @ hd["w"] + hd["b"])
+            head_i += 1
+    return outs
+
+
+def train_early_exit(cfg: EarlyExitConfig, data_x, data_y, *, key,
+                     ltc_w: float = 0.0, cost_c: float = 0.5,
+                     epochs: int = 30, batch_size: int = 256, lr: float = 0.05):
+    """Joint training of all exits; ltc_w>0 adds Eq 6's pairwise L_casc."""
+    params = init_early_exit(cfg, key)
+    opt = get_optimizer("sgd_momentum", momentum=0.9, weight_decay=5e-4)
+    state = opt.init(params)
+    n = data_x.shape[0]
+    spe = max(1, n // batch_size)
+    total = epochs * spe
+    b1, b2 = int(0.3 * total), int(0.6 * total)
+
+    def loss_fn(p, xb, yb):
+        chain = early_exit_apply(p, cfg, xb)
+        if ltc_w > 0:
+            l, _ = losses.ltc_chain_loss(chain, yb, w=ltc_w, cost_c=cost_c)
+        else:
+            l = sum(losses.cross_entropy(c, yb) for c in chain)
+        return l
+
+    @jax.jit
+    def step(p, s, xb, yb, lr_now):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        g = clip_by_global_norm(g, 1.0)
+        p, s = opt.update(p, g, s, lr_now)
+        return p, s, l
+
+    rng = jax.random.PRNGKey(0)
+    t = 0
+    for ep in range(epochs):
+        rng, kp = jax.random.split(rng)
+        perm = jax.random.permutation(kp, n)
+        for i in range(spe):
+            sl = perm[i * batch_size:(i + 1) * batch_size]
+            lr_now = lr * (0.2 ** ((t >= b1) + (t >= b2)))
+            params, state, _ = step(params, state, data_x[sl], data_y[sl], lr_now)
+            t += 1
+    return params

@@ -1,0 +1,265 @@
+"""Parameter declaration framework.
+
+Every block declares its parameters as a pytree of :class:`P` (shape +
+logical axes + init).  From one declaration we derive:
+
+  * ``init_params``  — materialized arrays (smoke tests, real training)
+  * ``param_shapes`` — ShapeDtypeStructs (dry-run lowering, no allocation)
+  * ``param_specs``  — PartitionSpecs for a concrete mesh (GSPMD sharding)
+
+Sharding follows MaxText-style logical-axis rules: the ``model`` mesh axis
+is greedily placed on the highest-priority divisible dim of each tensor
+(experts > vocab > ffn/fused-heads > d_inner), and when ``cfg.fsdp`` the
+``data`` axis is additionally placed on a remaining divisible ``d_model``
+dim (2D / ZeRO-style weight sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+
+
+class P(NamedTuple):
+    shape: tuple
+    axes: tuple            # logical axis name per dim (or None)
+    init: str = "fan_in"   # fan_in | zeros | ones | normal:<s> | mamba_A | mamba_dt
+
+
+# priority of logical axes for the `model` mesh axis
+_MODEL_PRIORITY = ("experts", "vocab", "ffn", "fused_heads", "d_inner", "frontend")
+# axes eligible for the `data` mesh axis under fsdp
+_FSDP_AXES = ("d_model", "ffn2")
+
+
+def logical_to_spec(p: P, mesh, fsdp: bool) -> PartitionSpec:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    data = sizes.get("data", 1)
+    spec = [None] * len(p.shape)
+    for target in _MODEL_PRIORITY:
+        hit = False
+        for i, (a, s) in enumerate(zip(p.axes, p.shape)):
+            if a == target and s % model == 0 and model > 1:
+                spec[i] = "model"
+                hit = True
+                break
+        if hit:
+            break
+    if fsdp and data > 1:
+        for i, (a, s) in enumerate(zip(p.axes, p.shape)):
+            if a in _FSDP_AXES and spec[i] is None and s % data == 0:
+                spec[i] = "data"
+                break
+    return PartitionSpec(*spec)
+
+
+# --------------------------------------------------------------------------
+# Block declarations
+# --------------------------------------------------------------------------
+
+
+def _attn_decl(cfg: ModelConfig, m) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": P((d, H * hd), ("d_model", "fused_heads")),
+        "wk": P((d, KV * hd), ("d_model", "fused_heads")),
+        "wv": P((d, KV * hd), ("d_model", "fused_heads")),
+        "wo": P((H * hd, d), ("fused_heads", "d_model")),
+    }
+
+
+def _mamba_decl(cfg: ModelConfig, m) -> dict:
+    d = cfg.d_model
+    d_in = m.expand * d
+    dt_rank = math.ceil(d / 16)
+    return {
+        "in_proj": P((d, 2 * d_in), ("d_model", "d_inner")),
+        "conv_w": P((m.d_conv, d_in), (None, "d_inner")),
+        "conv_b": P((d_in,), ("d_inner",), "zeros"),
+        "x_proj": P((d_in, dt_rank + 2 * m.d_state), ("d_inner", None)),
+        "dt_proj": P((dt_rank, d_in), (None, "d_inner")),
+        "dt_bias": P((d_in,), ("d_inner",), "mamba_dt"),
+        "A_log": P((d_in, m.d_state), ("d_inner", None), "mamba_A"),
+        "D": P((d_in,), ("d_inner",), "ones"),
+        "out_proj": P((d_in, d), ("d_inner", "d_model")),
+    }
+
+
+def _rwkv6_decl(cfg: ModelConfig, m) -> dict:
+    d = cfg.d_model
+    r = m.decay_lora
+    return {
+        # token-shift interpolation weights (data-independent part)
+        "mix_r": P((d,), (None,), "normal:0.02"),
+        "mix_k": P((d,), (None,), "normal:0.02"),
+        "mix_v": P((d,), (None,), "normal:0.02"),
+        "mix_g": P((d,), (None,), "normal:0.02"),
+        "mix_w": P((d,), (None,), "normal:0.02"),
+        "wr": P((d, d), ("d_model", "d_inner")),
+        "wk": P((d, d), ("d_model", "d_inner")),
+        "wv": P((d, d), ("d_model", "d_inner")),
+        "wg": P((d, d), ("d_model", "d_inner")),
+        "wo": P((d, d), ("d_inner", "d_model")),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": P((d,), (None,), "normal:0.02"),
+        "wA": P((d, r), ("d_model", None)),
+        "wB": P((r, d), (None, "d_inner")),
+        "bonus": P((d // m.head_dim, m.head_dim), (None, None), "normal:0.02"),
+        "ln_x": P((d,), (None,), "ones"),   # per-head group norm scale
+    }
+
+
+def _dense_decl(cfg: ModelConfig, f) -> dict:
+    d = cfg.d_model
+    if f.act == "rwkv_cmix":
+        # RWKV-6 channel mix: token-shift lerp + squared-relu + receptance gate
+        return {
+            "mix_k": P((d,), (None,), "normal:0.02"),
+            "mix_r": P((d,), (None,), "normal:0.02"),
+            "wk": P((d, f.d_ff), ("d_model", "ffn")),
+            "wv": P((f.d_ff, d), ("ffn", "ffn2")),
+            "wr": P((d, d), ("d_model", "d_inner")),
+        }
+    if f.act == "swiglu":
+        return {
+            "wi0": P((d, f.d_ff), ("d_model", "ffn")),
+            "wi1": P((d, f.d_ff), ("d_model", "ffn")),
+            "wo": P((f.d_ff, d), ("ffn", "ffn2")),
+        }
+    return {
+        "wi": P((d, f.d_ff), ("d_model", "ffn")),
+        "wo": P((f.d_ff, d), ("ffn", "ffn2")),
+    }
+
+
+def _moe_decl(cfg: ModelConfig, f) -> dict:
+    d, E = cfg.d_model, f.num_experts
+    decl = {"router": P((d, E), ("d_model", None), "normal:0.02")}
+    if f.act == "swiglu":
+        decl.update({
+            "wi0": P((E, d, f.d_ff), ("experts", "d_model", "ffn")),
+            "wi1": P((E, d, f.d_ff), ("experts", "d_model", "ffn")),
+            "wo": P((E, f.d_ff, d), ("experts", "ffn", "d_model")),
+        })
+    else:
+        decl.update({
+            "wi": P((E, d, f.d_ff), ("experts", "d_model", "ffn")),
+            "wo": P((E, f.d_ff, d), ("experts", "ffn", "d_model")),
+        })
+    return decl
+
+
+_MIXER_DECL = {"attn": _attn_decl, "mamba": _mamba_decl, "rwkv6": _rwkv6_decl}
+_FFN_DECL = {"dense": _dense_decl, "moe": _moe_decl}
+
+
+def _layer_decl(cfg: ModelConfig, layer) -> dict:
+    return {
+        "norm1": P((cfg.d_model,), (None,), "ones"),
+        "mixer": _MIXER_DECL[layer.mixer.kind](cfg, layer.mixer),
+        "norm2": P((cfg.d_model,), (None,), "ones"),
+        "ffn": _FFN_DECL[layer.ffn.kind](cfg, layer.ffn),
+    }
+
+
+def _stack(decl: dict, n: int):
+    """Prepend a `stack` dim of size n to every leaf (scanned period weights)."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, ("stack",) + p.axes, p.init), decl,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def declare_model(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    decl = {
+        "embed": P((V, d), ("vocab", "d_model"), "normal:0.02"),
+        "final_norm": P((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        decl["lm_head"] = P((d, V), ("d_model", "vocab"))
+    if cfg.frontend:
+        decl["frontend_proj"] = P((cfg.frontend_dim, d), ("frontend", "d_model"))
+    if cfg.head:
+        decl["head"] = {f"layer{i}": _layer_decl(cfg, l) for i, l in enumerate(cfg.head)}
+    if cfg.num_periods:
+        period = {f"block{i}": _layer_decl(cfg, l) for i, l in enumerate(cfg.period)}
+        decl["period"] = _stack(period, cfg.num_periods)
+    if cfg.tail:
+        decl["tail"] = {f"layer{i}": _layer_decl(cfg, l) for i, l in enumerate(cfg.tail)}
+    if cfg.early_exit_periods:
+        decl["exit_heads"] = {
+            f"exit{i}": {"norm": P((d,), (None,), "ones"),
+                         "proj": P((d, V), ("d_model", "vocab"))}
+            for i in cfg.early_exit_periods}
+    return decl
+
+
+# --------------------------------------------------------------------------
+# Derivations
+# --------------------------------------------------------------------------
+
+_IS_P = lambda x: isinstance(x, P)  # noqa: E731
+
+
+def _init_leaf(p: P, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "mamba_A":
+        # S4D-real init: A = -(1..d_state), stored as log
+        n = p.shape[-1]
+        a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), p.shape)
+        return jnp.log(a).astype(dtype)
+    if p.init == "mamba_dt":
+        # dt bias such that softplus(bias) ~ U[1e-3, 1e-1]
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dtype)  # inv softplus
+    if p.init.startswith("normal:"):
+        s = float(p.init.split(":")[1])
+        return (jax.random.normal(key, p.shape, jnp.float32) * s).astype(dtype)
+    # fan_in
+    fan_in = p.shape[0] if len(p.shape) == 1 else math.prod(p.shape[:-1])
+    if "stack" in p.axes:
+        fan_in //= p.shape[0]
+    s = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * s).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    decl = declare_model(cfg)
+    leaves, treedef = jax.tree.flatten(decl, is_leaf=_IS_P)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(p, k, dtype)
+                                        for p, k in zip(leaves, keys)])
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16, mesh=None):
+    """ShapeDtypeStructs (with shardings when mesh given) for dry-run lowering."""
+    decl = declare_model(cfg)
+
+    def leaf(p: P):
+        if mesh is not None:
+            s = jax.sharding.NamedSharding(mesh, logical_to_spec(p, mesh, cfg.fsdp))
+            return jax.ShapeDtypeStruct(p.shape, dtype, sharding=s)
+        return jax.ShapeDtypeStruct(p.shape, dtype)
+
+    return jax.tree.map(leaf, decl, is_leaf=_IS_P)
+
+
+def param_specs(cfg: ModelConfig, mesh):
+    decl = declare_model(cfg)
+    return jax.tree.map(lambda p: logical_to_spec(p, mesh, cfg.fsdp), decl,
+                        is_leaf=_IS_P)
+
+
+def param_count_from_decl(cfg: ModelConfig) -> int:
+    decl = declare_model(cfg)
+    return sum(math.prod(p.shape)
+               for p in jax.tree.leaves(decl, is_leaf=_IS_P))

@@ -1,0 +1,192 @@
+"""Model stack: embeddings -> head layers -> scanned periods -> tail -> head.
+
+The repeated ``period`` runs under ``jax.lax.scan`` over weights (and cache)
+stacked on a leading ``num_periods`` dim, keeping the lowered HLO small for
+deep models.  ``cfg.remat`` wraps the period body in ``jax.checkpoint``.
+
+Entry points:
+
+  * :func:`forward`     — logits for a full sequence (train) or with cache
+                          population (prefill) or one-token decode.
+  * :func:`train_logits`— convenience wrapper returning (logits, aux).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+
+
+def _add_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+def _apply_unrolled(params, cfg, layers, x, cache, pos, mode, aux):
+    new_cache = {}
+    for i, layer in enumerate(layers):
+        key = f"layer{i}"
+        c = cache[key] if cache is not None else None
+        x, nc, a = blocks.apply_layer(params[key], cfg, layer, x, c, pos, mode)
+        aux = _add_aux(aux, a)
+        if nc is not None:
+            new_cache[key] = nc
+    return x, (new_cache or None), aux
+
+
+def _apply_periods(params, cfg: ModelConfig, x, cache, pos, mode, aux,
+                   collect_exits: bool = False):
+    """Scan over the stacked period weights (+cache)."""
+
+    def body(carry, xs):
+        xc, aux_c = carry
+        p_slice, c_slice = xs
+        nc = {}
+        for i, layer in enumerate(cfg.period):
+            key = f"block{i}"
+            c = c_slice[key] if c_slice is not None else None
+            xc, ci, a = blocks.apply_layer(p_slice[key], cfg, layer, xc, c,
+                                           pos, mode)
+            aux_c = _add_aux(aux_c, a)
+            if ci is not None:
+                nc[key] = ci
+        ys = {}
+        if nc:
+            ys["cache"] = nc
+        if collect_exits:
+            ys["hidden"] = xc
+        return (xc, aux_c), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    if cfg.unroll_periods:
+        # python loop (exact per-trip cost in HLO — used by the dry-run's
+        # scan-cost correction; see launch.dryrun)
+        carry = (x, aux)
+        ys_list = []
+        for i in range(cfg.num_periods):
+            p_i = jax.tree.map(lambda a: a[i], params["period"])
+            c_i = jax.tree.map(lambda a: a[i], cache) if cache is not None \
+                else None
+            carry, ys_i = body(carry, (p_i, c_i))
+            ys_list.append(ys_i)
+        x, aux = carry
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list) if ys_list and \
+            ys_list[0] else {}
+    else:
+        xs = (params["period"], cache)
+        (x, aux), ys = lax.scan(body, (x, aux), xs)
+    new_cache = ys.get("cache")
+    exits = ys.get("hidden")           # [num_periods, B, S, D] if collected
+    return x, new_cache, aux, exits
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def _embed(params, cfg: ModelConfig, batch, mode):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]  # gather; vocab-sharded -> GSPMD collective
+    if cfg.frontend and mode != "decode":
+        # sanctioned modality stub: precomputed frame/patch embeddings are
+        # projected into d_model and replace the first frontend_len slots.
+        emb = batch["frontend_embeds"] @ params["frontend_proj"]
+        fl = cfg.frontend_len
+        pad = x.shape[1] - fl
+        emb_full = jnp.pad(emb.astype(x.dtype), ((0, 0), (0, pad), (0, 0)))
+        is_front = (jnp.arange(x.shape[1]) < fl)[None, :, None]
+        x = jnp.where(is_front, emb_full, x)
+    return x
+
+
+def lm_proj(params, cfg: ModelConfig):
+    """The output projection matrix [D, V] (tied or separate)."""
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
+            cache=None, pos=None, return_hidden: bool = False):
+    """Returns (logits, new_cache, aux) — or, with ``return_hidden``,
+    (final-norm hidden states, new_cache, aux) so the caller can apply
+    the LM head itself (seq-chunked CE, repro.core.losses.chunked_lm_loss).
+
+    batch: {"tokens": [B,S] int32, optional "frontend_embeds": [B,fl,fd]}
+    pos:   [B,S] absolute positions (defaults to arange for train/prefill;
+           required for decode).
+    """
+    x = _embed(params, cfg, batch, mode)
+    B, S = batch["tokens"].shape
+    if pos is None:
+        if mode == "decode":
+            raise ValueError("decode requires pos")
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    new_cache = {}
+
+    if cfg.head:
+        c = cache.get("head") if cache else None
+        x, nc, aux = _apply_unrolled(params["head"], cfg, cfg.head, x, c, pos,
+                                     mode, aux)
+        if nc:
+            new_cache["head"] = nc
+
+    exits = None
+    if cfg.num_periods:
+        c = cache.get("period") if cache else None
+        collect = bool(cfg.early_exit_periods) and mode != "decode"
+        x, nc, aux, exits = _apply_periods(params, cfg, x, c, pos, mode, aux,
+                                           collect_exits=collect)
+        if nc is not None:
+            new_cache["period"] = nc
+
+    if cfg.tail:
+        c = cache.get("tail") if cache else None
+        x, nc, aux = _apply_unrolled(params["tail"], cfg, cfg.tail, x, c, pos,
+                                     mode, aux)
+        if nc:
+            new_cache["tail"] = nc
+
+    if return_hidden:
+        logits = blocks.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    else:
+        logits = _logits(params, cfg, x)
+
+    if exits is not None and cfg.early_exit_periods:
+        aux = dict(aux)
+        aux["exit_logits"] = tuple(
+            _exit_logits(params["exit_heads"][f"exit{i}"], cfg, exits[i])
+            for i in cfg.early_exit_periods)
+
+    return logits, (new_cache or None), aux
+
+
+def _exit_logits(p, cfg, h):
+    h = blocks.rmsnorm(h, p["norm"], cfg.norm_eps)
+    return h @ p["proj"]
+
+
+def train_logits(params, cfg: ModelConfig, batch):
+    logits, _, aux = forward(params, cfg, batch, mode="train")
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, batch, pos=None):
+    return forward(params, cfg, batch, mode="prefill", pos=pos)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    """token [B,1] int32; pos [B,1] int32 (shared decode position)."""
+    logits, new_cache, _ = forward(params, cfg, {"tokens": token},
+                                   mode="decode", cache=cache, pos=pos)
+    return logits, new_cache

@@ -1,0 +1,5 @@
+from repro.optim.optimizer import (Optimizer, adafactor, adamw, cosine,
+                                   get_optimizer, sgd_momentum, step_decay)
+
+__all__ = ["Optimizer", "adafactor", "adamw", "cosine", "get_optimizer",
+           "sgd_momentum", "step_decay"]

@@ -1,0 +1,153 @@
+"""Optimizers (pytree-functional, no external deps).
+
+API::
+
+    opt = sgd_momentum(momentum=0.9, weight_decay=5e-4)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, lr)
+
+Provided: SGD+momentum (the paper's optimizer), AdamW, and Adafactor
+(factored second moment, no momentum — the memory-lean choice the launcher
+uses for the trillion-parameter dry-run).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (params, grads, state, lr) -> (params, state)
+    name: str
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            step_dir = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+        else:
+            step_dir = mu
+        params = jax.tree.map(lambda p, d: (p - lr * d).astype(p.dtype),
+                              params, step_dir)
+        return params, {"mu": mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd_momentum")
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["step"] + 1
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, state["v"], grads)
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            step_dir = (mm / c1) / (jnp.sqrt(vv / c2) + eps)
+            return (p - lr * (step_dir + weight_decay * p)).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "step": t}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), no momentum.
+
+    For >=2D leaves it stores row/col statistics only (O(n+m) per (n,m)
+    matrix) — the optimizer of choice when parameters alone nearly fill
+    HBM (kimi-k2 dry-run)."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["step"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** -decay
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                precond = (vr[..., None] / jnp.maximum(denom[..., None], eps)) \
+                    * vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(precond, eps))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, {"v": new_s, "step": t}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd_momentum, "sgd_momentum": sgd_momentum,
+            "adamw": adamw, "adafactor": adafactor}[name](**kw)
+
+
+# ---- learning-rate schedules ----------------------------------------------
+
+
+def step_decay(base: float, boundaries, factor: float):
+    """The paper's schedule: lr *= factor at each boundary (epochs/steps)."""
+    bs = jnp.asarray(boundaries)
+
+    def lr(step):
+        n = jnp.sum(step >= bs)
+        return base * factor ** n
+
+    return lr
+
+
+def cosine(base: float, total_steps: int, warmup: int = 0,
+           min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = base * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

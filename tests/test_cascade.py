@@ -1,0 +1,125 @@
+"""Cascade executor + metrics (Eqs 1, 2, 7) including property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cascade, thresholds
+
+
+def _mk(n, seed=0, m=2):
+    rng = np.random.default_rng(seed)
+    confs = rng.random((m - 1, n)).astype(np.float32)
+    corrects = (rng.random((m, n)) < np.linspace(0.6, 0.9, m)[:, None])
+    costs = np.cumsum(rng.random(m).astype(np.float32) + 0.5)
+    return confs, corrects.astype(np.float32), costs
+
+
+def test_delta_zero_never_escalates():
+    confs, corrects, costs = _mk(256)
+    out = cascade.evaluate_cascade(confs, corrects, costs, np.array([[0.0]]))
+    # conf > 0 for all => everything stops at the fast model (conf>δ)
+    assert float(out["cost"][0]) == pytest.approx(costs[0], rel=1e-6)
+    assert float(out["acc"][0]) == pytest.approx(corrects[0].mean(), rel=1e-6)
+
+
+def test_delta_one_always_escalates():
+    confs, corrects, costs = _mk(256)
+    out = cascade.evaluate_cascade(confs, corrects, costs, np.array([[1.0]]))
+    assert float(out["cost"][0]) == pytest.approx(costs.sum(), rel=1e-6)
+    assert float(out["acc"][0]) == pytest.approx(corrects[1].mean(), rel=1e-6)
+
+
+def test_eq1_eq2_eq7_two_element():
+    confs, corrects, costs = _mk(512, seed=1)
+    delta = 0.42
+    acc, cost, n_exp = cascade.two_element_metrics(
+        jnp.asarray(confs[0]), jnp.asarray(corrects[0]),
+        jnp.asarray(corrects[1]), costs[0], costs[1], delta)
+    stop = confs[0] > delta
+    acc_manual = np.mean(np.where(stop, corrects[0], corrects[1]))
+    n_exp_manual = np.sum(~stop)
+    cost_manual = costs[0] + n_exp_manual / 512 * costs[1]
+    assert float(acc) == pytest.approx(acc_manual, rel=1e-6)
+    assert float(n_exp) == pytest.approx(n_exp_manual)
+    assert float(cost) == pytest.approx(cost_manual, rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 1.0))
+def test_property_cost_monotone_in_delta(seed, delta):
+    """Raising δ never lowers N^exp (Eq 1 monotonicity) and never lowers
+    MACs^casc."""
+    confs, corrects, costs = _mk(128, seed=seed % 1000)
+    d2 = min(1.0, delta + 0.25)
+    out = cascade.evaluate_cascade(confs, corrects, costs,
+                                   np.array([[delta], [d2]]))
+    assert float(out["n_exp"][1, 0]) >= float(out["n_exp"][0, 0]) - 1e-6
+    assert float(out["cost"][1]) >= float(out["cost"][0]) - 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_acc_bounded_by_oracle(seed):
+    """Cascade accuracy can never exceed the per-sample oracle (either
+    member right) nor drop below zero."""
+    confs, corrects, costs = _mk(128, seed=seed % 1000)
+    deltas = np.linspace(0, 1, 11)[:, None]
+    out = cascade.evaluate_cascade(confs, corrects, costs, deltas)
+    oracle = np.maximum(corrects[0], corrects[1]).mean()
+    assert np.all(np.asarray(out["acc"]) <= oracle + 1e-6)
+    assert np.all(np.asarray(out["acc"]) >= -1e-6)
+
+
+def test_three_element_cascade_accounting():
+    confs, corrects, costs = _mk(256, seed=2, m=3)
+    out = cascade.evaluate_cascade(confs, corrects, costs,
+                                   np.array([[0.5, 0.5]]))
+    # manual
+    active = np.ones(256)
+    acc = np.zeros(256)
+    cost = 0.0
+    for m in range(3):
+        cost += active.mean() * costs[m]
+        if m < 2:
+            stop = active * (confs[m] > 0.5)
+            acc += stop * corrects[m]
+            active = active - stop
+        else:
+            acc += active * corrects[m]
+    assert float(out["acc"][0]) == pytest.approx(acc.mean(), rel=1e-6)
+    assert float(out["cost"][0]) == pytest.approx(cost, rel=1e-6)
+
+
+def test_threshold_policies():
+    confs, corrects, costs = _mk(1024, seed=3)
+    d, acc, cost = thresholds.best_accuracy_delta(
+        confs[0], corrects[0], corrects[1], costs)
+    assert 0.0 <= d <= 1.0
+    # paper constraint policy
+    d2, acc2, cost2, feasible = thresholds.min_cost_delta(
+        confs[0], corrects[0], corrects[1], costs,
+        acc_target=corrects[1].mean())
+    if feasible:
+        assert acc2 >= corrects[1].mean() - 1e-6
+        assert cost2 <= costs.sum() + 1e-6
+
+
+def test_online_executor_matches_offline():
+    rng = np.random.default_rng(4)
+    n, k = 64, 6
+    logits_fast = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32) * 2)
+    logits_exp = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32) * 2)
+    labels = jnp.asarray(rng.integers(0, k, n))
+    delta = 0.5
+    ex = cascade.CascadeExecutor(
+        [cascade.Member("fast", 1.0, lambda b: logits_fast),
+         cascade.Member("exp", 10.0, lambda b: logits_exp)], [delta])
+    preds, info = ex(None)
+    conf = np.max(jax.nn.softmax(logits_fast, -1), -1)
+    esc = conf <= delta
+    want = np.where(esc, np.argmax(logits_exp, -1), np.argmax(logits_fast, -1))
+    np.testing.assert_array_equal(preds, want)
+    np.testing.assert_allclose(info["cost"],
+                               1.0 + esc.astype(np.float32) * 10.0)

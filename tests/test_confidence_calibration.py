@@ -1,0 +1,73 @@
+"""Confidence scores, calibration baselines, ECE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import calibration, confidence, losses
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 50))
+def test_property_scores_in_range(seed, k):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (16, k)) * 3
+    mp = confidence.max_prob(logits)
+    assert np.all(mp >= 1.0 / k - 1e-6) and np.all(mp <= 1.0 + 1e-6)
+    ec = confidence.entropy_confidence(logits)
+    assert np.all(ec >= -1e-5) and np.all(ec <= 1.0 + 1e-6)
+    mg = confidence.margin(logits)
+    assert np.all(mg >= -1e-6) and np.all(mg <= 1.0 + 1e-6)
+
+
+def test_temperature_scaling_recovers_temperature():
+    """Fitting T on logits that were miscalibrated by a known factor
+    should recover ~that factor."""
+    key = jax.random.PRNGKey(0)
+    n, k = 4000, 10
+    true_logits = jax.random.normal(key, (n, k)) * 2.0
+    labels = jax.random.categorical(jax.random.PRNGKey(1), true_logits)
+    overconfident = true_logits * 3.0         # T* = 3
+    t = calibration.fit_temperature(overconfident, labels, steps=400, lr=0.05)
+    assert 2.0 < t < 4.5
+
+
+def test_temperature_scaling_preserves_argmax_and_ranking():
+    key = jax.random.PRNGKey(2)
+    logits = jax.random.normal(key, (64, 12)) * 2
+    for t in (0.5, 2.0, 10.0):
+        np.testing.assert_array_equal(jnp.argmax(logits, -1),
+                                      jnp.argmax(logits / t, -1))
+
+
+def test_conf_head_learns_correctness():
+    """ConfNet head trained on features must separate right from wrong."""
+    key = jax.random.PRNGKey(3)
+    n, d, k = 2000, 16, 5
+    feats = jax.random.normal(key, (n, d))
+    w = jax.random.normal(jax.random.PRNGKey(4), (d, k))
+    logits = feats @ w
+    labels = jax.random.categorical(jax.random.PRNGKey(5), logits * 2)
+    head = calibration.fit_conf_head(key, feats, logits, labels,
+                                     kind="confnet", steps=300)
+    conf = calibration.conf_head_apply(head, feats)
+    correct = np.asarray(losses.correct(logits, labels))
+    assert conf[correct == 1].mean() > conf[correct == 0].mean()
+
+
+def test_ece_perfect_and_worst():
+    conf = jnp.array([0.9] * 100)
+    correct = jnp.array([1.0] * 90 + [0.0] * 10)
+    assert calibration.ece(conf, correct) == pytest.approx(0.0, abs=1e-6)
+    correct_bad = jnp.zeros(100)
+    assert calibration.ece(conf, correct_bad) == pytest.approx(0.9, abs=1e-6)
+
+
+def test_sequence_confidence_reductions():
+    tc = jnp.array([[0.9, 0.5, 0.7], [0.2, 0.9, 0.9]])
+    assert confidence.sequence_confidence(tc, reduce="mean").shape == (2,)
+    mn = confidence.sequence_confidence(tc, reduce="min")
+    np.testing.assert_allclose(mn, [0.5, 0.2])
+    pr = confidence.sequence_confidence(tc, reduce="prod")
+    np.testing.assert_allclose(pr, [0.9 * 0.5 * 0.7, 0.2 * 0.9 * 0.9],
+                               rtol=1e-5)

@@ -1,0 +1,177 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs the pure-jnp
+oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.confidence_gate import confidence_gate
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.router_gate import router_gate
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# confidence_gate
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 100), (8, 1024), (5, 4097), (1, 31),
+                                   (2, 3, 700)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_confidence_gate_sweep(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 4).astype(dtype)
+    out = confidence_gate(x, interpret=True)
+    want = ref.confidence_gate_ref(x)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(out["conf"], want["conf"], rtol=tol, atol=tol)
+    np.testing.assert_allclose(out["entropy"], want["entropy"], rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(out["logz"], want["logz"], rtol=tol, atol=tol)
+    np.testing.assert_array_equal(out["argmax"], want["argmax"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 13), st.integers(2, 3000), st.integers(0, 2 ** 31 - 1))
+def test_confidence_gate_property(rows, vocab, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 3
+    out = confidence_gate(x, interpret=True)
+    # invariants: conf in (0,1]; entropy in [0, log V]; argmax in range
+    assert np.all(out["conf"] > 0) and np.all(out["conf"] <= 1 + 1e-6)
+    assert np.all(out["entropy"] >= -1e-5)
+    assert np.all(out["entropy"] <= np.log(vocab) + 1e-4)
+    assert np.all(out["argmax"] >= 0) and np.all(out["argmax"] < vocab)
+
+
+# --------------------------------------------------------------------------
+# router_gate
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape,k", [((13, 40), 8), ((32, 384), 8),
+                                     ((4, 16, 64), 6), ((7, 100), 2),
+                                     ((8, 16), 1)])
+def test_router_gate_sweep(shape, k):
+    x = jax.random.normal(KEY, shape) * 2
+    g, i = router_gate(x, k, interpret=True)
+    gr, ir = ref.router_gate_ref(x, k)
+    np.testing.assert_array_equal(i, ir)
+    np.testing.assert_allclose(g, gr, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 100), st.integers(1, 8))
+def test_router_gate_property(seed, e, k):
+    k = min(k, e)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (6, e)) * 3
+    g, i = router_gate(x, k, interpret=True)
+    # gates renormalized to 1; indices unique per row and in range
+    np.testing.assert_allclose(np.sum(np.asarray(g), -1), 1.0, rtol=1e-5)
+    idx = np.asarray(i)
+    assert idx.min() >= 0 and idx.max() < e
+    for row in idx:
+        assert len(set(row.tolist())) == k
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KV,S,T,d,causal,window", [
+    (1, 4, 2, 128, 128, 64, True, None),
+    (2, 2, 2, 100, 100, 32, True, None),
+    (1, 4, 1, 256, 256, 64, True, 100),     # GQA kv=1 + sliding window
+    (1, 2, 2, 64, 192, 64, False, None),    # cross-length, non-causal
+    (1, 8, 2, 130, 130, 128, True, None),   # ragged tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, S, T, d, causal, window, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, H, S, d)).astype(dtype)
+    k = jax.random.normal(k2, (B, KV, T, d)).astype(dtype)
+    v = jax.random.normal(k3, (B, KV, T, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------
+# rwkv6_scan
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,T,hd", [(1, 2, 64, 32), (2, 3, 200, 64),
+                                      (1, 1, 128, 64), (1, 2, 301, 64)])
+def test_rwkv6_scan_sweep(B, H, T, hd):
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, H, T, hd)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, H, T, hd)) * 0.5))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    out = rwkv6_scan(r, k, v, w, u, interpret=True)
+    want = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+def test_rwkv6_state_continuity():
+    """Splitting the sequence across chunk boundaries must not change y."""
+    ks = jax.random.split(KEY, 5)
+    B, H, T, hd = 1, 1, 256, 32
+    r, k, v = (jax.random.normal(ks[i], (B, H, T, hd)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, H, T, hd)) * 0.3))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    full = rwkv6_scan(r, k, v, w, u, interpret=True)
+    want = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(full, want, rtol=3e-4, atol=3e-4)
+
+
+# --------------------------------------------------------------------------
+# mamba_scan
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,d,n", [(1, 64, 32, 8), (2, 150, 96, 16),
+                                     (1, 128, 600, 16), (1, 257, 64, 16)])
+def test_mamba_scan_sweep(B, T, d, n):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, T, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, d))) * 0.1
+    Bt = jax.random.normal(ks[2], (B, T, n))
+    Ct = jax.random.normal(ks[3], (B, T, n))
+    A = -jnp.exp(jax.random.normal(ks[4], (d, n)) * 0.3)
+    out = mamba_scan(x, dt, Bt, Ct, A, interpret=True)
+    want = ref.mamba_scan_ref(x, dt, Bt, Ct, A)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+def test_refs_match_model_blocks():
+    """The kernel oracles and the model's jnp substrate agree (attention)."""
+    from repro.models import blocks
+    from repro.configs.base import Attn, ModelConfig
+
+    B, S, D, H, KV, hd = 2, 32, 64, 4, 2, 16
+    cfg = ModelConfig(name="t", family="dense", d_model=D, vocab_size=16,
+                      num_heads=H, num_kv_heads=KV, head_dim=hd)
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    # blocks' einsum path: q [B,S,KV,G,hd]; k,v [B,T,KV,hd]
+    qg = q.reshape(B, KV, H // KV, S, hd).transpose(0, 3, 1, 2, 4)
+    kk = k.transpose(0, 2, 1, 3)
+    vv = v.transpose(0, 2, 1, 3)
+    causal = (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])
+    mask = causal[None, None, None]                      # [1,1,1,S,S]
+    got = blocks._gqa_scores_to_out(qg, kk, vv, mask)
+    got = got.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

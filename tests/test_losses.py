@@ -1,0 +1,100 @@
+"""Unit tests for the paper's loss terms (Eqs 3-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+from repro.core import confidence as conf_lib
+
+
+def _logits_for(labels, correct_mask, k, key, margin=5.0):
+    """Build logits whose argmax == label exactly where correct_mask."""
+    n = labels.shape[0]
+    base = jax.random.normal(key, (n, k))
+    # kill accidental argmax==label then add margin where correct
+    base = base.at[jnp.arange(n), labels].set(base.min(-1) - 1.0)
+    boost = jnp.where(correct_mask, margin + base.max(-1) - base[jnp.arange(n), labels], 0.0)
+    return base.at[jnp.arange(n), labels].add(boost)
+
+
+def test_cascade_loss_matches_equation3():
+    key = jax.random.PRNGKey(0)
+    n, k = 64, 10
+    labels = jax.random.randint(key, (n,), 0, k)
+    k1, k2 = jax.random.split(key)
+    fast_ok = jax.random.bernoulli(k1, 0.6, (n,))
+    exp_ok = jax.random.bernoulli(k2, 0.8, (n,))
+    fl = _logits_for(labels, fast_ok, k, k1)
+    el = _logits_for(labels, exp_ok, k, k2)
+    c = 0.37
+    got = losses.cascade_loss(fl, el, labels, cost_c=c)
+
+    conf = jnp.max(jax.nn.softmax(fl, -1), -1)
+    manual = jnp.mean(conf * (1 - fast_ok) + (1 - conf) * ((1 - exp_ok) + c))
+    np.testing.assert_allclose(got, manual, rtol=1e-6)
+
+
+def test_cascade_loss_gradient_direction():
+    """dL/dconf = 1[fast wrong] - 1[exp wrong] - C: pushing conf down only
+    when the expensive model would fix the error (+C tilt)."""
+    key = jax.random.PRNGKey(1)
+    n, k = 128, 5
+    labels = jax.random.randint(key, (n,), 0, k)
+    fast_ok = jnp.arange(n) % 2 == 0
+    exp_ok = jnp.arange(n) % 4 < 2          # half of fast-wrong fixed by exp
+    fl = _logits_for(labels, fast_ok, k, key)
+    el = _logits_for(labels, exp_ok, k, key)
+
+    def conf_of(fl):
+        return losses.cascade_loss(fl, el, labels, cost_c=0.0)
+
+    g = jax.grad(lambda f: conf_of(f))(fl)
+    # where fast wrong & exp right: increasing max-prob raises the loss
+    conf_grad = jnp.sum(g * jax.grad(lambda f: jnp.sum(conf_lib.max_prob(f)))(fl))
+    assert jnp.isfinite(conf_grad)
+
+
+def test_ltc_loss_reduces_to_org_when_w0():
+    key = jax.random.PRNGKey(2)
+    labels = jax.random.randint(key, (32,), 0, 7)
+    fl = jax.random.normal(key, (32, 7))
+    el = jax.random.normal(key, (32, 7))
+    l, m = losses.ltc_loss(fl, el, labels, w=0.0)
+    np.testing.assert_allclose(l, losses.cross_entropy(fl, labels), rtol=1e-6)
+
+
+def test_ltc_chain_matches_pairwise_sum():
+    key = jax.random.PRNGKey(3)
+    labels = jax.random.randint(key, (16,), 0, 4)
+    chain = [jax.random.normal(jax.random.PRNGKey(i), (16, 4))
+             for i in range(3)]
+    total, _ = losses.ltc_chain_loss(chain, labels, w=0.7, cost_c=0.2)
+    manual = losses.cross_entropy(chain[-1], labels)
+    for m in range(2):
+        manual += losses.cross_entropy(chain[m], labels)
+        manual += 0.7 * losses.cascade_loss(chain[m], chain[m + 1], labels, 0.2)
+    np.testing.assert_allclose(total, manual, rtol=1e-6)
+
+
+def test_cross_entropy_masking():
+    key = jax.random.PRNGKey(4)
+    logits = jax.random.normal(key, (4, 8, 11))
+    labels = jax.random.randint(key, (4, 8), 0, 11)
+    mask = jnp.zeros((4, 8)).at[:, :4].set(1.0)
+    l_masked = losses.cross_entropy(logits, labels, mask)
+    l_manual = losses.cross_entropy(logits[:, :4], labels[:, :4])
+    np.testing.assert_allclose(l_masked, l_manual, rtol=1e-6)
+
+
+def test_indicator_stop_gradient():
+    """Correctness indicators must not leak gradient."""
+    key = jax.random.PRNGKey(5)
+    labels = jax.random.randint(key, (8,), 0, 3)
+    el = jax.random.normal(key, (8, 3))
+
+    def f(fl):
+        return jnp.sum(losses.correct(fl, labels))
+
+    g = jax.grad(f)(jax.random.normal(key, (8, 3)))
+    np.testing.assert_array_equal(g, jnp.zeros_like(g))

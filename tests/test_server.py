@@ -1,0 +1,73 @@
+"""Production cascade server: packing, accounting, δ-from-budget."""
+import numpy as np
+import pytest
+
+from repro.core.server import (CascadeServer, ServingMember,
+                               delta_for_escalation_rate)
+
+
+def _member(name, cost, conf_fn, tag):
+    def generate(prompts):
+        B = prompts.shape[0]
+        out = np.full((B, 4), tag, np.int32)
+        conf = conf_fn(prompts)
+        return out, conf
+
+    return ServingMember(name, generate, cost)
+
+
+def test_packed_escalation_and_accounting():
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, 100, (32, 8))
+    # fast member confidence keyed off prompt parity: half escalate
+    fast = _member("fast", 1.0,
+                   lambda p: np.where(p[:, 0] % 2 == 0, 0.9, 0.1), tag=1)
+    exp = _member("exp", 10.0, lambda p: np.ones(p.shape[0]), tag=2)
+    srv = CascadeServer([fast, exp], deltas=[0.5])
+    out, handled = srv.serve(prompts)
+
+    esc = prompts[:, 0] % 2 == 1
+    np.testing.assert_array_equal(handled, esc.astype(np.int32))
+    assert (out[esc] == 2).all() and (out[~esc] == 1).all()
+
+    s = srv.summary()
+    n_esc = int(esc.sum())
+    want_cost = (32 * 1.0 + n_esc * 10.0) / 32
+    assert s["cost_per_request"] == pytest.approx(want_cost)
+    assert s["escalation_rates"][0] == pytest.approx(n_esc / 32)
+
+
+def test_three_member_chain():
+    prompts = np.arange(24).reshape(24, 1)
+    m1 = _member("s", 1.0, lambda p: (p[:, 0] % 3 > 0) * 1.0, tag=1)
+    m2 = _member("m", 5.0, lambda p: (p[:, 0] % 2 > 0) * 1.0, tag=2)
+    m3 = _member("l", 20.0, lambda p: np.ones(p.shape[0]), tag=3)
+    srv = CascadeServer([m1, m2, m3], deltas=[0.5, 0.5])
+    out, handled = srv.serve(prompts)
+    # escalate from m1 where p%3==0; of those, escalate from m2 where p%2==0
+    esc1 = prompts[:, 0] % 3 == 0
+    esc2 = esc1 & (prompts[:, 0] % 2 == 0)
+    np.testing.assert_array_equal(handled == 2, esc2)
+    np.testing.assert_array_equal(handled == 1, esc1 & ~esc2)
+    # gate stats: second gate only saw escalated-from-first traffic
+    assert srv.stats.gates[1].seen == int(esc1.sum())
+
+
+def test_stats_accumulate_across_batches():
+    fast = _member("fast", 1.0, lambda p: np.zeros(p.shape[0]), tag=1)
+    exp = _member("exp", 3.0, lambda p: np.ones(p.shape[0]), tag=2)
+    srv = CascadeServer([fast, exp], deltas=[0.5])
+    for _ in range(3):
+        srv.serve(np.zeros((4, 2), np.int32))
+    assert srv.stats.requests == 12
+    assert srv.stats.gates[0].escalated == 12     # conf 0 <= δ always
+    assert srv.summary()["cost_per_request"] == pytest.approx(4.0)
+
+
+def test_delta_for_escalation_rate():
+    confs = np.linspace(0, 1, 101)
+    d = delta_for_escalation_rate(confs, 0.3)
+    assert 0.28 <= d <= 0.32
+    # realized rate on the calibration traffic ~ target
+    assert abs((confs <= d).mean() - 0.3) < 0.02
+    assert delta_for_escalation_rate([], 0.5) == 0.5

@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests: the paper's pipeline on synthetic data.
+
+The full experiment (train zoo -> calibrate -> sweep δ -> Eq 2/7 metrics)
+at miniature scale, asserting the paper's *qualitative* claims:
+
+  1. cascade accuracy >= expensive-model accuracy at the chosen δ
+     (the §3 constraint with ε=0),
+  2. cascade cost < always-expensive cost,
+  3. LtC training produces a usable conf signal (separates fast-right
+     from fast-wrong-and-exp-right).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cascade, losses, thresholds
+from repro.core import confidence as conf_lib
+from repro.data.synthetic import teacher_task
+from repro.models import classifier as clf
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    ds = teacher_task(num_samples=12000, num_classes=10, dim=12,
+                      obs_noise=0.25, seed=1)
+    tr, va, te = ds.split((0.8, 0.1, 0.1), seed=1)
+    key = jax.random.PRNGKey(0)
+    fast_cfg = clf.MLPConfig("fast", 32, 1, 10, 12)
+    exp_cfg = clf.MLPConfig("exp", 128, 4, 10, 12)
+    exp_p = clf.train_classifier(exp_cfg, jnp.asarray(tr.x),
+                                 jnp.asarray(tr.y), key=key, epochs=8,
+                                 lr=0.03)
+    exp_logits_tr, _ = clf.predict(exp_p, jnp.asarray(tr.x))
+    fast_p = clf.train_classifier(fast_cfg, jnp.asarray(tr.x),
+                                  jnp.asarray(tr.y), key=key, epochs=8,
+                                  lr=0.03, exp_logits=exp_logits_tr,
+                                  ltc_w=1.0)
+    return dict(tr=tr, va=va, te=te, fast_cfg=fast_cfg, exp_cfg=exp_cfg,
+                fast_p=fast_p, exp_p=exp_p)
+
+
+def _eval(w, split):
+    fl, _ = clf.predict(w["fast_p"], jnp.asarray(split.x))
+    el, _ = clf.predict(w["exp_p"], jnp.asarray(split.x))
+    conf = conf_lib.max_prob(fl)
+    fc = np.asarray(losses.correct(fl, jnp.asarray(split.y)))
+    ec = np.asarray(losses.correct(el, jnp.asarray(split.y)))
+    return np.asarray(conf), fc, ec
+
+
+def test_cascade_meets_paper_constraint(tiny_world):
+    w = tiny_world
+    costs = [w["fast_cfg"].macs, w["exp_cfg"].macs]
+    conf_va, fc_va, ec_va = _eval(w, w["va"])
+    delta, _, _ = thresholds.best_accuracy_delta(conf_va, fc_va, ec_va, costs)
+
+    conf_te, fc_te, ec_te = _eval(w, w["te"])
+    acc, cost, n_exp = cascade.two_element_metrics(
+        jnp.asarray(conf_te), jnp.asarray(fc_te), jnp.asarray(ec_te),
+        costs[0], costs[1], delta)
+    acc_exp = ec_te.mean()
+    # paper §3 constraint (ε=0, small-sample slack two σ)
+    sigma = np.sqrt(acc_exp * (1 - acc_exp) / len(fc_te))
+    assert float(acc) >= acc_exp - 2 * sigma
+    # cost strictly below always-escalate
+    assert float(cost) < costs[0] + costs[1]
+    assert 0 <= float(n_exp) <= len(fc_te)
+
+
+def test_ltc_confidence_separates_cases(tiny_world):
+    """Paper Fig 5: conf should be high when the fast model is right, and
+    (relatively) low when only the expensive model is right."""
+    w = tiny_world
+    conf, fc, ec = _eval(w, w["te"])
+    fast_right = conf[fc == 1]
+    exp_only = conf[(fc == 0) & (ec == 1)]
+    if len(exp_only) > 10:
+        assert fast_right.mean() > exp_only.mean()
+
+
+def test_expensive_beats_fast(tiny_world):
+    w = tiny_world
+    _, fc, ec = _eval(w, w["te"])
+    assert ec.mean() > fc.mean() + 0.01
