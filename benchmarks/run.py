@@ -12,9 +12,10 @@ import time
 import traceback
 
 from benchmarks import (fig3_splitting, fig4_params, fig5_histograms,
-                        roofline, table1_models, table23_cascade,
-                        table4_three_element, table5_hard_task,
-                        table6_accuracy_effect, table7_llm_cascade)
+                        roofline, serving_throughput, table1_models,
+                        table23_cascade, table4_three_element,
+                        table5_hard_task, table6_accuracy_effect,
+                        table7_llm_cascade)
 
 ARTIFACTS = {
     "table1": table1_models.main,
@@ -27,6 +28,7 @@ ARTIFACTS = {
     "fig4": fig4_params.main,
     "fig5": fig5_histograms.main,
     "roofline": roofline.main,
+    "serving": serving_throughput.main,
 }
 
 

@@ -1,0 +1,72 @@
+"""Serving throughput benchmark: the async cascade engine under Poisson
+traffic, swept over offered load.
+
+Emits one ``BENCH {json}`` line (and a json file) with throughput,
+latency percentiles, escalation rate, and Eq 7 cascade-vs-always-expensive
+FLOPs per request — the start of the serving perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.serving_throughput
+
+Scale knobs: REPRO_SERVE_BENCH_{REQUESTS,SLOTS,GEN_LEN} (smoke defaults).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+REQUESTS = int(os.environ.get("REPRO_SERVE_BENCH_REQUESTS", "48"))
+SLOTS = int(os.environ.get("REPRO_SERVE_BENCH_SLOTS", "8"))
+GEN_LEN = int(os.environ.get("REPRO_SERVE_BENCH_GEN_LEN", "12"))
+RATES = (4.0, 16.0)
+OUT = os.environ.get("REPRO_SERVE_BENCH_OUT",
+                     "experiments/bench/serving_throughput.json")
+
+
+def main() -> None:
+    from repro.launch import serve_async
+
+    points = []
+    for rate in RATES:
+        args = serve_async.make_parser().parse_args([
+            "--requests", str(REQUESTS), "--rate", str(rate),
+            "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
+            "--prompt-len", "16",
+        ])
+        t0 = time.time()
+        s = serve_async.run(args)
+        points.append({
+            "rate": rate,
+            "requests": s["requests"],
+            "throughput": s["throughput"],
+            "latency_p50": s["latency_p50"],
+            "latency_p95": s["latency_p95"],
+            "ttft_p50": s["ttft_p50"],
+            "escalation_rate": s["escalation_rates"][0],
+            "tier_utilization": s["tier_utilization"],
+            "flops_per_request_cascade": s["flops_per_request_cascade"],
+            "flops_per_request_always_expensive":
+                s["flops_per_request_always_expensive"],
+            "wall_s": time.time() - t0,
+        })
+        print(f"rate={rate}: throughput {s['throughput']:.2f} req/s, "
+              f"p50 {s['latency_p50']:.3f}s, p95 {s['latency_p95']:.3f}s, "
+              f"esc {s['escalation_rates'][0]:.3f}", flush=True)
+
+    bench = {
+        "bench": "serving_throughput",
+        "slots": SLOTS,
+        "gen_len": GEN_LEN,
+        "points": points,
+        "flops_saving_vs_always_expensive": [
+            1.0 - p["flops_per_request_cascade"]
+            / p["flops_per_request_always_expensive"] for p in points],
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(bench, f, indent=2, default=float)
+    print("BENCH " + json.dumps(bench, default=float))
+
+
+if __name__ == "__main__":
+    main()

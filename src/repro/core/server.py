@@ -78,6 +78,10 @@ class CascadeServer:
         """prompts [B, P] -> (outputs [B, G], member_index [B])."""
         prompts = np.asarray(prompts)
         B = prompts.shape[0]
+        if B == 0:
+            # no member is invoked, so the output length is unknowable:
+            # return an empty [0, 0] outputs/handled_by pair
+            return np.zeros((0, 0), np.int32), np.zeros(0, np.int32)
         self.stats.requests += B
 
         active_idx = np.arange(B)

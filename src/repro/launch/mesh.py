@@ -21,8 +21,11 @@ ICI_BW = 50e9                   # bytes/s per link
 
 
 def _mk(shape, axes):
-    kinds = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=kinds)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:           # jax >= 0.5
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)   # 0.4.x: Auto is the only mode
 
 
 def make_production_mesh(*, multi_pod: bool = False):

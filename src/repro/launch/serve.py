@@ -2,18 +2,20 @@
 low-confidence sequences to an expensive LLM (the paper's system, Fig 1,
 with LLMs as the members).
 
-Flow per batch of requests:
+:func:`serve_cascade` is a thin compatibility wrapper: the decode loop is
+driven by :class:`repro.serving.CascadeEngine` (continuous batching over
+KV slot pools, per-request gating, packed escalation queues).  Flow per
+request:
 
-  1. fast model: prefill prompt -> greedy decode `gen_len` tokens, per-token
+  1. fast tier: prefill prompt -> greedy decode `gen_len` tokens, per-token
      confidence from the fused gate (max softmax prob — the paper's conf).
   2. sequence confidence = aggregate of token confs (mean by default).
-  3. sequences with conf <= δ are escalated: the expensive model re-decodes
-     them; Eq 7 cost accounting uses per-member FLOPs/token with
-     N^exp = #escalated.
+  3. sequences with conf <= δ are escalated: the expensive tier re-decodes
+     them as dense packed sub-batches; Eq 7 cost accounting uses
+     per-member FLOPs/token with N^exp = #escalated.
 
-`--pack` additionally demonstrates escalation packing: escalated rows are
-gathered into a dense sub-batch before the expensive pass (what a real
-deployment sends over the wire / across the pod axis).
+For request-level asynchronous serving (Poisson arrivals, latency
+percentiles, escalation budgets) use ``repro.launch.serve_async``.
 """
 from __future__ import annotations
 
@@ -30,6 +32,8 @@ from repro.core import confidence as conf_lib
 from repro.data import bigram_lm
 from repro.kernels import ops as kernel_ops
 from repro.models import init_cache, init_params, transformer
+from repro.serving import CascadeEngine, TierSpec
+from repro.serving.engine import VirtualClock
 
 
 @dataclass
@@ -93,7 +97,18 @@ def serve_cascade(fast_arch="gemma3-1b", exp_arch="phi4-mini-3.8b", *,
                   variant="smoke", fast_variant=None, exp_variant=None,
                   batch=8, prompt_len=32, gen_len=16,
                   delta=0.5, seed=0, fast_params=None, exp_params=None,
-                  use_gate_kernel=False, pack=False, verbose=True):
+                  use_gate_kernel=False, pack=False, verbose=True,
+                  slots=None):
+    """Compatibility wrapper over :class:`repro.serving.CascadeEngine`.
+
+    All `batch` requests arrive at t=0 and are drained to completion;
+    returns the old contract ``(out_tokens [B,G], seq_conf [B],
+    ServeStats)``.  ``pack`` is accepted for backwards compatibility —
+    the engine always packs escalations densely.  ``slots`` bounds the
+    per-tier KV slot pools (default: `batch`, i.e. the old synchronous
+    behaviour; smaller values exercise continuous batching).
+    """
+    del pack  # escalation is always packed by the engine
     fast_cfg = get_config(fast_arch,
                           variant if fast_variant is None else fast_variant)
     exp_cfg = get_config(exp_arch,
@@ -107,29 +122,25 @@ def serve_cascade(fast_arch="gemma3-1b", exp_arch="phi4-mini-3.8b", *,
         exp_params = init_params(exp_cfg, jax.random.PRNGKey(seed + 1),
                                  jnp.float32)
 
-    prompts = jnp.asarray(bigram_lm(num_seqs=batch, seq_len=prompt_len,
-                                    vocab=vocab, seed=seed))
+    prompts = np.asarray(bigram_lm(num_seqs=batch, seq_len=prompt_len,
+                                   vocab=vocab, seed=seed))
 
     t0 = time.time()
-    fast_tokens, token_conf = greedy_decode(fast_cfg, fast_params, prompts,
-                                            gen_len,
-                                            use_gate_kernel=use_gate_kernel)
-    seq_conf = conf_lib.sequence_confidence(token_conf, reduce="mean")
-    escalate = seq_conf <= delta
-    n_exp = int(jnp.sum(escalate))
+    engine = CascadeEngine(
+        [TierSpec("fast", fast_cfg, fast_params),
+         TierSpec("exp", exp_cfg, exp_params)],
+        slots=batch if slots is None else slots,
+        prompt_len=prompt_len, gen_len=gen_len, deltas=[delta],
+        use_gate_kernel=use_gate_kernel, clock=VirtualClock())
+    for p in prompts:
+        engine.submit(p, arrival_time=0.0)
+    engine.run()
 
-    out_tokens = fast_tokens
-    if n_exp:
-        if pack:
-            idx = jnp.nonzero(escalate, size=batch, fill_value=0)[0][:n_exp]
-            sub_prompts = prompts[idx]
-            exp_tokens, _ = greedy_decode(exp_cfg, exp_params, sub_prompts,
-                                          gen_len)
-            out_tokens = out_tokens.at[idx].set(exp_tokens)
-        else:
-            exp_tokens, _ = greedy_decode(exp_cfg, exp_params, prompts,
-                                          gen_len)
-            out_tokens = jnp.where(escalate[:, None], exp_tokens, fast_tokens)
+    out_tokens = np.stack([np.asarray(r.tokens, np.int32)
+                           for r in engine.requests])
+    seq_conf = np.asarray([r.seq_conf_by_tier[0] for r in engine.requests],
+                          np.float32)
+    n_exp = engine.scheduler.gate_stats[0].escalated
 
     # Eq 7 accounting: FLOPs per generated token = 2 * active params
     flops_fast = 2.0 * fast_cfg.active_param_count() * gen_len
@@ -142,7 +153,7 @@ def serve_cascade(fast_arch="gemma3-1b", exp_arch="phi4-mini-3.8b", *,
         print(f"  FLOPs/token: fast={flops_fast/gen_len:.3e} "
               f"exp={flops_exp/gen_len:.3e} "
               f"cascade={stats.flops_cascade/gen_len:.3e}")
-    return out_tokens, seq_conf, stats
+    return jnp.asarray(out_tokens), jnp.asarray(seq_conf), stats
 
 
 def main():
@@ -156,12 +167,16 @@ def main():
     ap.add_argument("--delta", type=float, default=0.5)
     ap.add_argument("--gate-kernel", action="store_true",
                     help="use the Pallas confidence_gate (interpret on CPU)")
-    ap.add_argument("--pack", action="store_true")
+    ap.add_argument("--pack", action="store_true",
+                    help="(compat flag; the engine always packs)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="per-tier KV slot pool size (default: batch)")
     args = ap.parse_args()
     serve_cascade(args.fast, args.expensive, variant=args.variant,
                   batch=args.batch, prompt_len=args.prompt_len,
                   gen_len=args.gen_len, delta=args.delta,
-                  use_gate_kernel=args.gate_kernel, pack=args.pack)
+                  use_gate_kernel=args.gate_kernel, pack=args.pack,
+                  slots=args.slots)
 
 
 if __name__ == "__main__":

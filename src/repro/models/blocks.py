@@ -155,26 +155,33 @@ def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode):
     k = kr
 
     if mode == "decode":
-        # one new token (S == 1) against a fixed-size cache
-        p0 = pos[0, 0]  # static batching: all rows share the decode position
+        # One new token (S == 1) against a fixed-size cache.  Each row
+        # carries its own decode position (continuous batching: slots in
+        # the serving pool are at different depths), so the cache write is
+        # a per-row scatter and the causal mask is per-row.  With a shared
+        # position this is numerically identical to the old
+        # dynamic_update_slice path.
+        rows = jnp.arange(B)
+        p_row = pos[:, 0]                               # [B]
         quant = "k_scale" in cache
         if quant:
             kq, ksc = _quant_i8(k)
             vq, vsc = _quant_i8(v)
-            ck = lax.dynamic_update_slice(cache["k"], kq, (0, p0, 0, 0))
-            cv = lax.dynamic_update_slice(cache["v"], vq, (0, p0, 0, 0))
-            cks = lax.dynamic_update_slice(cache["k_scale"], ksc, (0, p0, 0))
-            cvs = lax.dynamic_update_slice(cache["v_scale"], vsc, (0, p0, 0))
+            ck = cache["k"].at[rows, p_row].set(kq[:, 0])
+            cv = cache["v"].at[rows, p_row].set(vq[:, 0])
+            cks = cache["k_scale"].at[rows, p_row].set(ksc[:, 0])
+            cvs = cache["v_scale"].at[rows, p_row].set(vsc[:, 0])
         else:
-            ck = lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, p0, 0, 0))
-            cv = lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, p0, 0, 0))
+            ck = cache["k"].at[rows, p_row].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, p_row].set(
+                v[:, 0].astype(cache["v"].dtype))
         T = ck.shape[1]
         idx = jnp.arange(T)[None, None, None, None, :]
-        mask = idx <= p0
+        pb = p_row[:, None, None, None, None]           # [B,1,1,1,1]
+        mask = idx <= pb
         if spec.window is not None:
-            mask &= idx > p0 - spec.window
+            mask &= idx > pb - spec.window
         if quant:
             out = _gqa_scores_to_out(q, ck, cv, mask, k_scale=cks,
                                      v_scale=cvs)

@@ -1,0 +1,22 @@
+"""Asynchronous cascade serving runtime.
+
+Request-level scheduling for the paper's cascade (Fig 1, Eqs 1/2/7):
+continuous batching over fixed slot pools, per-request confidence gating,
+and escalation queues feeding the expensive members as packed sub-batches.
+
+  * :mod:`repro.serving.request`   — request lifecycle state machine
+  * :mod:`repro.serving.slots`     — paged KV-cache slot pools (free-list)
+  * :mod:`repro.serving.scheduler` — continuous batching + escalation queues
+  * :mod:`repro.serving.metrics`   — latency/throughput/Eq 7 accounting
+  * :mod:`repro.serving.engine`    — CascadeEngine tying tiers together
+"""
+from repro.serving.engine import CascadeEngine, TierSpec  # noqa: F401
+from repro.serving.metrics import ServingMetrics  # noqa: F401
+from repro.serving.request import Request, RequestState  # noqa: F401
+from repro.serving.scheduler import (CascadeScheduler, GateSpec)  # noqa: F401
+from repro.serving.slots import SlotAllocator, TierSlotPool  # noqa: F401
+
+__all__ = [
+    "CascadeEngine", "TierSpec", "ServingMetrics", "Request", "RequestState",
+    "CascadeScheduler", "GateSpec", "SlotAllocator", "TierSlotPool",
+]

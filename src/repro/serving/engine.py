@@ -1,0 +1,307 @@
+"""CascadeEngine: request-level cascade inference.
+
+One engine step (tick) per tier:
+
+  1. **admit** — pop queued/escalated requests into free KV slots
+     (continuous batching: admission happens while other slots are mid
+     decode).  Admitted prompts are packed densely, prefilled in one
+     batch, and their caches scattered into the tier's slot arena; the
+     first token (argmax of the prefill logits) is emitted immediately.
+  2. **decode** — one fused decode step over the whole slot pool (fixed
+     shape => a single compiled program per tier).  Per-token confidence
+     comes from the Pallas :func:`repro.kernels.ops.confidence_gate`
+     (max-softmax-prob, the paper's conf) or a jnp fallback.
+  3. **gate** — requests that hit ``gen_len`` aggregate their token
+     confidences; at non-final tiers the scheduler's gate (fixed δ or
+     escalation budget) decides DONE vs ESCALATED.  Escalated requests
+     join the next tier's queue and are re-decoded there from scratch.
+
+The clock is injectable: ``WallClock`` for real Poisson traffic,
+``VirtualClock`` for deterministic tests (one tick per step).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import confidence as conf_lib
+from repro.kernels import ops as kernel_ops
+from repro.models import transformer
+from repro.serving.metrics import ServingMetrics, TierCost
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import CascadeScheduler, GateSpec
+from repro.serving.slots import TierSlotPool
+
+
+@dataclass
+class TierSpec:
+    name: str
+    cfg: ModelConfig
+    params: object
+
+    def flops_per_request(self, gen_len: int) -> float:
+        """Eq 7 cost: FLOPs/token = 2 * active params (as in launch.serve)."""
+        return 2.0 * self.cfg.active_param_count() * gen_len
+
+
+class WallClock:
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def wait_until(self, t: float) -> None:
+        time.sleep(min(max(t - self.now(), 0.0), 0.05))
+
+    def step_done(self) -> None:
+        pass
+
+
+class VirtualClock:
+    """Deterministic clock: one tick per engine step."""
+
+    def __init__(self, dt: float = 1.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def now(self) -> float:
+        return self.t
+
+    def wait_until(self, t: float) -> None:
+        self.t = max(self.t, t)
+
+    def step_done(self) -> None:
+        self.t += self.dt
+
+
+class _TierRuntime:
+    """Per-tier compiled functions + host-side slot state."""
+
+    def __init__(self, spec: TierSpec, capacity: int, prompt_len: int,
+                 max_seq: int, use_gate_kernel: bool):
+        self.spec = spec
+        self.capacity = capacity
+        self.prompt_len = prompt_len
+        self.pool = TierSlotPool(spec.cfg, capacity, max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * capacity
+        self.tok = np.zeros(capacity, np.int32)
+        self.pos = np.zeros(capacity, np.int32)
+        cfg = spec.cfg
+
+        def pick(logits2d):
+            if use_gate_kernel:
+                gate = kernel_ops.confidence_gate(logits2d)
+                return gate["argmax"].astype(jnp.int32), gate["conf"]
+            return (jnp.argmax(logits2d, -1).astype(jnp.int32),
+                    conf_lib.max_prob(logits2d))
+
+        def prefill_fn(params, prompts):
+            batch = {"tokens": prompts}
+            if cfg.frontend:
+                batch["frontend_embeds"] = jnp.zeros(
+                    (prompts.shape[0], cfg.frontend_len, cfg.frontend_dim),
+                    jnp.float32)
+            logits, part_cache, _ = transformer.forward(
+                params, cfg, batch, mode="prefill")
+            tok, conf = pick(logits[:, -1])
+            return part_cache, tok, conf
+
+        def step_fn(params, tok, cache, pos):
+            logits, new_cache = transformer.decode_step(
+                params, cfg, tok, cache, pos)
+            nxt, conf = pick(logits[:, 0])
+            return nxt, conf, new_cache
+
+        self.prefill_fn = jax.jit(prefill_fn)
+        # Donate the cache so XLA updates the slot arena in place instead
+        # of copying it every token (2x peak cache memory otherwise).  CPU
+        # ignores donation and warns, so only donate on accelerators.
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self.step_fn = jax.jit(step_fn, donate_argnums=donate)
+
+    def occupied(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is not None]
+
+    def decoding(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req)
+                if r is not None and r.state is RequestState.DECODE
+                and not r.decode_finished]
+
+
+class CascadeEngine:
+    """M-tier cascade with continuous batching and per-request gating."""
+
+    def __init__(self, tiers: Sequence[TierSpec], *,
+                 slots: int | Sequence[int] = 8,
+                 prompt_len: int = 32, gen_len: int = 16,
+                 deltas: Optional[Sequence[float]] = None,
+                 escalation_budget: Optional[float] = None,
+                 conf_reduce: str = "mean",
+                 use_gate_kernel: bool = True,
+                 clock=None):
+        if not tiers:
+            raise ValueError("need at least one tier")
+        self.tiers = list(tiers)
+        m = len(self.tiers)
+        slots_per_tier = ([int(slots)] * m if np.isscalar(slots)
+                          else [int(s) for s in slots])
+        if deltas is not None:
+            gates = [GateSpec(delta=float(d)) for d in deltas]
+        elif escalation_budget is not None:
+            gates = [GateSpec(budget=float(escalation_budget))
+                     for _ in range(m - 1)]
+        else:
+            gates = [GateSpec(delta=0.5) for _ in range(m - 1)]
+        if len(gates) != m - 1:
+            raise ValueError("one gate per non-final tier")
+
+        self.prompt_len = prompt_len
+        self.gen_len = gen_len
+        self.conf_reduce = conf_reduce
+        self.scheduler = CascadeScheduler(slots_per_tier, gates)
+        self.metrics = ServingMetrics(
+            [TierCost(t.name, t.flops_per_request(gen_len))
+             for t in self.tiers], slots_per_tier)
+        self.clock = clock if clock is not None else WallClock()
+        max_seq = prompt_len + gen_len
+        self.runtimes = [
+            _TierRuntime(spec, cap, prompt_len, max_seq, use_gate_kernel)
+            for spec, cap in zip(self.tiers, slots_per_tier)]
+        self.requests: List[Request] = []
+        self._rid = 0
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, prompt, arrival_time: float = 0.0) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.shape != (self.prompt_len,):
+            raise ValueError(
+                f"prompt must be [{self.prompt_len}], got {prompt.shape} "
+                "(the packed prefill batches uniform prompt lengths)")
+        req = Request(rid=self._rid, prompt=prompt, gen_len=self.gen_len,
+                      arrival_time=float(arrival_time))
+        self._rid += 1
+        self.requests.append(req)
+        self.scheduler.submit(req)
+        return req
+
+    # -- one engine tick ---------------------------------------------------
+
+    def _admit(self, tier: int, now: float) -> None:
+        rt = self.runtimes[tier]
+        reqs, slot_ids = self.scheduler.admit(tier, now)
+        if not reqs:
+            return
+        self.metrics.record_admission(tier, len(reqs))
+        prompts = np.zeros((rt.capacity, self.prompt_len), np.int32)
+        for i, req in enumerate(reqs):
+            prompts[i] = req.prompt
+        part_cache, ftok, fconf = rt.prefill_fn(
+            rt.spec.params, jnp.asarray(prompts))
+        rt.pool.write_prefill(slot_ids, part_cache)
+        ftok = np.asarray(ftok)
+        fconf = np.asarray(fconf)
+        for i, (req, slot) in enumerate(zip(reqs, slot_ids)):
+            req.start_decode()
+            req.emit(int(ftok[i]), float(fconf[i]), now)
+            rt.slot_req[slot] = req
+            rt.tok[slot] = ftok[i]
+            rt.pos[slot] = self.prompt_len   # next decode writes here
+
+    def _decode(self, tier: int, now: float) -> int:
+        rt = self.runtimes[tier]
+        decoding = rt.decoding()
+        if not decoding:
+            return 0
+        nxt, conf, rt.pool.cache = rt.step_fn(
+            rt.spec.params, jnp.asarray(rt.tok[:, None]),
+            rt.pool.cache, jnp.asarray(rt.pos[:, None]))
+        nxt = np.asarray(nxt)
+        conf = np.asarray(conf)
+        for slot in decoding:
+            req = rt.slot_req[slot]
+            req.emit(int(nxt[slot]), float(conf[slot]), now)
+            rt.tok[slot] = nxt[slot]
+            rt.pos[slot] += 1
+        return len(decoding)
+
+    def _finish(self, tier: int, now: float) -> None:
+        rt = self.runtimes[tier]
+        last = tier == len(self.tiers) - 1
+        for slot in rt.occupied():
+            req = rt.slot_req[slot]
+            if not (req.state is RequestState.DECODE and req.decode_finished):
+                continue
+            seq_conf = req.gate(self.conf_reduce)
+            if not last and self.scheduler.gate_decision(tier, seq_conf):
+                req.escalate()
+                self.scheduler.push_escalated(req)
+            else:
+                req.complete(now)
+                self.metrics.record_completion(req)
+            rt.slot_req[slot] = None
+            rt.tok[slot] = 0
+            rt.pos[slot] = 0
+            self.scheduler.release(tier, slot)
+
+    def step(self, now: Optional[float] = None) -> None:
+        now = self.clock.now() if now is None else now
+        active = []
+        for tier in range(len(self.tiers)):
+            self._admit(tier, now)
+            active.append(self._decode(tier, now))
+            self._finish(tier, now)
+        # Trailing admission pass: requests escalated this tick enter the
+        # next tier's slots immediately (their decode starts next tick),
+        # keeping the invariant `free slot => empty queue` at tick ends.
+        for tier in range(len(self.tiers)):
+            self._admit(tier, now)
+        self.metrics.record_step(active, now)
+        self.metrics.sync_gate_stats(self.scheduler.gate_stats)
+
+    # -- driver ------------------------------------------------------------
+
+    def _any_occupied(self) -> bool:
+        return any(rt.occupied() for rt in self.runtimes)
+
+    def _done(self) -> bool:
+        return self.scheduler.pending == 0 and not self._any_occupied()
+
+    def warmup(self) -> None:
+        """Trigger tier compiles before the clock starts: one prefill +
+        one decode per tier on dummy data.  The decode's returned cache is
+        rebound (step_fn donates its cache input on accelerators); the
+        dummy write lands at position 0 of free rows, which the next
+        occupant's prefill overwrites."""
+        for rt in self.runtimes:
+            prompts = jnp.zeros((rt.capacity, self.prompt_len), jnp.int32)
+            rt.prefill_fn(rt.spec.params, prompts)
+            zeros = jnp.zeros((rt.capacity, 1), jnp.int32)
+            _, _, rt.pool.cache = rt.step_fn(rt.spec.params, zeros,
+                                             rt.pool.cache, zeros)
+
+    def run(self, max_steps: int = 1_000_000) -> dict:
+        """Drive to completion; returns ``metrics.summary()``."""
+        steps = 0
+        while not self._done():
+            now = self.clock.now()
+            if not self._any_occupied() and not any(
+                    self.scheduler.admissible(t, now)
+                    for t in range(len(self.tiers))):
+                # idle: jump/sleep to the earliest pending arrival
+                nxt = min(r.arrival_time for r in self.scheduler.queues[0])
+                self.clock.wait_until(nxt)
+                continue
+            self.step(self.clock.now())
+            self.clock.step_done()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("engine did not drain (scheduler stuck?)")
+        return self.metrics.summary()

@@ -1,0 +1,119 @@
+"""Serving metrics: latency percentiles, throughput, utilization, and the
+paper's Eq 7 cost accounting — unified with
+:class:`repro.core.server.ServerStats` so offline (`CascadeServer`) and
+online (`CascadeEngine`) runs report through the same structures.
+
+Cost convention (matches ``CascadeServer.summary`` and Eq 7)::
+
+    cost/request  = Σ_m (N_m / N) · cost_m      N_m = requests reaching m
+    always-exp    = Σ_m cost_m                  (escalate everything)
+    always-fast   = cost_0
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.server import GateStats, ServerStats
+from repro.serving.request import Request
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    if not values:
+        return float("nan")
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+@dataclass
+class TierCost:
+    name: str
+    flops_per_request: float
+
+
+class ServingMetrics:
+    """Aggregates per-request records + per-step occupancy counters."""
+
+    def __init__(self, tiers: Sequence[TierCost],
+                 slots_per_tier: Sequence[int]):
+        self.tiers = list(tiers)
+        self.slots_per_tier = list(slots_per_tier)
+        n_gates = len(tiers) - 1
+        self.stats = ServerStats(gates=[GateStats() for _ in range(n_gates)])
+        self.latencies: List[float] = []
+        self.ttfts: List[float] = []
+        self.tier_requests = [0] * len(tiers)   # N_m: requests reaching m
+        self.busy_slot_steps = [0] * len(tiers)
+        self.steps = 0
+        # throughput window: first arrival -> last completion (makespan),
+        # not first->last engine step (zero for single-step runs)
+        self.first_arrival: Optional[float] = None
+        self.last_finish: Optional[float] = None
+
+    # -- recording ---------------------------------------------------------
+
+    def record_admission(self, tier: int, n: int = 1) -> None:
+        self.tier_requests[tier] += n
+        self.stats.cost += self.tiers[tier].flops_per_request * n
+        if tier == 0:
+            self.stats.requests += n
+
+    def record_step(self, active_per_tier: Sequence[int], now: float) -> None:
+        self.steps += 1
+        for t, n in enumerate(active_per_tier):
+            self.busy_slot_steps[t] += n
+
+    def record_completion(self, req: Request) -> None:
+        self.latencies.append(req.latency)
+        if req.ttft is not None:
+            self.ttfts.append(req.ttft)
+        if self.first_arrival is None \
+                or req.arrival_time < self.first_arrival:
+            self.first_arrival = req.arrival_time
+        if self.last_finish is None or req.finish_time > self.last_finish:
+            self.last_finish = req.finish_time
+
+    def sync_gate_stats(self, gate_stats: Sequence[GateStats]) -> None:
+        """Mirror the scheduler's gate counters into ServerStats."""
+        for mine, theirs in zip(self.stats.gates, gate_stats):
+            mine.seen = theirs.seen
+            mine.escalated = theirs.escalated
+
+    # -- summary -----------------------------------------------------------
+
+    @property
+    def elapsed(self) -> float:
+        """First arrival -> last completion (makespan)."""
+        if self.first_arrival is None or self.last_finish is None:
+            return 0.0
+        return self.last_finish - self.first_arrival
+
+    def summary(self) -> dict:
+        n = max(self.stats.requests, 1)
+        elapsed = self.elapsed
+        flops_cascade = self.stats.cost / n          # Eq 7 realized
+        flops_always_exp = sum(t.flops_per_request for t in self.tiers)
+        util = [self.busy_slot_steps[t] / max(self.steps * c, 1)
+                for t, c in enumerate(self.slots_per_tier)]
+        return {
+            "requests": self.stats.requests,
+            "completed": len(self.latencies),
+            "steps": self.steps,
+            "elapsed": elapsed,
+            "throughput": (len(self.latencies) / elapsed
+                           if elapsed > 0 else float("nan")),
+            "latency_p50": percentile(self.latencies, 50),
+            "latency_p95": percentile(self.latencies, 95),
+            "ttft_p50": percentile(self.ttfts, 50),
+            "ttft_p95": percentile(self.ttfts, 95),
+            "tier_names": [t.name for t in self.tiers],
+            "tier_requests": list(self.tier_requests),
+            "tier_utilization": util,
+            "escalation_rates": [g.escalation_rate
+                                 for g in self.stats.gates],
+            "flops_per_request_cascade": flops_cascade,
+            "flops_per_request_always_fast":
+                self.tiers[0].flops_per_request,
+            "flops_per_request_always_expensive": flops_always_exp,
+        }

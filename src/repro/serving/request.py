@@ -1,0 +1,145 @@
+"""Request lifecycle for the async cascade runtime.
+
+A request moves through::
+
+    QUEUED -> PREFILL -> DECODE -> GATED -+-> DONE
+       ^                                  |
+       '---------- ESCALATED <------------'   (conf <= δ, next tier)
+
+Escalated requests re-enter QUEUED-like waiting in the next tier's
+escalation queue and are re-prefilled there (the expensive member decodes
+from scratch, as in the paper's cascade — its quality, not the fast
+model's draft, is what the gate bought).
+
+Timestamps are recorded in the engine's clock domain (wall seconds or
+virtual ticks): arrival, admission per tier, first token, finish.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    GATED = "gated"
+    ESCALATED = "escalated"
+    DONE = "done"
+
+
+_ALLOWED = {
+    RequestState.QUEUED: {RequestState.PREFILL},
+    RequestState.PREFILL: {RequestState.DECODE},
+    RequestState.DECODE: {RequestState.DECODE, RequestState.GATED},
+    RequestState.GATED: {RequestState.ESCALATED, RequestState.DONE},
+    RequestState.ESCALATED: {RequestState.PREFILL},
+    RequestState.DONE: set(),
+}
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # [P] int32
+    gen_len: int
+    arrival_time: float
+    state: RequestState = RequestState.QUEUED
+    tier: int = 0                         # current cascade member index
+    slot: Optional[int] = None            # KV slot in the current tier pool
+
+    tokens: List[int] = field(default_factory=list)       # current tier
+    token_conf: List[float] = field(default_factory=list)
+    seq_conf_by_tier: List[float] = field(default_factory=list)
+    admit_times: List[float] = field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    def _to(self, state: RequestState) -> None:
+        if state not in _ALLOWED[self.state]:
+            raise ValueError(
+                f"request {self.rid}: illegal transition "
+                f"{self.state.value} -> {state.value}")
+        self.state = state
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def admit(self, tier: int, slot: int, now: float) -> None:
+        """QUEUED/ESCALATED -> PREFILL in `tier` occupying `slot`."""
+        self._to(RequestState.PREFILL)
+        self.tier = tier
+        self.slot = slot
+        self.tokens = []
+        self.token_conf = []
+        self.admit_times.append(now)
+
+    def start_decode(self) -> None:
+        self._to(RequestState.DECODE)
+
+    def emit(self, token: int, conf: float, now: float) -> None:
+        """Record one generated token + its gate confidence."""
+        if self.state is not RequestState.DECODE:
+            raise ValueError(f"request {self.rid}: emit in {self.state.value}")
+        self.tokens.append(int(token))
+        self.token_conf.append(float(conf))
+        if self.first_token_time is None:
+            self.first_token_time = now
+
+    @property
+    def decode_finished(self) -> bool:
+        return len(self.tokens) >= self.gen_len
+
+    def gate(self, reduce: str = "mean") -> float:
+        """DECODE -> GATED; returns the aggregated sequence confidence."""
+        self._to(RequestState.GATED)
+        conf = sequence_confidence(self.token_conf, reduce)
+        self.seq_conf_by_tier.append(conf)
+        return conf
+
+    def escalate(self) -> None:
+        """GATED -> ESCALATED (will queue for tier+1)."""
+        self._to(RequestState.ESCALATED)
+        self.slot = None
+
+    def complete(self, now: float) -> None:
+        self._to(RequestState.DONE)
+        self.slot = None
+        self.finish_time = now
+
+    # -- derived metrics ---------------------------------------------------
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first (fast-tier) token."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def num_escalations(self) -> int:
+        return self.tier
+
+
+def sequence_confidence(token_conf, reduce: str = "mean") -> float:
+    """Aggregate per-token confidences (numpy twin of
+    repro.core.confidence.sequence_confidence)."""
+    c = np.asarray(token_conf, np.float64)
+    if c.size == 0:
+        return 0.0
+    if reduce == "mean":
+        return float(c.mean())
+    if reduce == "min":
+        return float(c.min())
+    if reduce == "prod":
+        return float(np.exp(np.log(np.clip(c, 1e-9, 1.0)).sum()))
+    raise ValueError(reduce)

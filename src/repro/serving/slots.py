@@ -1,0 +1,106 @@
+"""Paged KV-cache slot pools.
+
+Each cascade tier owns a fixed arena of ``capacity`` cache rows (one page
+per in-flight request) allocated once via :func:`repro.models.init_cache`
+at ``[capacity, max_seq, ...]``.  A free-list allocator hands out row ids;
+freeing a slot returns the row for reuse without touching device memory —
+the next occupant's prefill overwrites the prefix ``[0, P)`` and decode
+masks positions ``> pos`` per row, so stale keys from the previous
+occupant are never attended to.
+
+Recurrent state (mamba conv/ssm, rwkv6) has no sequence dim per row and is
+fully overwritten at prefill, so reuse is trivially safe there too.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_lib
+
+
+class SlotAllocator:
+    """Fixed-capacity free-list allocator."""
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._used = set()
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self._free.append(slot)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    @property
+    def utilization(self) -> float:
+        return self.num_used / self.capacity
+
+
+def _batch_axes(cfg, capacity: int, max_seq: int):
+    """Pytree (matching the cache) of each leaf's batch-dim index —
+    period-stacked leaves carry a leading ``num_periods`` dim, so their
+    batch axis is 1, not 0."""
+    decl = cache_lib.declare_cache(cfg, capacity, max_seq)
+    return jax.tree.map(lambda c: c.axes.index("batch"), decl,
+                        is_leaf=lambda x: isinstance(x, cache_lib.CP))
+
+
+def _write_rows(full, part, bax: int, slot_ids):
+    """Scatter `part`'s rows into `full` at `slot_ids` along axis `bax`,
+    writing only the prefix of any dim where part is shorter (the KV seq
+    dim after a prefill of P < max_seq tokens)."""
+    idx = [slice(None)] * full.ndim
+    idx[bax] = slot_ids
+    for d in range(full.ndim):
+        if d != bax and full.shape[d] != part.shape[d]:
+            idx[d] = slice(0, part.shape[d])
+    return full.at[tuple(idx)].set(part.astype(full.dtype))
+
+
+def _take_rows(tree, bax_tree, n: int):
+    return jax.tree.map(
+        lambda a, bax: jax.lax.slice_in_dim(a, 0, n, axis=bax),
+        tree, bax_tree)
+
+
+class TierSlotPool:
+    """Slot allocator + the tier's actual cache arena."""
+
+    def __init__(self, cfg, capacity: int, max_seq: int, dtype=jnp.float32):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.allocator = SlotAllocator(capacity)
+        self.cache = cache_lib.init_cache(cfg, capacity, max_seq, dtype)
+        self._bax = _batch_axes(cfg, capacity, max_seq)
+
+    def write_prefill(self, slot_ids: Sequence[int], part_cache) -> None:
+        """Write a packed prefill cache (rows ``0..n-1``) into arena rows
+        ``slot_ids``."""
+        n = len(slot_ids)
+        ids = jnp.asarray(slot_ids, jnp.int32)
+        part = _take_rows(part_cache, self._bax, n)
+        self.cache = jax.tree.map(
+            lambda full, p, bax: _write_rows(full, p, bax, ids),
+            self.cache, part, self._bax)

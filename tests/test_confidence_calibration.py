@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp_compat import given, settings, st  # hypothesis or skip-stub
 
 from repro.core import calibration, confidence, losses
 

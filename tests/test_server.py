@@ -64,6 +64,18 @@ def test_stats_accumulate_across_batches():
     assert srv.summary()["cost_per_request"] == pytest.approx(4.0)
 
 
+def test_empty_prompt_batch():
+    """Regression: serve([]) used to crash with outputs=None; it must
+    return an empty outputs/handled_by pair and leave stats untouched."""
+    fast = _member("fast", 1.0, lambda p: np.ones(p.shape[0]), tag=1)
+    exp = _member("exp", 10.0, lambda p: np.ones(p.shape[0]), tag=2)
+    srv = CascadeServer([fast, exp], deltas=[0.5])
+    out, handled = srv.serve(np.zeros((0, 8), np.int32))
+    assert out.shape[0] == 0 and handled.shape == (0,)
+    assert srv.stats.requests == 0 and srv.stats.cost == 0.0
+    assert srv.stats.gates[0].seen == 0
+
+
 def test_delta_for_escalation_rate():
     confs = np.linspace(0, 1, 101)
     d = delta_for_escalation_rate(confs, 0.3)

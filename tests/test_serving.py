@@ -1,0 +1,278 @@
+"""Async cascade serving runtime: slots, scheduler, gating, engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.server import (CascadeServer, ServingMember,
+                               delta_for_escalation_rate)
+from repro.serving import (CascadeScheduler, GateSpec, Request, RequestState,
+                           SlotAllocator)
+from repro.serving.request import sequence_confidence
+
+
+# ---------------------------------------------------------------------------
+# slot allocator
+# ---------------------------------------------------------------------------
+
+
+def test_slot_allocator_exhaustion_and_reuse():
+    a = SlotAllocator(3)
+    got = [a.alloc() for _ in range(3)]
+    assert sorted(got) == [0, 1, 2]
+    assert a.alloc() is None            # exhausted
+    assert a.num_free == 0 and a.num_used == 3 and a.utilization == 1.0
+    a.free(got[1])
+    assert a.num_free == 1
+    again = a.alloc()
+    assert again == got[1]              # free-list reuse
+    with pytest.raises(ValueError):
+        a.free(99)                      # double/stray free is an error
+
+
+# ---------------------------------------------------------------------------
+# scheduler: continuous batching + escalation queues
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, arrival=0.0, gen_len=2):
+    return Request(rid=rid, prompt=np.zeros(4, np.int32), gen_len=gen_len,
+                   arrival_time=arrival)
+
+
+def test_scheduler_admits_mid_decode():
+    """The continuous-batching invariant: a freed slot is refilled from the
+    queue on the next admission pass, without waiting for the rest of the
+    batch to drain."""
+    sched = CascadeScheduler([2, 1], [GateSpec(delta=0.5)])
+    reqs = [_req(i) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+
+    admitted, slots = sched.admit(0, now=0.0)
+    assert [r.rid for r in admitted] == [0, 1] and len(slots) == 2
+    sched.check_invariant(0.0)          # both slots busy, queue waits
+
+    # request 0 finishes mid-decode of request 1 -> slot frees -> request 2
+    # is admitted immediately
+    admitted[0].start_decode()
+    admitted[0].emit(7, 0.9, 1.0)
+    admitted[0].emit(7, 0.9, 2.0)
+    conf = admitted[0].gate()
+    assert not sched.gate_decision(0, conf)     # 0.9 > δ: stays
+    admitted[0].complete(2.0)
+    sched.release(0, slots[0])
+    more, more_slots = sched.admit(0, now=2.0)
+    assert [r.rid for r in more] == [2] and more_slots == [slots[0]]
+    sched.check_invariant(2.0)
+    assert sched.pending == 1           # request 3 still queued
+
+
+def test_scheduler_respects_arrival_times():
+    sched = CascadeScheduler([4], [])
+    sched.submit(_req(0, arrival=5.0))
+    assert sched.admit(0, now=1.0) == ([], [])   # not arrived yet
+    got, _ = sched.admit(0, now=5.0)
+    assert [r.rid for r in got] == [0]
+
+
+def test_escalation_queue_feeds_next_tier_packed():
+    sched = CascadeScheduler([4, 2], [GateSpec(delta=0.5)])
+    reqs = [_req(i, gen_len=1) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    admitted, _ = sched.admit(0, now=0.0)
+    for r in admitted:
+        slot = r.slot
+        r.start_decode()
+        r.emit(1, 0.1 if r.rid % 2 == 0 else 0.9, 0.0)
+        conf = r.gate()
+        if sched.gate_decision(0, conf):
+            r.escalate()
+            sched.push_escalated(r)
+        else:
+            r.complete(0.0)
+        sched.release(0, slot)
+    # rids 0 and 2 (conf 0.1 <= δ) escalated; tier 1 admits them packed
+    packed, slots = sched.admit(1, now=1.0)
+    assert [r.rid for r in packed] == [0, 2]
+    assert slots == [0, 1]
+    assert sched.gate_stats[0].seen == 4
+    assert sched.gate_stats[0].escalated == 2
+
+
+def test_request_illegal_transitions_raise():
+    r = _req(0)
+    with pytest.raises(ValueError):
+        r.complete(0.0)                 # QUEUED -> DONE is illegal
+    r.admit(0, 0, 0.0)
+    with pytest.raises(ValueError):
+        r.emit(1, 0.5, 0.0)             # must start_decode first
+
+
+# ---------------------------------------------------------------------------
+# δ from escalation budget
+# ---------------------------------------------------------------------------
+
+
+def test_delta_for_escalation_rate_edge_cases():
+    assert delta_for_escalation_rate([], 0.5) == 0.5       # empty confs
+    confs = np.linspace(0.01, 0.99, 99)
+    d0 = delta_for_escalation_rate(confs, 0.0)
+    assert (confs <= d0).mean() <= 0.02                    # ~nothing
+    d1 = delta_for_escalation_rate(confs, 1.0)
+    assert (confs <= d1).mean() == 1.0                     # everything
+    assert d1 == pytest.approx(confs.max())
+
+
+def test_budget_gate_converges_to_target():
+    sched = CascadeScheduler([1, 1], [GateSpec(budget=0.2, window=256,
+                                               min_calibration=4)])
+    rng = np.random.default_rng(0)
+    esc = 0
+    n = 400
+    for _ in range(n):
+        esc += bool(sched.gate_decision(0, float(rng.random())))
+    assert abs(esc / n - 0.2) < 0.08
+
+
+def test_gate_spec_validation():
+    with pytest.raises(ValueError):
+        GateSpec()                      # neither delta nor budget
+    with pytest.raises(ValueError):
+        GateSpec(delta=0.5, budget=0.2)  # both
+
+
+def test_sequence_confidence_reductions():
+    c = [0.5, 0.8, 0.9]
+    assert sequence_confidence(c, "mean") == pytest.approx(np.mean(c))
+    assert sequence_confidence(c, "min") == pytest.approx(0.5)
+    assert sequence_confidence(c, "prod") == pytest.approx(0.5 * 0.8 * 0.9)
+    assert sequence_confidence([], "mean") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine integration (smoke models)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_engine_parts():
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("gemma3-1b", "smoke")
+    fast_p = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    exp_p = init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    return cfg, fast_p, exp_p
+
+
+def _make_engine(cfg, fast_p, exp_p, **kw):
+    from repro.serving import CascadeEngine, TierSpec
+    from repro.serving.engine import VirtualClock
+    kw.setdefault("slots", 2)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("gen_len", 4)
+    kw.setdefault("clock", VirtualClock())
+    return CascadeEngine([TierSpec("fast", cfg, fast_p),
+                          TierSpec("exp", cfg, exp_p)], **kw)
+
+
+def test_engine_continuous_batching_drains_and_holds_invariant(
+        tiny_engine_parts):
+    cfg, fast_p, exp_p = tiny_engine_parts
+    eng = _make_engine(cfg, fast_p, exp_p, deltas=[0.5])
+    rng = np.random.default_rng(0)
+    for i in range(6):                   # 6 requests into 2 slots/tier
+        eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                   arrival_time=float(i % 3))
+    while not eng._done():
+        eng.step(eng.clock.now())
+        eng.scheduler.check_invariant(eng.clock.now())
+        eng.clock.step_done()
+    assert all(r.state is RequestState.DONE for r in eng.requests)
+    assert all(len(r.tokens) == 4 for r in eng.requests)
+    assert all(r.latency is not None and r.latency >= 0
+               for r in eng.requests)
+    s = eng.metrics.summary()
+    assert s["completed"] == 6
+    # Eq 7: realized cost within the always-fast / always-expensive envelope
+    assert s["flops_per_request_always_fast"] \
+        <= s["flops_per_request_cascade"] \
+        <= s["flops_per_request_always_expensive"]
+
+
+def test_engine_escalation_matches_cascade_server(tiny_engine_parts):
+    """The async engine's gate must agree with the synchronous
+    CascadeServer on identical confidence traffic."""
+    cfg, fast_p, exp_p = tiny_engine_parts
+    delta = 0.5
+    eng = _make_engine(cfg, fast_p, exp_p, deltas=[delta])
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab_size, (5, 8)).astype(np.int32)
+    for p in prompts:
+        eng.submit(p, arrival_time=0.0)
+    eng.run()
+
+    confs = np.asarray([r.seq_conf_by_tier[0] for r in eng.requests])
+    members = [
+        ServingMember("fast", lambda pr: (np.zeros((pr.shape[0], 1)),
+                                          confs[:pr.shape[0]]), 1.0),
+        ServingMember("exp", lambda pr: (np.ones((pr.shape[0], 1)),
+                                         np.ones(pr.shape[0])), 10.0),
+    ]
+    srv = CascadeServer(members, deltas=[delta])
+    srv.serve(prompts)
+    assert srv.stats.gates[0].escalated \
+        == eng.scheduler.gate_stats[0].escalated
+    assert eng.scheduler.gate_stats[0].escalated == int((confs <= delta).sum())
+    # escalated requests were re-decoded by the expensive tier
+    for r in eng.requests:
+        assert r.tier == (1 if r.seq_conf_by_tier[0] <= delta else 0)
+
+
+def test_engine_matches_greedy_decode_reference(tiny_engine_parts):
+    """The engine's fast-tier decode must reproduce the legacy synchronous
+    loop (`launch.serve.greedy_decode`, kept as the independent reference
+    implementation) token-for-token."""
+    from repro.core import confidence as conf_lib
+    from repro.launch.serve import greedy_decode
+
+    cfg, fast_p, exp_p = tiny_engine_parts
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+
+    eng = _make_engine(cfg, fast_p, exp_p, deltas=[-1.0], slots=3)
+    for p in prompts:
+        eng.submit(p, arrival_time=0.0)     # δ=-1: nothing escalates
+    eng.run()
+
+    ref_tokens, ref_conf = greedy_decode(cfg, fast_p, jnp.asarray(prompts), 4)
+    ref_seq = conf_lib.sequence_confidence(ref_conf, reduce="mean")
+    got = np.stack([r.tokens for r in eng.requests])
+    np.testing.assert_array_equal(got, np.asarray(ref_tokens))
+    np.testing.assert_allclose(
+        [r.seq_conf_by_tier[0] for r in eng.requests],
+        np.asarray(ref_seq), rtol=1e-5)
+
+
+def test_engine_staggered_positions_match_sync_decode(tiny_engine_parts):
+    """Continuous batching admits mid-decode, so slots sit at different
+    positions; outputs must still equal an all-at-once run (per-row decode
+    positions in attention)."""
+    cfg, fast_p, exp_p = tiny_engine_parts
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+
+    eng_sync = _make_engine(cfg, fast_p, exp_p, deltas=[0.0], slots=4)
+    for p in prompts:
+        eng_sync.submit(p, arrival_time=0.0)
+    eng_sync.run()
+
+    eng_stag = _make_engine(cfg, fast_p, exp_p, deltas=[0.0], slots=2)
+    for i, p in enumerate(prompts):
+        eng_stag.submit(p, arrival_time=float(i))   # staggered arrivals
+    eng_stag.run()
+
+    for a, b in zip(eng_sync.requests, eng_stag.requests):
+        assert a.tokens == b.tokens
+        np.testing.assert_allclose(a.token_conf, b.token_conf, rtol=1e-5)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp_compat import given, settings, st  # hypothesis or skip-stub
 
 from repro import checkpoint as ckpt
 from repro.data import Batches, bigram_lm
