@@ -23,6 +23,33 @@ OUT = os.environ.get("REPRO_SERVE_BENCH_OUT",
                      "experiments/bench/serving_throughput.json")
 
 
+def check_open_loop(s: dict) -> None:
+    """Open-loop sanity bound: completions can't outpace arrivals, so
+    throughput must not exceed the realized offered rate (makespan is at
+    least the arrival span).  A violation means the numbers were produced
+    by broken timing (e.g. a clock not covering the arrival window)."""
+    offered = s.get("offered_rate", float("nan"))
+    if offered == offered and s["throughput"] > offered * 1.001:
+        raise RuntimeError(
+            f"impossible open-loop throughput {s['throughput']:.2f} req/s "
+            f"> realized offered rate {offered:.2f} req/s")
+
+
+def environment() -> dict:
+    import platform
+
+    import jax
+
+    return {
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
 def main() -> None:
     from repro.launch import serve_async
 
@@ -35,28 +62,34 @@ def main() -> None:
         ])
         t0 = time.time()
         s = serve_async.run(args)
+        check_open_loop(s)
         points.append({
             "rate": rate,
+            "offered_rate": s["offered_rate"],
             "requests": s["requests"],
             "throughput": s["throughput"],
             "latency_p50": s["latency_p50"],
             "latency_p95": s["latency_p95"],
             "ttft_p50": s["ttft_p50"],
             "escalation_rate": s["escalation_rates"][0],
+            "escalation_budget": s["escalation_budget"],
             "tier_utilization": s["tier_utilization"],
             "flops_per_request_cascade": s["flops_per_request_cascade"],
             "flops_per_request_always_expensive":
                 s["flops_per_request_always_expensive"],
             "wall_s": time.time() - t0,
         })
-        print(f"rate={rate}: throughput {s['throughput']:.2f} req/s, "
+        print(f"rate={rate}: throughput {s['throughput']:.2f} req/s "
+              f"(offered {s['offered_rate']:.2f}), "
               f"p50 {s['latency_p50']:.3f}s, p95 {s['latency_p95']:.3f}s, "
-              f"esc {s['escalation_rates'][0]:.3f}", flush=True)
+              f"esc {s['escalation_rates'][0]:.3f} "
+              f"(budget {s['escalation_budget']})", flush=True)
 
     bench = {
         "bench": "serving_throughput",
         "slots": SLOTS,
         "gen_len": GEN_LEN,
+        "env": environment(),
         "points": points,
         "flops_saving_vs_always_expensive": [
             1.0 - p["flops_per_request_cascade"]

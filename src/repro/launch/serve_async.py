@@ -62,13 +62,24 @@ def run(args, clock=None) -> dict:
     prompts = bigram_lm(num_seqs=args.requests, seq_len=args.prompt_len,
                         vocab=vocab, seed=args.seed)
     arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
-    engine.warmup()          # compile outside the latency measurement
+    # warmup compiles every tier and then resets the clock, so arrival
+    # timestamps are relative to the start of serving, not construction
+    engine.warmup()
     for p, t in zip(prompts, arrivals):
         engine.submit(p, arrival_time=float(t))
     summary = engine.run()
     summary["rate"] = args.rate
+    # realized offered load: completions can never beat this in an
+    # open-loop run (makespan >= arrival span), a sanity bound on
+    # the reported throughput
+    summary["offered_rate"] = (
+        args.requests / float(arrivals[-1] - arrivals[0])
+        if args.requests > 1 and arrivals[-1] > arrivals[0]
+        else float("nan"))
     summary["slots"] = args.slots
     summary["gen_len"] = args.gen_len
+    summary["escalation_budget"] = (None if args.delta is not None
+                                    else args.escalation_budget)
     summary["delta"] = [engine.scheduler.delta(g)
                         for g in range(len(engine.scheduler.gates))]
     return summary
@@ -88,7 +99,9 @@ def report(s: dict) -> None:
                       zip(s['tier_names'], s['tier_utilization'])))
     rates = ", ".join(f"{r:.3f}" for r in s["escalation_rates"])
     deltas = ", ".join(f"{d:.4f}" for d in s["delta"])
-    print(f"  escalation rate [{rates}] at δ=[{deltas}]")
+    target = ("" if s.get("escalation_budget") is None
+              else f" (budget target {s['escalation_budget']:.3f})")
+    print(f"  escalation rate [{rates}] at δ=[{deltas}]{target}")
     print(f"  Eq7 FLOPs/request: cascade {s['flops_per_request_cascade']:.3e} "
           f"(always-fast {s['flops_per_request_always_fast']:.3e}, "
           f"always-expensive {s['flops_per_request_always_expensive']:.3e})")

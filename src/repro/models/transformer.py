@@ -186,7 +186,8 @@ def prefill(params, cfg: ModelConfig, batch, pos=None):
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos):
-    """token [B,1] int32; pos [B,1] int32 (shared decode position)."""
+    """token [B,1] int32; pos [B,1] int32 (per-row decode positions:
+    rows may sit at different depths, as under continuous batching)."""
     logits, new_cache, _ = forward(params, cfg, {"tokens": token},
                                    mode="decode", cache=cache, pos=pos)
     return logits, new_cache

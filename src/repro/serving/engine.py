@@ -54,6 +54,9 @@ class WallClock:
     def __init__(self):
         self._t0 = time.perf_counter()
 
+    def reset(self) -> None:
+        self._t0 = time.perf_counter()
+
     def now(self) -> float:
         return time.perf_counter() - self._t0
 
@@ -70,6 +73,9 @@ class VirtualClock:
     def __init__(self, dt: float = 1.0):
         self.t = 0.0
         self.dt = dt
+
+    def reset(self) -> None:
+        self.t = 0.0
 
     def now(self) -> float:
         return self.t
@@ -208,9 +214,13 @@ class CascadeEngine:
         rt.pool.write_prefill(slot_ids, part_cache)
         ftok = np.asarray(ftok)
         fconf = np.asarray(fconf)
+        # np.asarray blocked until prefill finished; timestamp tokens with
+        # the post-compute clock so TTFT includes prefill, not just queueing
+        # (VirtualClock is constant within a step, so ticks are unaffected)
+        t_emit = self.clock.now()
         for i, (req, slot) in enumerate(zip(reqs, slot_ids)):
             req.start_decode()
-            req.emit(int(ftok[i]), float(fconf[i]), now)
+            req.emit(int(ftok[i]), float(fconf[i]), t_emit)
             rt.slot_req[slot] = req
             rt.tok[slot] = ftok[i]
             rt.pos[slot] = self.prompt_len   # next decode writes here
@@ -225,9 +235,10 @@ class CascadeEngine:
             rt.pool.cache, jnp.asarray(rt.pos[:, None]))
         nxt = np.asarray(nxt)
         conf = np.asarray(conf)
+        t_emit = self.clock.now()       # post-compute (see _admit)
         for slot in decoding:
             req = rt.slot_req[slot]
-            req.emit(int(nxt[slot]), float(conf[slot]), now)
+            req.emit(int(nxt[slot]), float(conf[slot]), t_emit)
             rt.tok[slot] = nxt[slot]
             rt.pos[slot] += 1
         return len(decoding)
@@ -244,7 +255,9 @@ class CascadeEngine:
                 req.escalate()
                 self.scheduler.push_escalated(req)
             else:
-                req.complete(now)
+                # post-compute time: the final decode step belongs to this
+                # request's latency (`now` was sampled at step start)
+                req.complete(self.clock.now())
                 self.metrics.record_completion(req)
             rt.slot_req[slot] = None
             rt.tok[slot] = 0
@@ -274,18 +287,26 @@ class CascadeEngine:
     def _done(self) -> bool:
         return self.scheduler.pending == 0 and not self._any_occupied()
 
+    def reset_clock(self) -> None:
+        """Restart the clock at t=0.  Call after compilation / setup and
+        before submitting timed requests, so arrival timestamps are
+        relative to the start of serving rather than engine construction."""
+        self.clock.reset()
+
     def warmup(self) -> None:
         """Trigger tier compiles before the clock starts: one prefill +
         one decode per tier on dummy data.  The decode's returned cache is
         rebound (step_fn donates its cache input on accelerators); the
         dummy write lands at position 0 of free rows, which the next
-        occupant's prefill overwrites."""
+        occupant's prefill overwrites.  Ends by resetting the clock so
+        compile time never counts against request latency."""
         for rt in self.runtimes:
             prompts = jnp.zeros((rt.capacity, self.prompt_len), jnp.int32)
             rt.prefill_fn(rt.spec.params, prompts)
             zeros = jnp.zeros((rt.capacity, 1), jnp.int32)
             _, _, rt.pool.cache = rt.step_fn(rt.spec.params, zeros,
                                              rt.pool.cache, zeros)
+        self.reset_clock()
 
     def run(self, max_steps: int = 1_000_000) -> dict:
         """Drive to completion; returns ``metrics.summary()``."""
@@ -295,8 +316,11 @@ class CascadeEngine:
             if not self._any_occupied() and not any(
                     self.scheduler.admissible(t, now)
                     for t in range(len(self.tiers))):
-                # idle: jump/sleep to the earliest pending arrival
-                nxt = min(r.arrival_time for r in self.scheduler.queues[0])
+                # idle: jump/sleep to the arrival of the queue *head* —
+                # admission is FIFO, so the head is what unblocks the queue
+                # (min over all arrivals can sit before the head's time and
+                # would spin a VirtualClock forever on out-of-order submits)
+                nxt = self.scheduler.queues[0][0].arrival_time
                 self.clock.wait_until(nxt)
                 continue
             self.step(self.clock.now())

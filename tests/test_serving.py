@@ -201,6 +201,51 @@ def test_engine_continuous_batching_drains_and_holds_invariant(
         <= s["flops_per_request_always_expensive"]
 
 
+def test_clock_reset():
+    import time as _time
+    from repro.serving.engine import VirtualClock, WallClock
+    w = WallClock()
+    _time.sleep(0.01)
+    before = w.now()
+    w.reset()
+    assert w.now() < before
+    v = VirtualClock()
+    v.step_done()
+    v.step_done()
+    assert v.now() == 2.0
+    v.reset()
+    assert v.now() == 0.0
+
+
+def test_warmup_resets_clock(tiny_engine_parts):
+    """Compile time must not count against request latency: warmup ends
+    by resetting the clock, so arrival timestamps submitted afterwards
+    are relative to the start of serving."""
+    cfg, fast_p, exp_p = tiny_engine_parts
+    eng = _make_engine(cfg, fast_p, exp_p, deltas=[0.5])
+    for _ in range(3):
+        eng.clock.step_done()           # time passes before serving
+    assert eng.clock.now() == 3.0
+    eng.warmup()
+    assert eng.clock.now() == 0.0
+
+
+def test_engine_out_of_order_arrivals_do_not_hang(tiny_engine_parts):
+    """Admission is FIFO, so a queue head with a late arrival blocks
+    earlier-submitted-later times; the idle jump must target the head's
+    arrival (jumping to min() spins a VirtualClock forever)."""
+    cfg, fast_p, exp_p = tiny_engine_parts
+    eng = _make_engine(cfg, fast_p, exp_p, deltas=[0.5])
+    rng = np.random.default_rng(4)
+    eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+               arrival_time=10.0)
+    eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+               arrival_time=1.0)
+    s = eng.run(max_steps=500)
+    assert s["completed"] == 2
+    assert all(r.state is RequestState.DONE for r in eng.requests)
+
+
 def test_engine_escalation_matches_cascade_server(tiny_engine_parts):
     """The async engine's gate must agree with the synchronous
     CascadeServer on identical confidence traffic."""
