@@ -1,0 +1,158 @@
+"""Decode attention microbenchmark: dense masked arena vs block-paged.
+
+The PR 1 serving decode attends densely over the whole slot arena
+``[rows, max_seq]`` every tick — masked-out positions still cost FLOPs
+and HBM reads.  The block-paged decode (``kernels.paged_attention``)
+touches only the pages a row has actually filled: O(Σ live tokens).
+This benchmark times both at several occupancies (live-token fraction
+of the arena) and records the KV bytes each must read.
+
+The paged timing runs the gather-then-attend jnp reference over exactly
+the pages the kernel would visit (``pl.when`` skips the rest) — the
+Mosaic kernel itself only times meaningfully on TPU; off-TPU its
+interpret path is parity-checked here instead and reported as
+``kernel_parity_max_err``.
+
+    PYTHONPATH=src python -m benchmarks.decode_attention
+
+Scale knobs: REPRO_DECODE_BENCH_{ROWS,MAX_SEQ,KV,GROUPS,HEAD_DIM,BLOCK,REPS}.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = int(os.environ.get("REPRO_DECODE_BENCH_ROWS", "16"))
+MAX_SEQ = int(os.environ.get("REPRO_DECODE_BENCH_MAX_SEQ", "512"))
+KV = int(os.environ.get("REPRO_DECODE_BENCH_KV", "2"))
+GROUPS = int(os.environ.get("REPRO_DECODE_BENCH_GROUPS", "4"))
+HEAD_DIM = int(os.environ.get("REPRO_DECODE_BENCH_HEAD_DIM", "64"))
+BLOCK = int(os.environ.get("REPRO_DECODE_BENCH_BLOCK", "32"))
+REPS = int(os.environ.get("REPRO_DECODE_BENCH_REPS", "20"))
+OCCUPANCIES = (0.25, 0.5, 1.0)
+OUT = os.environ.get("REPRO_DECODE_BENCH_OUT",
+                     "experiments/bench/decode_attention.json")
+ITEM = 4  # f32 bytes
+
+
+def _time(fn, *args) -> float:
+    """Median wall-clock of a jitted fn (compile excluded), in ms."""
+    jax.block_until_ready(fn(*args))        # warmup/compile
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+def main() -> None:
+    from repro.kernels import ref
+    from repro.kernels.paged_attention import paged_attention
+    from repro.models.blocks import _gqa_scores_to_out
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (ROWS, 1, KV, GROUPS, HEAD_DIM), jnp.float32)
+    k_dense = jax.random.normal(jax.random.PRNGKey(1),
+                                (ROWS, MAX_SEQ, KV, HEAD_DIM), jnp.float32)
+    v_dense = jax.random.normal(jax.random.PRNGKey(2),
+                                (ROWS, MAX_SEQ, KV, HEAD_DIM), jnp.float32)
+
+    @jax.jit
+    def dense(q, k, v, pos):
+        idx = jnp.arange(MAX_SEQ)[None, None, None, None, :]
+        mask = idx <= pos[:, None, None, None, None]
+        return _gqa_scores_to_out(q, k, v, mask)
+
+    @jax.jit
+    def paged(q, kp, vp, pt, pos):
+        return ref.paged_attention_ref(q[:, 0], kp, vp, pt, pos)
+
+    points = []
+    for occ in OCCUPANCIES:
+        depth = max(1, int(MAX_SEQ * occ))
+        pages = math.ceil(depth / BLOCK)
+        pos = jnp.full((ROWS,), depth - 1, jnp.int32)
+        # pool holding exactly the live pages (+ null block 0)
+        nblocks = ROWS * pages + 1
+        pt = jnp.asarray(
+            1 + np.arange(ROWS * pages).reshape(ROWS, pages), jnp.int32)
+        kp = jax.random.normal(jax.random.PRNGKey(3),
+                               (nblocks, BLOCK, KV, HEAD_DIM), jnp.float32)
+        vp = jax.random.normal(jax.random.PRNGKey(4),
+                               (nblocks, BLOCK, KV, HEAD_DIM), jnp.float32)
+
+        dense_ms = _time(dense, q, k_dense, v_dense, pos)
+        paged_ms = _time(paged, q, kp, vp, pt, pos)
+        kv_dense = 2 * ROWS * MAX_SEQ * KV * HEAD_DIM * ITEM
+        kv_paged = 2 * ROWS * pages * BLOCK * KV * HEAD_DIM * ITEM
+        points.append({
+            "occupancy": occ,
+            "depth": depth,
+            "pages_per_row": pages,
+            "dense_ms": dense_ms,
+            "paged_ms": paged_ms,
+            "speedup": dense_ms / paged_ms,
+            "kv_bytes_read_dense": kv_dense,
+            "kv_bytes_read_paged": kv_paged,
+        })
+        print(f"occ={occ:.2f} depth={depth}: dense {dense_ms:.2f}ms, "
+              f"paged {paged_ms:.2f}ms ({dense_ms/paged_ms:.2f}x), "
+              f"KV bytes {kv_dense/1e6:.1f}M -> {kv_paged/1e6:.1f}M",
+              flush=True)
+
+    # interpret-mode parity of the actual Pallas kernel (small shape:
+    # the interpreter is a correctness artifact, not a perf artifact)
+    sp, sb = 4, 8
+    nb = 4 * sp + 1
+    pt_s = jnp.asarray(1 + np.arange(4 * sp).reshape(4, sp), jnp.int32)
+    pos_s = jnp.asarray([5, 11, 23, 30], jnp.int32)
+    q_s = jax.random.normal(key, (4, KV, GROUPS, HEAD_DIM), jnp.float32)
+    kp_s = jax.random.normal(key, (nb, sb, KV, HEAD_DIM), jnp.float32)
+    vp_s = jax.random.normal(key, (nb, sb, KV, HEAD_DIM), jnp.float32)
+    got = paged_attention(q_s, kp_s, vp_s, pt_s, pos_s, interpret=True)
+    want = ref.paged_attention_ref(q_s, kp_s, vp_s, pt_s, pos_s)
+    parity = float(jnp.max(jnp.abs(got - want)))
+
+    import platform
+    bench = {
+        "bench": "decode_attention",
+        "rows": ROWS,
+        "max_seq": MAX_SEQ,
+        "kv_heads": KV,
+        "q_per_kv": GROUPS,
+        "head_dim": HEAD_DIM,
+        "block_size": BLOCK,
+        "paged_impl": "jnp page-gather reference (Mosaic kernel timing "
+                      "requires TPU; interpret parity below)",
+        "kernel_parity_max_err": parity,
+        "env": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "cpu_count": os.cpu_count(),
+        },
+        "points": points,
+    }
+    half = next(p for p in bench["points"] if p["occupancy"] == 0.5)
+    if half["paged_ms"] > half["dense_ms"]:
+        print(f"WARNING: paged slower than dense at 50% occupancy "
+              f"({half['paged_ms']:.2f}ms vs {half['dense_ms']:.2f}ms)")
+    assert parity < 1e-4, f"kernel/interpret parity broke: {parity}"
+    if os.path.dirname(OUT):
+        os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(bench, f, indent=2, default=float)
+    print("BENCH " + json.dumps(bench, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig3_splitting, fig4_params, fig5_histograms,
-                        roofline, serving_throughput, table1_models,
-                        table23_cascade, table4_three_element,
+from benchmarks import (decode_attention, fig3_splitting, fig4_params,
+                        fig5_histograms, roofline, serving_throughput,
+                        table1_models, table23_cascade, table4_three_element,
                         table5_hard_task, table6_accuracy_effect,
                         table7_llm_cascade)
 
@@ -29,6 +29,7 @@ ARTIFACTS = {
     "fig5": fig5_histograms.main,
     "roofline": roofline.main,
     "serving": serving_throughput.main,
+    "decode_attn": decode_attention.main,
 }
 
 

@@ -77,6 +77,11 @@ def main() -> None:
             "flops_per_request_cascade": s["flops_per_request_cascade"],
             "flops_per_request_always_expensive":
                 s["flops_per_request_always_expensive"],
+            "kv_arena": s["kv_arena"],
+            "kv_high_water_bytes_total":
+                sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
+            "kv_dense_equiv_bytes_total":
+                sum(t["dense_equiv_bytes"] for t in s["kv_arena"]),
             "wall_s": time.time() - t0,
         })
         print(f"rate={rate}: throughput {s['throughput']:.2f} req/s "

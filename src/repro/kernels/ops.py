@@ -12,6 +12,7 @@ import jax
 from repro.kernels.confidence_gate import confidence_gate as _gate
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.router_gate import router_gate as _router
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
 
@@ -27,6 +28,14 @@ def confidence_gate(logits, *, interpret=None):
 
 def flash_attention(q, k, v, *, causal=True, window=None, interpret=None):
     return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_default_interpret()
+                  if interpret is None else interpret)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, pos, *,
+                    k_scale=None, v_scale=None, window=None, interpret=None):
+    return _paged(q, k_pages, v_pages, page_table, pos,
+                  k_scale=k_scale, v_scale=v_scale, window=window,
                   interpret=_default_interpret()
                   if interpret is None else interpret)
 

@@ -50,6 +50,36 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
     return out.reshape(B, H, S, d).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
+                        k_scale=None, v_scale=None, window=None):
+    """Gather-then-attend oracle for the paged decode kernel.
+
+    q [B,KV,G,hd]; k_pages/v_pages [N,bs,KV,hd] (int8 with scales or
+    float); page_table [B,P] int32; pos [B] int32.  Returns [B,KV,G,hd].
+    """
+    B, KV, G, hd = q.shape
+    bs = k_pages.shape[1]
+    P = page_table.shape[1]
+    k = k_pages[page_table].astype(jnp.float32)       # [B,P,bs,KV,hd]
+    v = v_pages[page_table].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[page_table].astype(jnp.float32)[..., None]
+        v = v * v_scale[page_table].astype(jnp.float32)[..., None]
+    T = P * bs
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), k) * scale
+    t_idx = jnp.arange(T)[None, None, None, :]
+    mask = t_idx <= pos[:, None, None, None]
+    if window is not None:
+        mask &= t_idx > pos[:, None, None, None] - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return out.astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u):
     """All inputs [B,H,T,hd] except u [H,hd].  Returns y [B,H,T,hd].
 

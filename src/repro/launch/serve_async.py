@@ -48,6 +48,8 @@ def build_engine(args, clock=None):
          TierSpec(args.expensive, exp_cfg, exp_params)],
         slots=args.slots, prompt_len=args.prompt_len, gen_len=args.gen_len,
         use_gate_kernel=not args.no_gate_kernel,
+        use_paged_kv=not args.dense_kv, kv_block_size=args.kv_block_size,
+        kv_blocks=args.kv_blocks,
         clock=clock if clock is not None else WallClock(), **gate_kw)
     return engine, min(fast_cfg.vocab_size, exp_cfg.vocab_size)
 
@@ -82,6 +84,9 @@ def run(args, clock=None) -> dict:
                                     else args.escalation_budget)
     summary["delta"] = [engine.scheduler.delta(g)
                         for g in range(len(engine.scheduler.gates))]
+    # block-paged KV arena accounting (high-water = blocks actually
+    # mapped at peak, the number the paged arena saves vs dense)
+    summary["kv_arena"] = engine.memory_stats()
     return summary
 
 
@@ -128,6 +133,15 @@ def make_parser() -> argparse.ArgumentParser:
                     help="target escalation rate; δ is calibrated online")
     ap.add_argument("--no-gate-kernel", action="store_true",
                     help="jnp confidence instead of the Pallas gate kernel")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV block (paged arena)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="KV arena size in blocks per tier (default: fully "
+                         "provisioned slots*pages_per_row+1; smaller "
+                         "over-subscribes, attention-only models)")
+    ap.add_argument("--dense-kv", action="store_true",
+                    help="PR 1 dense one-page-per-request arena instead of "
+                         "the block-paged arena + paged decode kernel")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="also write the summary dict to this path")

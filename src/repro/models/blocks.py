@@ -2,12 +2,15 @@
 
 Every mixer has the signature::
 
-    y, new_cache, = mixer(p, cfg, spec, x, cache, pos, mode)
+    y, new_cache, = mixer(p, cfg, spec, x, cache, pos, mode, pages=None)
 
 with ``mode in {'train', 'prefill', 'decode'}``.  In train mode caches are
 ignored (``None`` in / ``None`` out); prefill returns a populated cache;
 decode consumes ``x`` of seq-len 1 and a cache, and returns the updated
 cache.  ``pos`` is ``[B, S]`` int32 absolute positions (decode: ``[B, 1]``).
+``pages`` (decode only) switches attention to the block-paged KV layout:
+``{"page_table": [B, P] int32}`` over a cache from
+``repro.models.cache.init_paged_cache``; non-attention mixers ignore it.
 
 Every ffn has the signature ``y, aux = ffn(p, cfg, spec, x, cache, mode)``
 where ``aux`` is a dict of auxiliary scalars (MoE load-balance / router
@@ -142,7 +145,7 @@ def _gqa_scores_to_out(q, k, v, mask, seq_hint: bool = False,
     return out
 
 
-def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode):
+def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
     B, S, _ = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // KV
@@ -153,6 +156,42 @@ def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode):
                         cfg.frontend_len)
     q = qr.reshape(B, S, KV, G, hd)
     k = kr
+
+    if mode == "decode" and pages is not None:
+        # Block-paged decode: the KV cache is a shared pool of fixed-size
+        # blocks [N, bs, KV, hd]; row b's live tokens are reached through
+        # pages["page_table"] [B, P].  The new token's k/v is scattered
+        # into (block, offset) derived from the row's position — rows
+        # whose page is unmapped hit the reserved null block 0 (their
+        # output is discarded by the engine; see serving.slots) — and
+        # attention runs in the Pallas paged flash-decode kernel
+        # (interpret mode off-TPU).
+        from repro.kernels import ops as kernel_ops
+        pt = pages["page_table"]                        # [B, P] int32
+        bs = cache["k"].shape[1]
+        p_row = pos[:, 0]                               # [B]
+        blk = pt[jnp.arange(B), p_row // bs]            # [B]
+        off = p_row % bs
+        quant = "k_scale" in cache
+        if quant:
+            kq, ksc = _quant_i8(k)
+            vq, vsc = _quant_i8(v)
+            ck = cache["k"].at[blk, off].set(kq[:, 0])
+            cv = cache["v"].at[blk, off].set(vq[:, 0])
+            cks = cache["k_scale"].at[blk, off].set(ksc[:, 0])
+            cvs = cache["v_scale"].at[blk, off].set(vsc[:, 0])
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            out = kernel_ops.paged_attention(
+                q[:, 0], ck, cv, pt, p_row, k_scale=cks, v_scale=cvs,
+                window=spec.window)
+        else:
+            ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            out = kernel_ops.paged_attention(q[:, 0], ck, cv, pt, p_row,
+                                             window=spec.window)
+        y = out.astype(x.dtype).reshape(B, S, H * hd) @ p["wo"]
+        return y, new_cache
 
     if mode == "decode":
         # One new token (S == 1) against a fixed-size cache.  Each row
@@ -267,7 +306,7 @@ def _causal_conv(x, w, b, cache, mode):
     return y.astype(x.dtype), new_cache
 
 
-def mamba(p, cfg: ModelConfig, spec, x, cache, pos, mode):
+def mamba(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
     B, S, D = x.shape
     d_in = spec.expand * cfg.d_model
     n = spec.d_state
@@ -332,7 +371,7 @@ def _token_shift(x, x_prev, mode):
     return shifted
 
 
-def rwkv6(p, cfg: ModelConfig, spec, x, cache, pos, mode):
+def rwkv6(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
     B, S, D = x.shape
     hd = spec.head_dim
     H = D // hd
@@ -486,14 +525,14 @@ def apply_ffn(p, cfg, spec, x, cache, mode):
 # --------------------------------------------------------------------------
 
 
-def apply_layer(p, cfg: ModelConfig, layer, x, cache, pos, mode):
+def apply_layer(p, cfg: ModelConfig, layer, x, cache, pos, mode, pages=None):
     """Pre-norm residual layer: x + mixer(norm(x)); x + ffn(norm(x))."""
     mix_cache = cache.get("mixer") if cache else None
     ffn_cache = cache.get("ffn") if cache else None
 
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     y, new_mix = MIXERS[layer.mixer.kind](p["mixer"], cfg, layer.mixer, h,
-                                          mix_cache, pos, mode)
+                                          mix_cache, pos, mode, pages=pages)
     x = x + y
     h = rmsnorm(x, p["norm2"], cfg.norm_eps)
     y, new_ffn, aux = apply_ffn(p["ffn"], cfg, layer.ffn, h, ffn_cache, mode)

@@ -97,6 +97,59 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.float32):
                         is_leaf=_IS_CP)
 
 
+# --------------------------------------------------------------------------
+# Block-paged variant (serving)
+# --------------------------------------------------------------------------
+
+
+def _page_leaf(c: CP, num_blocks: int, block_size: int) -> CP:
+    """Rewrite an attention KV leaf ``[.., batch, kv_seq(=block_size), ..]``
+    into the shared block-pool layout ``[.., kv_blocks, block, ..]``.
+    Leaves without a ``kv_seq`` axis (recurrent state) keep their per-row
+    layout untouched."""
+    if "kv_seq" not in c.axes:
+        return c
+    shape, axes = list(c.shape), list(c.axes)
+    b, s = axes.index("batch"), axes.index("kv_seq")
+    shape[b], axes[b] = num_blocks, "kv_blocks"
+    shape[s], axes[s] = block_size, "block"
+    return CP(tuple(shape), tuple(axes), c.dtype)
+
+
+def declare_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                        block_size: int, dtype=jnp.bfloat16) -> dict:
+    """Cache declaration with attention KV in a shared block pool.
+
+    Attention k/v (and int8 scales) become ``[num_blocks, block_size,
+    kv_heads, hd]`` — one pool per layer, rows indexed through per-request
+    page tables (see ``repro.serving.slots`` / ``kernels.paged_attention``).
+    Recurrent state (mamba conv/ssm, rwkv6, rwkv_cmix x_prev) has no seq
+    dim and stays ``[batch, ...]`` per request row.  Block 0 is reserved as
+    the null block page tables are padded with.
+    """
+    decl = declare_cache(cfg, batch, block_size, dtype)
+    return jax.tree.map(lambda c: _page_leaf(c, num_blocks, block_size),
+                        decl, is_leaf=_IS_CP)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, dtype=jnp.float32):
+    decl = declare_paged_cache(cfg, batch, num_blocks, block_size, dtype)
+    return jax.tree.map(lambda c: jnp.zeros(c.shape, c.dtype), decl,
+                        is_leaf=_IS_CP)
+
+
+def has_recurrent_state(cfg: ModelConfig) -> bool:
+    """True if any cache leaf is per-request recurrent state (no kv_seq
+    dim): such state advances on every fused decode step, so rows cannot
+    be replayed after a block-exhaustion stall (see CascadeEngine)."""
+    decl = declare_cache(cfg, 1, 1)
+    flags = []
+    jax.tree.map(lambda c: flags.append("kv_seq" not in c.axes), decl,
+                 is_leaf=_IS_CP)
+    return any(flags)
+
+
 def cache_spec_leaf(c: CP, mesh, *, shard_seq: bool,
                     seq_over_model: bool = False) -> PartitionSpec:
     """Sharding rule for one cache leaf.

@@ -26,12 +26,14 @@ def _add_aux(a, b):
     return {k: a[k] + b[k] for k in a}
 
 
-def _apply_unrolled(params, cfg, layers, x, cache, pos, mode, aux):
+def _apply_unrolled(params, cfg, layers, x, cache, pos, mode, aux,
+                    pages=None):
     new_cache = {}
     for i, layer in enumerate(layers):
         key = f"layer{i}"
         c = cache[key] if cache is not None else None
-        x, nc, a = blocks.apply_layer(params[key], cfg, layer, x, c, pos, mode)
+        x, nc, a = blocks.apply_layer(params[key], cfg, layer, x, c, pos,
+                                      mode, pages=pages)
         aux = _add_aux(aux, a)
         if nc is not None:
             new_cache[key] = nc
@@ -39,8 +41,10 @@ def _apply_unrolled(params, cfg, layers, x, cache, pos, mode, aux):
 
 
 def _apply_periods(params, cfg: ModelConfig, x, cache, pos, mode, aux,
-                   collect_exits: bool = False):
-    """Scan over the stacked period weights (+cache)."""
+                   collect_exits: bool = False, pages=None):
+    """Scan over the stacked period weights (+cache).  ``pages`` is
+    loop-invariant (one page table for all layers) and enters the scan
+    body by closure."""
 
     def body(carry, xs):
         xc, aux_c = carry
@@ -50,7 +54,7 @@ def _apply_periods(params, cfg: ModelConfig, x, cache, pos, mode, aux,
             key = f"block{i}"
             c = c_slice[key] if c_slice is not None else None
             xc, ci, a = blocks.apply_layer(p_slice[key], cfg, layer, xc, c,
-                                           pos, mode)
+                                           pos, mode, pages=pages)
             aux_c = _add_aux(aux_c, a)
             if ci is not None:
                 nc[key] = ci
@@ -114,7 +118,7 @@ def lm_proj(params, cfg: ModelConfig):
 
 
 def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
-            cache=None, pos=None, return_hidden: bool = False):
+            cache=None, pos=None, return_hidden: bool = False, pages=None):
     """Returns (logits, new_cache, aux) — or, with ``return_hidden``,
     (final-norm hidden states, new_cache, aux) so the caller can apply
     the LM head itself (seq-chunked CE, repro.core.losses.chunked_lm_loss).
@@ -122,6 +126,8 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
     batch: {"tokens": [B,S] int32, optional "frontend_embeds": [B,fl,fd]}
     pos:   [B,S] absolute positions (defaults to arange for train/prefill;
            required for decode).
+    pages: decode only — ``{"page_table": [B, P] int32}`` selects the
+           block-paged KV layout (cache from ``init_paged_cache``).
     """
     x = _embed(params, cfg, batch, mode)
     B, S = batch["tokens"].shape
@@ -137,7 +143,7 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
     if cfg.head:
         c = cache.get("head") if cache else None
         x, nc, aux = _apply_unrolled(params["head"], cfg, cfg.head, x, c, pos,
-                                     mode, aux)
+                                     mode, aux, pages=pages)
         if nc:
             new_cache["head"] = nc
 
@@ -146,14 +152,14 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
         c = cache.get("period") if cache else None
         collect = bool(cfg.early_exit_periods) and mode != "decode"
         x, nc, aux, exits = _apply_periods(params, cfg, x, c, pos, mode, aux,
-                                           collect_exits=collect)
+                                           collect_exits=collect, pages=pages)
         if nc is not None:
             new_cache["period"] = nc
 
     if cfg.tail:
         c = cache.get("tail") if cache else None
         x, nc, aux = _apply_unrolled(params["tail"], cfg, cfg.tail, x, c, pos,
-                                     mode, aux)
+                                     mode, aux, pages=pages)
         if nc:
             new_cache["tail"] = nc
 
@@ -185,9 +191,11 @@ def prefill(params, cfg: ModelConfig, batch, pos=None):
     return forward(params, cfg, batch, mode="prefill", pos=pos)
 
 
-def decode_step(params, cfg: ModelConfig, token, cache, pos):
+def decode_step(params, cfg: ModelConfig, token, cache, pos, pages=None):
     """token [B,1] int32; pos [B,1] int32 (per-row decode positions:
-    rows may sit at different depths, as under continuous batching)."""
+    rows may sit at different depths, as under continuous batching).
+    ``pages={"page_table": [B, P]}`` selects the block-paged KV layout."""
     logits, new_cache, _ = forward(params, cfg, {"tokens": token},
-                                   mode="decode", cache=cache, pos=pos)
+                                   mode="decode", cache=cache, pos=pos,
+                                   pages=pages)
     return logits, new_cache

@@ -5,7 +5,8 @@ continuous batching over fixed slot pools, per-request confidence gating,
 and escalation queues feeding the expensive members as packed sub-batches.
 
   * :mod:`repro.serving.request`   — request lifecycle state machine
-  * :mod:`repro.serving.slots`     — paged KV-cache slot pools (free-list)
+  * :mod:`repro.serving.slots`     — block-paged KV arenas (free-list of
+    fixed-size blocks + per-request page tables)
   * :mod:`repro.serving.scheduler` — continuous batching + escalation queues
   * :mod:`repro.serving.metrics`   — latency/throughput/Eq 7 accounting
   * :mod:`repro.serving.engine`    — CascadeEngine tying tiers together
@@ -14,9 +15,11 @@ from repro.serving.engine import CascadeEngine, TierSpec  # noqa: F401
 from repro.serving.metrics import ServingMetrics  # noqa: F401
 from repro.serving.request import Request, RequestState  # noqa: F401
 from repro.serving.scheduler import (CascadeScheduler, GateSpec)  # noqa: F401
-from repro.serving.slots import SlotAllocator, TierSlotPool  # noqa: F401
+from repro.serving.slots import (BlockAllocator, DenseTierSlotPool,  # noqa: F401
+                                 SlotAllocator, TierSlotPool)
 
 __all__ = [
     "CascadeEngine", "TierSpec", "ServingMetrics", "Request", "RequestState",
-    "CascadeScheduler", "GateSpec", "SlotAllocator", "TierSlotPool",
+    "CascadeScheduler", "GateSpec", "SlotAllocator", "BlockAllocator",
+    "TierSlotPool", "DenseTierSlotPool",
 ]

@@ -8,9 +8,12 @@ One engine step (tick) per tier:
      batch, and their caches scattered into the tier's slot arena; the
      first token (argmax of the prefill logits) is emitted immediately.
   2. **decode** — one fused decode step over the whole slot pool (fixed
-     shape => a single compiled program per tier).  Per-token confidence
-     comes from the Pallas :func:`repro.kernels.ops.confidence_gate`
-     (max-softmax-prob, the paper's conf) or a jnp fallback.
+     shape => a single compiled program per tier), attending through the
+     block-paged KV arena with the Pallas paged flash-decode kernel
+     (:mod:`repro.kernels.paged_attention`; page tables grow lazily as
+     rows cross block boundaries).  Per-token confidence comes from the
+     Pallas :func:`repro.kernels.ops.confidence_gate` (max-softmax-prob,
+     the paper's conf) or a jnp fallback.
   3. **gate** — requests that hit ``gen_len`` aggregate their token
      confidences; at non-final tiers the scheduler's gate (fixed δ or
      escalation budget) decides DONE vs ESCALATED.  Escalated requests
@@ -21,6 +24,7 @@ The clock is injectable: ``WallClock`` for real Poisson traffic,
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
@@ -32,11 +36,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import confidence as conf_lib
 from repro.kernels import ops as kernel_ops
+from repro.models import cache as cache_lib
 from repro.models import transformer
 from repro.serving.metrics import ServingMetrics, TierCost
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import CascadeScheduler, GateSpec
-from repro.serving.slots import TierSlotPool
+from repro.serving.slots import DenseTierSlotPool, TierSlotPool
 
 
 @dataclass
@@ -91,11 +96,19 @@ class _TierRuntime:
     """Per-tier compiled functions + host-side slot state."""
 
     def __init__(self, spec: TierSpec, capacity: int, prompt_len: int,
-                 max_seq: int, use_gate_kernel: bool):
+                 max_seq: int, use_gate_kernel: bool, *,
+                 use_paged_kv: bool = True, block_size: int = 16,
+                 kv_blocks: Optional[int] = None):
         self.spec = spec
         self.capacity = capacity
         self.prompt_len = prompt_len
-        self.pool = TierSlotPool(spec.cfg, capacity, max_seq)
+        self.paged = use_paged_kv
+        if use_paged_kv:
+            self.pool = TierSlotPool(spec.cfg, capacity, max_seq,
+                                     block_size=block_size,
+                                     num_blocks=kv_blocks)
+        else:
+            self.pool = DenseTierSlotPool(spec.cfg, capacity, max_seq)
         self.slot_req: List[Optional[Request]] = [None] * capacity
         self.tok = np.zeros(capacity, np.int32)
         self.pos = np.zeros(capacity, np.int32)
@@ -119,9 +132,10 @@ class _TierRuntime:
             tok, conf = pick(logits[:, -1])
             return part_cache, tok, conf
 
-        def step_fn(params, tok, cache, pos):
+        def step_fn(params, tok, cache, pos, page_table):
+            pages = {"page_table": page_table} if use_paged_kv else None
             logits, new_cache = transformer.decode_step(
-                params, cfg, tok, cache, pos)
+                params, cfg, tok, cache, pos, pages=pages)
             nxt, conf = pick(logits[:, 0])
             return nxt, conf, new_cache
 
@@ -131,6 +145,12 @@ class _TierRuntime:
         # ignores donation and warns, so only donate on accelerators.
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self.step_fn = jax.jit(step_fn, donate_argnums=donate)
+
+    def page_table_device(self):
+        if self.paged:
+            return jnp.asarray(self.pool.page_table)
+        # dense pools take a dummy (the traced fn ignores it)
+        return jnp.zeros((self.capacity, 1), jnp.int32)
 
     def occupied(self) -> List[int]:
         return [s for s, r in enumerate(self.slot_req) if r is not None]
@@ -151,13 +171,33 @@ class CascadeEngine:
                  escalation_budget: Optional[float] = None,
                  conf_reduce: str = "mean",
                  use_gate_kernel: bool = True,
+                 use_paged_kv: bool = True,
+                 kv_block_size: int = 16,
+                 kv_blocks: Optional[int | Sequence[Optional[int]]] = None,
                  clock=None):
+        """``use_paged_kv`` selects the block-paged KV arena + Pallas
+        paged flash-decode kernel (interpret mode off-TPU); False keeps
+        the PR 1 dense one-page-per-request arena (the reference path).
+        ``kv_blocks`` sizes each tier's arena in KV *blocks* of
+        ``kv_block_size`` tokens — None fully provisions
+        (``slots * ceil(max_seq / block_size) + 1``); a smaller count
+        over-subscribes the arena: admission is then block-limited and
+        rows may stall a tick waiting for a free block (attention-only
+        models; recurrent state cannot replay a stalled step)."""
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers = list(tiers)
         m = len(self.tiers)
         slots_per_tier = ([int(slots)] * m if np.isscalar(slots)
                           else [int(s) for s in slots])
+        kv_blocks_per_tier = (
+            [kv_blocks] * m if kv_blocks is None or np.isscalar(kv_blocks)
+            else [None if b is None else int(b) for b in kv_blocks])
+        if len(slots_per_tier) != m or len(kv_blocks_per_tier) != m:
+            raise ValueError(
+                f"per-tier sequences must match the {m} tiers: got "
+                f"{len(slots_per_tier)} slots, "
+                f"{len(kv_blocks_per_tier)} kv_blocks entries")
         if deltas is not None:
             gates = [GateSpec(delta=float(d)) for d in deltas]
         elif escalation_budget is not None:
@@ -177,9 +217,24 @@ class CascadeEngine:
              for t in self.tiers], slots_per_tier)
         self.clock = clock if clock is not None else WallClock()
         max_seq = prompt_len + gen_len
+        if use_paged_kv:
+            ppr = math.ceil(max_seq / kv_block_size)
+            for spec, cap, nb in zip(self.tiers, slots_per_tier,
+                                     kv_blocks_per_tier):
+                if nb is not None and nb < cap * ppr + 1 \
+                        and cache_lib.has_recurrent_state(spec.cfg):
+                    raise ValueError(
+                        f"tier {spec.name}: kv_blocks={nb} over-subscribes "
+                        "the arena but the model carries recurrent state "
+                        "(mamba/rwkv), which cannot replay a stalled "
+                        "decode step — use full provisioning (kv_blocks="
+                        "None)")
         self.runtimes = [
-            _TierRuntime(spec, cap, prompt_len, max_seq, use_gate_kernel)
-            for spec, cap in zip(self.tiers, slots_per_tier)]
+            _TierRuntime(spec, cap, prompt_len, max_seq, use_gate_kernel,
+                         use_paged_kv=use_paged_kv, block_size=kv_block_size,
+                         kv_blocks=nb)
+            for spec, cap, nb in zip(self.tiers, slots_per_tier,
+                                     kv_blocks_per_tier)]
         self.requests: List[Request] = []
         self._rid = 0
 
@@ -202,7 +257,22 @@ class CascadeEngine:
 
     def _admit(self, tier: int, now: float) -> None:
         rt = self.runtimes[tier]
-        reqs, slot_ids = self.scheduler.admit(tier, now)
+        if rt.paged:
+            # block-aware admission: one request at a time, binding its
+            # prompt pages, until rows, blocks, or the queue run out
+            # (can_admit leaves the oldest row its worst-case remaining
+            # demand — the discipline that makes over-subscription
+            # deadlock-free; see serving.slots)
+            reqs, slot_ids = [], []
+            while rt.pool.can_admit(self.prompt_len):
+                r, s = self.scheduler.admit(tier, now, limit=1)
+                if not r:
+                    break
+                rt.pool.bind(s[0], self.prompt_len)
+                reqs += r
+                slot_ids += s
+        else:
+            reqs, slot_ids = self.scheduler.admit(tier, now)
         if not reqs:
             return
         self.metrics.record_admission(tier, len(reqs))
@@ -212,11 +282,11 @@ class CascadeEngine:
         part_cache, ftok, fconf = rt.prefill_fn(
             rt.spec.params, jnp.asarray(prompts))
         rt.pool.write_prefill(slot_ids, part_cache)
-        ftok = np.asarray(ftok)
-        fconf = np.asarray(fconf)
-        # np.asarray blocked until prefill finished; timestamp tokens with
-        # the post-compute clock so TTFT includes prefill, not just queueing
-        # (VirtualClock is constant within a step, so ticks are unaffected)
+        # one blocking transfer for both outputs (device_get blocks until
+        # prefill finished); timestamp tokens with the post-compute clock
+        # so TTFT includes prefill, not just queueing (VirtualClock is
+        # constant within a step, so ticks are unaffected)
+        ftok, fconf = jax.device_get((ftok, fconf))
         t_emit = self.clock.now()
         for i, (req, slot) in enumerate(zip(reqs, slot_ids)):
             req.start_decode()
@@ -230,18 +300,35 @@ class CascadeEngine:
         decoding = rt.decoding()
         if not decoding:
             return 0
+        if rt.paged:
+            # grow page tables lazily as rows cross block boundaries,
+            # oldest row first.  A row denied a block *stalls*: its page
+            # stays unmapped (writes hit the null block), its output is
+            # discarded, and it retries next tick — attention KV replay
+            # is idempotent, and over-subscription is rejected at engine
+            # construction for models with recurrent state.
+            dec = set(decoding)
+            active = [s for s in rt.pool.bound_rows()
+                      if s in dec and rt.pool.ensure_blocks(
+                          s, int(rt.pos[s]))]
+            if not active:
+                return 0
+        else:
+            active = decoding
         nxt, conf, rt.pool.cache = rt.step_fn(
             rt.spec.params, jnp.asarray(rt.tok[:, None]),
-            rt.pool.cache, jnp.asarray(rt.pos[:, None]))
-        nxt = np.asarray(nxt)
-        conf = np.asarray(conf)
+            rt.pool.cache, jnp.asarray(rt.pos[:, None]),
+            rt.page_table_device())
+        # single blocking transfer per tick for both outputs (was two
+        # sequential np.asarray syncs)
+        nxt, conf = jax.device_get((nxt, conf))
         t_emit = self.clock.now()       # post-compute (see _admit)
-        for slot in decoding:
+        for slot in active:
             req = rt.slot_req[slot]
             req.emit(int(nxt[slot]), float(conf[slot]), t_emit)
             rt.tok[slot] = nxt[slot]
             rt.pos[slot] += 1
-        return len(decoding)
+        return len(active)
 
     def _finish(self, tier: int, now: float) -> None:
         rt = self.runtimes[tier]
@@ -262,6 +349,8 @@ class CascadeEngine:
             rt.slot_req[slot] = None
             rt.tok[slot] = 0
             rt.pos[slot] = 0
+            if rt.paged:
+                rt.pool.release(slot)
             self.scheduler.release(tier, slot)
 
     def step(self, now: Optional[float] = None) -> None:
@@ -287,6 +376,13 @@ class CascadeEngine:
     def _done(self) -> bool:
         return self.scheduler.pending == 0 and not self._any_occupied()
 
+    def memory_stats(self) -> List[dict]:
+        """Per-tier KV arena accounting: block geometry, static arena
+        bytes, high-water bytes actually mapped (paged), and what the
+        dense one-page-per-request arena would have allocated."""
+        return [dict(tier=rt.spec.name, **rt.pool.memory_stats())
+                for rt in self.runtimes]
+
     def reset_clock(self) -> None:
         """Restart the clock at t=0.  Call after compilation / setup and
         before submitting timed requests, so arrival timestamps are
@@ -297,15 +393,18 @@ class CascadeEngine:
         """Trigger tier compiles before the clock starts: one prefill +
         one decode per tier on dummy data.  The decode's returned cache is
         rebound (step_fn donates its cache input on accelerators); the
-        dummy write lands at position 0 of free rows, which the next
-        occupant's prefill overwrites.  Ends by resetting the clock so
-        compile time never counts against request latency."""
+        dummy write lands in the reserved null block (paged: empty page
+        tables point at block 0) or at position 0 of free rows (dense),
+        neither of which the next occupant ever attends.  Ends by
+        resetting the clock so compile time never counts against request
+        latency."""
         for rt in self.runtimes:
             prompts = jnp.zeros((rt.capacity, self.prompt_len), jnp.int32)
             rt.prefill_fn(rt.spec.params, prompts)
             zeros = jnp.zeros((rt.capacity, 1), jnp.int32)
             _, _, rt.pool.cache = rt.step_fn(rt.spec.params, zeros,
-                                             rt.pool.cache, zeros)
+                                             rt.pool.cache, zeros,
+                                             rt.page_table_device())
         self.reset_clock()
 
     def run(self, max_steps: int = 1_000_000) -> dict:

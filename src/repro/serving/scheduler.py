@@ -75,13 +75,17 @@ class CascadeScheduler:
         q = self.queues[tier]
         return bool(q) and (tier > 0 or q[0].arrival_time <= now)
 
-    def admit(self, tier: int, now: float) -> Tuple[List[Request], List[int]]:
+    def admit(self, tier: int, now: float,
+              limit: Optional[int] = None) -> Tuple[List[Request], List[int]]:
         """Pop requests into free slots of `tier` until either runs out.
-        Returns the packed (requests, slot_ids) admitted this step."""
+        Returns the packed (requests, slot_ids) admitted this step.
+        ``limit`` caps the number admitted (the engine's block-paged KV
+        arena may run out of blocks before the tier runs out of rows)."""
         reqs: List[Request] = []
         slots: List[int] = []
         alloc = self.allocators[tier]
-        while self.admissible(tier, now) and alloc.num_free > 0:
+        while self.admissible(tier, now) and alloc.num_free > 0 \
+                and (limit is None or len(reqs) < limit):
             slot = alloc.alloc()
             req = self.queues[tier].popleft()
             req.admit(tier, slot, now)

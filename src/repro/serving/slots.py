@@ -1,24 +1,44 @@
-"""Paged KV-cache slot pools.
+"""Block-paged KV-cache slot pools.
 
-Each cascade tier owns a fixed arena of ``capacity`` cache rows (one page
-per in-flight request) allocated once via :func:`repro.models.init_cache`
-at ``[capacity, max_seq, ...]``.  A free-list allocator hands out row ids;
-freeing a slot returns the row for reuse without touching device memory —
-the next occupant's prefill overwrites the prefix ``[0, P)`` and decode
-masks positions ``> pos`` per row, so stale keys from the previous
-occupant are never attended to.
+Each cascade tier owns
 
-Recurrent state (mamba conv/ssm, rwkv6) has no sequence dim per row and is
-fully overwritten at prefill, so reuse is trivially safe there too.
+  * ``capacity`` request rows — the fused decode batch.  Recurrent state
+    (mamba conv/ssm, rwkv6, rwkv_cmix token shift) lives per row and is
+    fully overwritten at prefill, so row reuse is trivially safe.
+  * a shared pool of ``num_blocks`` fixed-size KV blocks
+    (``[num_blocks, block_size, kv_heads, head_dim]`` per attention
+    layer, from :func:`repro.models.cache.init_paged_cache`).  Each row
+    maps its live tokens through a page table ``[capacity, pages_per_row]``
+    of block ids; entries default to the reserved **null block 0**, which
+    is never allocated — unmapped pages (and rows stalled waiting for a
+    block) read/write block 0 and are masked or discarded.
+
+Freeing returns blocks to the free list without touching device memory.
+Reuse is safe because a block only becomes reachable through a row's page
+table when that row's position enters the page, and decode masks key
+positions ``> pos`` per row — by the time any position of a reused block
+is attended, the new occupant has overwritten it (prefill scatters the
+prompt prefix; decode writes token ``pos`` before reading it).
+
+Deadlock freedom under over-subscription (``num_blocks`` smaller than
+``capacity * pages_per_row + 1``) follows an oldest-first discipline:
+the oldest bound row may always take a free block, while younger rows
+and new admissions must leave ``worst_remaining(oldest)`` blocks free.
+Since every row releases all its blocks when it finishes, the oldest row
+always completes, then the next-oldest inherits the guarantee.
 """
 from __future__ import annotations
 
+import math
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import cache as cache_lib
+
+NULL_BLOCK = 0
 
 
 class SlotAllocator:
@@ -57,19 +77,58 @@ class SlotAllocator:
         return self.num_used / self.capacity
 
 
-def _batch_axes(cfg, capacity: int, max_seq: int):
-    """Pytree (matching the cache) of each leaf's batch-dim index —
-    period-stacked leaves carry a leading ``num_periods`` dim, so their
-    batch axis is 1, not 0."""
-    decl = cache_lib.declare_cache(cfg, capacity, max_seq)
-    return jax.tree.map(lambda c: c.axes.index("batch"), decl,
+class BlockAllocator:
+    """Free-list over KV blocks ``1..num_blocks-1`` (0 = null block)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one block besides the null block")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._used = set()
+        self.high_water = 0
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        b = self._free.pop()
+        self._used.add(b)
+        self.high_water = max(self.high_water, len(self._used))
+        return b
+
+    def free(self, block: int) -> None:
+        if block not in self._used:
+            raise ValueError(f"block {block} is not allocated")
+        self._used.remove(block)
+        self._free.append(block)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+
+# -- pytree scatter helpers --------------------------------------------------
+
+
+def _leaf_meta(decl_tree):
+    """Per-leaf scatter metadata from a paged cache declaration: either
+    ('paged', i) with i the kv_blocks axis (offset axis is i+1), or
+    ('row', i) with i the per-request batch axis."""
+    def meta(c: cache_lib.CP):
+        if "kv_blocks" in c.axes:
+            return ("paged", c.axes.index("kv_blocks"))
+        return ("row", c.axes.index("batch"))
+    return jax.tree.map(meta, decl_tree,
                         is_leaf=lambda x: isinstance(x, cache_lib.CP))
 
 
 def _write_rows(full, part, bax: int, slot_ids):
     """Scatter `part`'s rows into `full` at `slot_ids` along axis `bax`,
-    writing only the prefix of any dim where part is shorter (the KV seq
-    dim after a prefill of P < max_seq tokens)."""
+    writing only the prefix of any dim where part is shorter."""
     idx = [slice(None)] * full.ndim
     idx[bax] = slot_ids
     for d in range(full.ndim):
@@ -78,29 +137,241 @@ def _write_rows(full, part, bax: int, slot_ids):
     return full.at[tuple(idx)].set(part.astype(full.dtype))
 
 
-def _take_rows(tree, bax_tree, n: int):
-    return jax.tree.map(
-        lambda a, bax: jax.lax.slice_in_dim(a, 0, n, axis=bax),
-        tree, bax_tree)
+def _write_paged(full, part, bax: int, blk, off):
+    """Scatter packed prefill tokens into the block pool.  ``full`` has
+    (kv_blocks, block) at axes (bax, bax+1); ``part`` is the dense prefill
+    leaf with (batch, seq) there; ``blk``/``off`` are [n, prompt_len]
+    index arrays.  Adjacent advanced indices keep their position, so the
+    gather/scatter dims line up with part's (batch, seq) dims."""
+    idx = [slice(None)] * full.ndim
+    idx[bax] = blk
+    idx[bax + 1] = off
+    pidx = [slice(None)] * part.ndim
+    pidx[bax] = slice(0, blk.shape[0])
+    pidx[bax + 1] = slice(0, blk.shape[1])
+    return full.at[tuple(idx)].set(part[tuple(pidx)].astype(full.dtype))
 
 
 class TierSlotPool:
-    """Slot allocator + the tier's actual cache arena."""
+    """Request rows + block-paged KV arena for one cascade tier.
+
+    ``num_blocks=None`` fully provisions the pool
+    (``capacity * ceil(max_seq / block_size) + 1`` blocks): identical
+    admission behaviour to the old one-page-per-request arena, and no
+    stall can ever occur.  Smaller ``num_blocks`` over-subscribes the
+    arena — admission and block growth then enforce the oldest-first
+    reserve discipline (see module docstring).
+    """
+
+    def __init__(self, cfg, capacity: int, max_seq: int, dtype=jnp.float32,
+                 *, block_size: int = 16, num_blocks: Optional[int] = None):
+        if block_size <= 0:
+            raise ValueError("block_size must be positive")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.dtype = dtype
+        self.block_size = block_size
+        self.pages_per_row = math.ceil(max_seq / block_size)
+        full = capacity * self.pages_per_row + 1
+        self.num_blocks = full if num_blocks is None else int(num_blocks)
+        if self.num_blocks < self.pages_per_row + 1:
+            raise ValueError(
+                f"num_blocks={self.num_blocks} cannot hold one full request "
+                f"({self.pages_per_row} blocks) plus the null block")
+        self.oversubscribed = self.num_blocks < full
+        self.blocks = BlockAllocator(self.num_blocks)
+        self.cache = cache_lib.init_paged_cache(
+            cfg, capacity, self.num_blocks, block_size, dtype)
+        decl = cache_lib.declare_paged_cache(
+            cfg, capacity, self.num_blocks, block_size, dtype)
+        self._meta = _leaf_meta(decl)
+        self.page_table = np.zeros((capacity, self.pages_per_row), np.int32)
+        self._row_blocks: List[List[int]] = [[] for _ in range(capacity)]
+        self._order: List[int] = []     # bound rows, oldest first
+
+    # -- admission-side block accounting -----------------------------------
+
+    def _worst_remaining(self, slot: int) -> int:
+        return self.pages_per_row - len(self._row_blocks[slot])
+
+    def _oldest_worst(self) -> int:
+        return self._worst_remaining(self._order[0]) if self._order else 0
+
+    def blocks_for(self, ntokens: int) -> int:
+        return math.ceil(ntokens / self.block_size)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """True if a new request's prompt pages fit while leaving the
+        oldest bound row its worst-case remaining demand."""
+        need = self.blocks_for(prompt_len)
+        return self.blocks.num_free - need >= self._oldest_worst()
+
+    def bind(self, slot: int, prompt_len: int) -> None:
+        """Claim `slot` (newest) and allocate its prompt pages.  Callers
+        must check :meth:`can_admit` first."""
+        if self._row_blocks[slot]:
+            raise ValueError(f"slot {slot} already bound")
+        need = self.blocks_for(prompt_len)
+        if self.blocks.num_free < need:
+            raise RuntimeError("bind without can_admit: no free blocks")
+        self._order.append(slot)
+        for j in range(need):
+            b = self.blocks.alloc()
+            self._row_blocks[slot].append(b)
+            self.page_table[slot, j] = b
+
+    def ensure_blocks(self, slot: int, pos: int) -> bool:
+        """Grow `slot`'s page table to cover token index `pos`.  Returns
+        False (row must stall this tick) if the reserve discipline denies
+        the allocation; the oldest bound row is never denied."""
+        page = pos // self.block_size
+        if page >= self.pages_per_row:
+            raise ValueError(f"pos {pos} beyond max_seq {self.max_seq}")
+        is_oldest = bool(self._order) and self._order[0] == slot
+        while len(self._row_blocks[slot]) <= page:
+            if not is_oldest and \
+                    self.blocks.num_free - 1 < self._oldest_worst():
+                return False
+            b = self.blocks.alloc()
+            if b is None:
+                return False
+            j = len(self._row_blocks[slot])
+            self._row_blocks[slot].append(b)
+            self.page_table[slot, j] = b
+        return True
+
+    def bound_rows(self) -> List[int]:
+        """Bound request rows, oldest first (block-growth priority)."""
+        return list(self._order)
+
+    def release(self, slot: int) -> None:
+        """Return `slot`'s blocks to the free list and unmap its pages.
+        Stale device memory is never attended: the pages are unreachable
+        once the table row is zeroed, and the next occupant overwrites a
+        reused block before its positions pass the per-row mask."""
+        for b in self._row_blocks[slot]:
+            self.blocks.free(b)
+        self._row_blocks[slot] = []
+        self.page_table[slot] = NULL_BLOCK
+        self._order.remove(slot)
+
+    # -- device-side writes ------------------------------------------------
+
+    def write_prefill(self, slot_ids: Sequence[int], part_cache) -> None:
+        """Scatter a packed prefill cache (rows ``0..n-1``) into the tier
+        arena: attention KV goes through the page tables into the block
+        pool, recurrent leaves into their request rows.  ``bind`` must
+        have allocated each slot's prompt pages already."""
+        n = len(slot_ids)
+        ids = jnp.asarray(slot_ids, jnp.int32)
+        # token index t of row i lives at (page_table[slot_i, t // bs],
+        # t % bs); prompt_len comes from the part cache's kv_seq dim
+        prompt_len = _prompt_len(part_cache, self._meta)
+        if prompt_len is not None:
+            t = np.arange(prompt_len)
+            blk = self.page_table[np.asarray(slot_ids)][:, t // self.block_size]
+            off = np.broadcast_to(t % self.block_size, (n, prompt_len))
+            blk = jnp.asarray(blk, jnp.int32)
+            off = jnp.asarray(off, jnp.int32)
+        else:
+            blk = off = None
+
+        def write(full, part, meta):
+            kind, ax = meta
+            if kind == "paged":
+                return _write_paged(full, part, ax, blk, off)
+            part = jax.lax.slice_in_dim(part, 0, n, axis=ax)
+            return _write_rows(full, part, ax, ids)
+
+        self.cache = jax.tree.map(write, self.cache, part_cache, self._meta)
+
+    # -- memory accounting -------------------------------------------------
+
+    def _paged_leaf_bytes_per_block(self) -> int:
+        total = []
+
+        def acc(c: cache_lib.CP):
+            if "kv_blocks" in c.axes:
+                per = np.dtype(c.dtype).itemsize
+                for a, s in zip(c.axes, c.shape):
+                    if a not in ("kv_blocks",):
+                        per *= s
+                total.append(per)
+            return c
+        jax.tree.map(acc, cache_lib.declare_paged_cache(
+            self.cfg, self.capacity, self.num_blocks, self.block_size,
+            self.dtype), is_leaf=lambda x: isinstance(x, cache_lib.CP))
+        return int(sum(total))
+
+    def memory_stats(self) -> dict:
+        per_block = self._paged_leaf_bytes_per_block()
+        per_token = per_block // self.block_size if self.block_size else 0
+        return {
+            "block_size": self.block_size,
+            "num_blocks": self.num_blocks,
+            "kv_bytes_per_block": per_block,
+            "kv_arena_bytes": per_block * self.num_blocks,
+            "kv_high_water_bytes": per_block * self.blocks.high_water,
+            "kv_high_water_blocks": self.blocks.high_water,
+            # what the one-page-per-request arena (PR 1) would allocate
+            "dense_equiv_bytes": per_token * self.capacity * self.max_seq,
+        }
+
+
+def _prompt_len(part_cache, meta_tree) -> Optional[int]:
+    """Seq length of the packed prefill cache's first attention leaf."""
+    leaves_p, _ = jax.tree.flatten(part_cache)
+    leaves_m, _ = jax.tree.flatten(meta_tree,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    for part, (kind, ax) in zip(leaves_p, leaves_m):
+        if kind == "paged":
+            return part.shape[ax + 1]
+    return None
+
+
+class DenseTierSlotPool:
+    """The PR 1 one-page-per-request arena (``[capacity, max_seq, ...]``
+    rows): kept as the dense reference the paged pool is validated
+    against (``CascadeEngine(use_paged_kv=False)``)."""
 
     def __init__(self, cfg, capacity: int, max_seq: int, dtype=jnp.float32):
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
-        self.allocator = SlotAllocator(capacity)
+        self.dtype = dtype
         self.cache = cache_lib.init_cache(cfg, capacity, max_seq, dtype)
-        self._bax = _batch_axes(cfg, capacity, max_seq)
+        decl = cache_lib.declare_cache(cfg, capacity, max_seq, dtype)
+        self._bax = jax.tree.map(
+            lambda c: c.axes.index("batch"), decl,
+            is_leaf=lambda x: isinstance(x, cache_lib.CP))
 
     def write_prefill(self, slot_ids: Sequence[int], part_cache) -> None:
-        """Write a packed prefill cache (rows ``0..n-1``) into arena rows
-        ``slot_ids``."""
         n = len(slot_ids)
         ids = jnp.asarray(slot_ids, jnp.int32)
-        part = _take_rows(part_cache, self._bax, n)
+        part = jax.tree.map(
+            lambda a, bax: jax.lax.slice_in_dim(a, 0, n, axis=bax),
+            part_cache, self._bax)
         self.cache = jax.tree.map(
             lambda full, p, bax: _write_rows(full, p, bax, ids),
             self.cache, part, self._bax)
+
+    def memory_stats(self) -> dict:
+        nbytes = []
+
+        def acc(c):
+            if "kv_seq" in getattr(c, "axes", ()):
+                nbytes.append(int(np.prod(c.shape))
+                              * np.dtype(c.dtype).itemsize)
+            return c
+        jax.tree.map(acc, cache_lib.declare_cache(
+            self.cfg, self.capacity, self.max_seq, self.dtype),
+            is_leaf=lambda x: isinstance(x, cache_lib.CP))
+        total = int(sum(nbytes))
+        return {
+            "block_size": self.max_seq,
+            "num_blocks": self.capacity,
+            "kv_arena_bytes": total,
+            "kv_high_water_bytes": total,
+            "dense_equiv_bytes": total,
+        }
