@@ -1,13 +1,16 @@
 """Serving throughput benchmark: the async cascade engine under Poisson
-traffic, swept over offered load.
+traffic, swept over offered load and prompt-length distribution.
 
 Emits one ``BENCH {json}`` line (and a json file) with throughput,
-latency percentiles, escalation rate, and Eq 7 cascade-vs-always-expensive
-FLOPs per request — the start of the serving perf trajectory.
+latency percentiles, escalation rate, Eq 7 cascade-vs-always-expensive
+FLOPs per request, and — for the mixed-length workloads served by chunked
+paged prefill — the live-vs-processed prefill token ratio (the padding
+tax the chunked path removes) and per-prompt-length-bucket TTFT.
 
     PYTHONPATH=src python -m benchmarks.serving_throughput
 
-Scale knobs: REPRO_SERVE_BENCH_{REQUESTS,SLOTS,GEN_LEN} (smoke defaults).
+Scale knobs: REPRO_SERVE_BENCH_{REQUESTS,SLOTS,GEN_LEN,PROMPT_LEN,
+CHUNK,DISTS} (smoke defaults).
 """
 from __future__ import annotations
 
@@ -18,7 +21,11 @@ import time
 REQUESTS = int(os.environ.get("REPRO_SERVE_BENCH_REQUESTS", "48"))
 SLOTS = int(os.environ.get("REPRO_SERVE_BENCH_SLOTS", "8"))
 GEN_LEN = int(os.environ.get("REPRO_SERVE_BENCH_GEN_LEN", "12"))
+PROMPT_LEN = int(os.environ.get("REPRO_SERVE_BENCH_PROMPT_LEN", "64"))
+CHUNK = int(os.environ.get("REPRO_SERVE_BENCH_CHUNK", "16"))
 RATES = (4.0, 16.0)
+DISTS = tuple(os.environ.get("REPRO_SERVE_BENCH_DISTS",
+                             "uniform,lognormal,bimodal").split(","))
 OUT = os.environ.get("REPRO_SERVE_BENCH_OUT",
                      "experiments/bench/serving_throughput.json")
 
@@ -54,46 +61,62 @@ def main() -> None:
     from repro.launch import serve_async
 
     points = []
-    for rate in RATES:
-        args = serve_async.make_parser().parse_args([
-            "--requests", str(REQUESTS), "--rate", str(rate),
-            "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
-            "--prompt-len", "16",
-        ])
-        t0 = time.time()
-        s = serve_async.run(args)
-        check_open_loop(s)
-        points.append({
-            "rate": rate,
-            "offered_rate": s["offered_rate"],
-            "requests": s["requests"],
-            "throughput": s["throughput"],
-            "latency_p50": s["latency_p50"],
-            "latency_p95": s["latency_p95"],
-            "ttft_p50": s["ttft_p50"],
-            "escalation_rate": s["escalation_rates"][0],
-            "escalation_budget": s["escalation_budget"],
-            "tier_utilization": s["tier_utilization"],
-            "flops_per_request_cascade": s["flops_per_request_cascade"],
-            "flops_per_request_always_expensive":
-                s["flops_per_request_always_expensive"],
-            "kv_arena": s["kv_arena"],
-            "kv_high_water_bytes_total":
-                sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
-            "kv_dense_equiv_bytes_total":
-                sum(t["dense_equiv_bytes"] for t in s["kv_arena"]),
-            "wall_s": time.time() - t0,
-        })
-        print(f"rate={rate}: throughput {s['throughput']:.2f} req/s "
-              f"(offered {s['offered_rate']:.2f}), "
-              f"p50 {s['latency_p50']:.3f}s, p95 {s['latency_p95']:.3f}s, "
-              f"esc {s['escalation_rates'][0]:.3f} "
-              f"(budget {s['escalation_budget']})", flush=True)
+    for dist in DISTS:
+        for rate in RATES:
+            args = serve_async.make_parser().parse_args([
+                "--requests", str(REQUESTS), "--rate", str(rate),
+                "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
+                "--prompt-len", str(PROMPT_LEN),
+                "--length-dist", dist, "--prefill-chunk", str(CHUNK),
+            ])
+            t0 = time.time()
+            s = serve_async.run(args)
+            check_open_loop(s)
+            points.append({
+                "rate": rate,
+                "length_dist": dist,
+                "max_prompt_len": PROMPT_LEN,
+                "prompt_len_mean": s["prompt_len_mean"],
+                "prefill_chunk": s["prefill_chunk"],
+                "offered_rate": s["offered_rate"],
+                "requests": s["requests"],
+                "throughput": s["throughput"],
+                "latency_p50": s["latency_p50"],
+                "latency_p95": s["latency_p95"],
+                "ttft_p50": s["ttft_p50"],
+                "ttft_p50_by_prompt_bucket":
+                    s["ttft_p50_by_prompt_bucket"],
+                "prefill_live_tokens": s["prefill_live_tokens"],
+                "prefill_processed_tokens": s["prefill_processed_tokens"],
+                "prefill_live_token_ratio": s["prefill_live_token_ratio"],
+                "escalation_rate": s["escalation_rates"][0],
+                "escalation_budget": s["escalation_budget"],
+                "tier_utilization": s["tier_utilization"],
+                "flops_per_request_cascade": s["flops_per_request_cascade"],
+                "flops_per_request_always_expensive":
+                    s["flops_per_request_always_expensive"],
+                "kv_arena": s["kv_arena"],
+                "kv_high_water_bytes_total":
+                    sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
+                "kv_dense_equiv_bytes_total":
+                    sum(t["dense_equiv_bytes"] for t in s["kv_arena"]),
+                "wall_s": time.time() - t0,
+            })
+            print(f"dist={dist} rate={rate}: "
+                  f"throughput {s['throughput']:.2f} req/s "
+                  f"(offered {s['offered_rate']:.2f}), "
+                  f"p50 {s['latency_p50']:.3f}s, "
+                  f"ttft p50 {s['ttft_p50']:.3f}s, "
+                  f"live-token ratio {s['prefill_live_token_ratio']:.3f}, "
+                  f"esc {s['escalation_rates'][0]:.3f} "
+                  f"(budget {s['escalation_budget']})", flush=True)
 
     bench = {
         "bench": "serving_throughput",
         "slots": SLOTS,
         "gen_len": GEN_LEN,
+        "max_prompt_len": PROMPT_LEN,
+        "prefill_chunk": CHUNK,
         "env": environment(),
         "points": points,
         "flops_saving_vs_always_expensive": [

@@ -1,0 +1,131 @@
+"""Doc-reference checker: every ``path/file.py`` (and
+``path/file.py::symbol``) mentioned in README.md / docs/*.md must resolve
+against the tree.
+
+Docs rot silently — the PR 1 review already caught a stale docstring, and
+a paper-to-code map is only useful while its file:symbol references are
+real.  This script extracts path-shaped references from the markdown
+documentation and fails CI when one no longer resolves:
+
+  * ``some/path.py`` (also .md/.yml/.yaml/.txt/.json/.sh/.toml) — must
+    exist relative to the repo root, ``src/``, or ``src/repro/`` (docs
+    refer to modules the way imports do, e.g. ``serving/slots.py``).
+  * ``some/path.py::symbol`` — the file must exist *and* every dotted
+    component of ``symbol`` must occur as a word in it (functions,
+    classes, methods, test names).
+
+URLs and glob patterns are ignored.  Run it directly::
+
+    python scripts/check_docs.py            # README.md + docs/*.md
+    python scripts/check_docs.py FILE...    # explicit files
+
+Exit status 0 when every reference resolves, 1 otherwise (one line per
+broken reference).  Wired into CI (.github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+EXTS = "py|md|yml|yaml|txt|json|sh|toml"
+
+# `path/to/file.py::symbol` or bare `path/to/file.py` in backticks or
+# prose; paths start with a word character and may contain / . - _
+_REF = re.compile(
+    rf"(?P<path>[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:{EXTS}))"
+    rf"(?:::(?P<symbol>[A-Za-z_][A-Za-z0-9_.]*))?")
+
+# roots a doc path may be relative to (docs refer to python modules the
+# way imports see them: `serving/slots.py` means src/repro/serving/...)
+SEARCH_ROOTS = ("", "src", "src/repro")
+
+
+def find_refs(text: str) -> List[Tuple[int, str, Optional[str]]]:
+    """(lineno, path, symbol-or-None) for every reference in `text`."""
+    refs = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in _REF.finditer(line):
+            start = m.start()
+            prefix = line[:start]
+            # skip URLs (http://host/x.py) and glob patterns (docs/*.md)
+            if prefix.rstrip().endswith(("://", "/")) and "://" in prefix:
+                continue
+            if start >= 1 and line[start - 1] in "*$":
+                continue
+            refs.append((lineno, m.group("path"), m.group("symbol")))
+    return refs
+
+
+def resolve(path: str, root: Path) -> Optional[Path]:
+    """First existing candidate for a doc path, or None."""
+    for base in SEARCH_ROOTS:
+        cand = root / base / path
+        if cand.is_file():
+            return cand
+    return None
+
+
+def check_text(text: str, root: Path, name: str = "<doc>") -> List[str]:
+    """Error strings for every unresolvable reference in `text`."""
+    errors = []
+    bodies = {}                 # resolved path -> file text (docs cite the
+    for lineno, path, symbol in find_refs(text):    # same modules often)
+        target = resolve(path, root)
+        if target is None:
+            errors.append(f"{name}:{lineno}: `{path}` not found under "
+                          f"{{{', '.join(r or '.' for r in SEARCH_ROOTS)}}}")
+            continue
+        if symbol is None:
+            continue
+        if target not in bodies:
+            bodies[target] = target.read_text(encoding="utf-8",
+                                              errors="replace")
+        body = bodies[target]
+        for part in symbol.split("."):
+            if not re.search(rf"\b{re.escape(part)}\b", body):
+                errors.append(
+                    f"{name}:{lineno}: `{path}::{symbol}` — "
+                    f"no symbol `{part}` in {target.relative_to(root)}")
+                break
+    return errors
+
+
+def check_file(md_path: Path, root: Path) -> List[str]:
+    try:
+        name = str(md_path.relative_to(root))
+    except ValueError:                  # e.g. a tmp file under test
+        name = str(md_path)
+    return check_text(md_path.read_text(encoding="utf-8"), root, name)
+
+
+def default_docs(root: Path) -> List[Path]:
+    docs = []
+    readme = root / "README.md"
+    if readme.is_file():
+        docs.append(readme)
+    docs.extend(sorted((root / "docs").glob("*.md")))
+    return docs
+
+
+def main(argv: List[str]) -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [Path(a).resolve() for a in argv] if argv else default_docs(root)
+    if not files:
+        print("check_docs: no documentation files found", file=sys.stderr)
+        return 1
+    errors = []
+    checked = 0
+    for f in files:
+        errors.extend(check_file(f, root))
+        checked += 1
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {checked} file(s), "
+          f"{len(errors)} broken reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -80,6 +80,44 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
     return out.astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, page_table, q_start,
+                                q_len, *, k_scale=None, v_scale=None,
+                                window=None):
+    """Gather-then-attend oracle for the chunked paged *prefill* kernel.
+
+    q [B,C,KV,G,hd] — a chunk of C query tokens per row; row b's query i
+    sits at absolute position ``q_start[b] + i`` and attends keys at
+    ``t <= q_start[b] + i`` gathered through ``page_table`` [B,P].
+    Queries at ``i >= q_len[b]`` are padding: their output is zeroed here
+    (the kernel leaves them unspecified — compare valid queries only).
+    Returns [B,C,KV,G,hd].
+    """
+    B, C, KV, G, hd = q.shape
+    bs = k_pages.shape[1]
+    P = page_table.shape[1]
+    k = k_pages[page_table].astype(jnp.float32)       # [B,P,bs,KV,hd]
+    v = v_pages[page_table].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[page_table].astype(jnp.float32)[..., None]
+        v = v * v_scale[page_table].astype(jnp.float32)[..., None]
+    T = P * bs
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bckgd,btkd->bkgct", q.astype(jnp.float32), k) * scale
+    pos_q = q_start[:, None] + jnp.arange(C)[None, :]     # [B,C]
+    t_idx = jnp.arange(T)[None, None, None, None, :]
+    pq = pos_q[:, None, None, :, None]
+    mask = t_idx <= pq
+    if window is not None:
+        mask &= t_idx > pq - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgct,btkd->bckgd", p, v)
+    valid = (jnp.arange(C)[None, :] < q_len[:, None])[:, :, None, None, None]
+    return jnp.where(valid, out, 0.0).astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u):
     """All inputs [B,H,T,hd] except u [H,hd].  Returns y [B,H,T,hd].
 

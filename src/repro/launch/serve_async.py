@@ -6,17 +6,27 @@ times), are admitted into ``--slots`` KV slots per tier as they free up
 (continuous batching), and low-confidence sequences are escalated to the
 expensive tier through packed escalation queues.
 
+Real traffic has mixed prompt lengths: ``--length-dist
+{uniform,lognormal,bimodal}`` samples a per-request length in
+``[--min-prompt-len, --prompt-len]`` and the engine's chunked paged
+prefill (``--prefill-chunk`` tokens per row per tick, admission capped at
+``--prefill-token-budget`` prompt tokens per tier per tick) serves them
+with no cross-row padding beyond each row's last chunk.  ``--dense-kv``
+or ``--no-chunked-prefill`` fall back to the uniform packed prefill
+(uniform lengths only).
+
 The gate threshold is set from an escalation *budget* by default
 (δ = the budget-quantile of recently observed sequence confidences —
 the operator caps cost, the runtime finds δ); pass ``--delta`` for a
 fixed threshold instead.
 
     PYTHONPATH=src python -m repro.launch.serve_async \
-        --requests 64 --rate 8 --slots 8
+        --requests 64 --rate 8 --slots 8 --length-dist lognormal
 
-Reports p50/p95 latency, time-to-first-token, throughput, per-tier
-utilization, escalation rate, and Eq 7 FLOPs/request vs the
-always-fast / always-expensive envelopes.
+Reports p50/p95 latency, time-to-first-token (overall and per
+prompt-length bucket), throughput, per-tier utilization, escalation
+rate, live-vs-processed prefill token ratio, and Eq 7 FLOPs/request vs
+the always-fast / always-expensive envelopes.
 """
 from __future__ import annotations
 
@@ -50,6 +60,10 @@ def build_engine(args, clock=None):
         use_gate_kernel=not args.no_gate_kernel,
         use_paged_kv=not args.dense_kv, kv_block_size=args.kv_block_size,
         kv_blocks=args.kv_blocks,
+        use_chunked_prefill=False if (args.no_chunked_prefill
+                                      or args.dense_kv) else None,
+        prefill_chunk=args.prefill_chunk,
+        prefill_token_budget=args.prefill_token_budget,
         clock=clock if clock is not None else WallClock(), **gate_kw)
     return engine, min(fast_cfg.vocab_size, exp_cfg.vocab_size)
 
@@ -59,16 +73,52 @@ def poisson_arrivals(n: int, rate: float, seed: int) -> np.ndarray:
     return np.cumsum(rng.exponential(1.0 / rate, size=n))
 
 
+def sample_lengths(dist: str, n: int, max_len: int, min_len: int,
+                   seed: int) -> np.ndarray:
+    """Per-request prompt lengths in [min_len, max_len].
+
+    uniform   — every prompt at max_len (the legacy uniform workload)
+    lognormal — median ~ max_len/4, σ=0.8: the heavy right tail of chat /
+                search traffic (most prompts short, a few near the cap)
+    bimodal   — half short (~max_len/8), half long (~0.8·max_len): the
+                mixed short-query + long-document pattern
+    """
+    if dist == "uniform":
+        return np.full(n, max_len, np.int64)
+    rng = np.random.default_rng(seed + 1_000_003)
+    if dist == "lognormal":
+        lens = rng.lognormal(mean=np.log(max(max_len / 4.0, 1.0)),
+                             sigma=0.8, size=n)
+    elif dist == "bimodal":
+        short = rng.normal(max_len / 8.0, max_len / 16.0, size=n)
+        long = rng.normal(0.8 * max_len, max_len / 10.0, size=n)
+        lens = np.where(rng.random(n) < 0.5, short, long)
+    else:
+        raise ValueError(f"unknown length distribution {dist!r}")
+    return np.clip(np.rint(lens), min_len, max_len).astype(np.int64)
+
+
 def run(args, clock=None) -> dict:
     engine, vocab = build_engine(args, clock)
+    # catches explicit flags AND the engine's auto-fallback to uniform
+    # prefill (recurrent-state / frontend tiers, dense arena)
+    if args.length_dist != "uniform" and not engine.chunked_prefill:
+        raise ValueError(
+            "mixed prompt lengths require chunked paged prefill, but the "
+            "engine fell back to the uniform path (--no-chunked-prefill/"
+            "--dense-kv given, or a tier carries recurrent state or a "
+            "modality frontend) — use --length-dist uniform")
     prompts = bigram_lm(num_seqs=args.requests, seq_len=args.prompt_len,
                         vocab=vocab, seed=args.seed)
+    lengths = sample_lengths(args.length_dist, args.requests,
+                             args.prompt_len, args.min_prompt_len,
+                             args.seed)
     arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
     # warmup compiles every tier and then resets the clock, so arrival
     # timestamps are relative to the start of serving, not construction
     engine.warmup()
-    for p, t in zip(prompts, arrivals):
-        engine.submit(p, arrival_time=float(t))
+    for p, n, t in zip(prompts, lengths, arrivals):
+        engine.submit(p[:int(n)], arrival_time=float(t))
     summary = engine.run()
     summary["rate"] = args.rate
     # realized offered load: completions can never beat this in an
@@ -80,6 +130,11 @@ def run(args, clock=None) -> dict:
         else float("nan"))
     summary["slots"] = args.slots
     summary["gen_len"] = args.gen_len
+    summary["length_dist"] = args.length_dist
+    summary["max_prompt_len"] = args.prompt_len
+    summary["prefill_chunk"] = (engine.prefill_chunk
+                                if engine.chunked_prefill else None)
+    summary["chunked_prefill"] = engine.chunked_prefill
     summary["escalation_budget"] = (None if args.delta is not None
                                     else args.escalation_budget)
     summary["delta"] = [engine.scheduler.delta(g)
@@ -98,6 +153,13 @@ def report(s: dict) -> None:
     print(f"  latency  p50 {s['latency_p50']:.3f}{unit}  "
           f"p95 {s['latency_p95']:.3f}{unit}   "
           f"ttft p50 {s['ttft_p50']:.3f}{unit}  p95 {s['ttft_p95']:.3f}{unit}")
+    if s.get("chunked_prefill"):
+        buckets = "  ".join(f"{b}:{v:.3f}{unit}" for b, v in
+                            s["ttft_p50_by_prompt_bucket"].items())
+        print(f"  prompts {s['length_dist']} (mean {s['prompt_len_mean']:.1f}"
+              f"/{s['max_prompt_len']} tok, chunk {s['prefill_chunk']})  "
+              f"live-token ratio {s['prefill_live_token_ratio']:.3f}")
+        print(f"  ttft p50 by prompt bucket  {buckets}")
     print(f"  throughput {s['throughput']:.2f} req/{unit}   "
           f"tier utilization "
           + "  ".join(f"{n}={u:.2f}" for n, u in
@@ -125,8 +187,24 @@ def make_parser() -> argparse.ArgumentParser:
                     help="Poisson arrival rate, requests/s")
     ap.add_argument("--slots", type=int, default=8,
                     help="KV slot pool size per tier")
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="maximum prompt length (chunked prefill); exact "
+                         "length under --no-chunked-prefill/--dense-kv")
+    ap.add_argument("--min-prompt-len", type=int, default=1)
+    ap.add_argument("--length-dist", default="uniform",
+                    choices=("uniform", "lognormal", "bimodal"),
+                    help="per-request prompt length distribution over "
+                         "[min-prompt-len, prompt-len]")
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prompt tokens a row advances per tick "
+                         "(chunked paged prefill)")
+    ap.add_argument("--prefill-token-budget", type=int, default=None,
+                    help="prompt tokens admitted per tier per tick "
+                         "(default slots * prefill-chunk)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="uniform one-shot packed prefill (the chunked "
+                         "path's bit-exactness oracle)")
     ap.add_argument("--delta", type=float, default=None,
                     help="fixed gate threshold (overrides the budget)")
     ap.add_argument("--escalation-budget", type=float, default=0.25,

@@ -4,13 +4,17 @@ Every mixer has the signature::
 
     y, new_cache, = mixer(p, cfg, spec, x, cache, pos, mode, pages=None)
 
-with ``mode in {'train', 'prefill', 'decode'}``.  In train mode caches are
-ignored (``None`` in / ``None`` out); prefill returns a populated cache;
-decode consumes ``x`` of seq-len 1 and a cache, and returns the updated
-cache.  ``pos`` is ``[B, S]`` int32 absolute positions (decode: ``[B, 1]``).
-``pages`` (decode only) switches attention to the block-paged KV layout:
-``{"page_table": [B, P] int32}`` over a cache from
-``repro.models.cache.init_paged_cache``; non-attention mixers ignore it.
+with ``mode in {'train', 'prefill', 'prefill_chunk', 'decode'}``.  In
+train mode caches are ignored (``None`` in / ``None`` out); prefill
+returns a populated cache; decode consumes ``x`` of seq-len 1 and a
+cache, and returns the updated cache.  ``pos`` is ``[B, S]`` int32
+absolute positions (decode: ``[B, 1]``).  ``pages`` switches attention to
+the block-paged KV layout: ``{"page_table": [B, P] int32}`` over a cache
+from ``repro.models.cache.init_paged_cache`` (decode), plus
+``"q_len": [B] int32`` live-token counts in prefill_chunk mode — the
+serving engine's mixed-length path where each row advances one fixed-size
+chunk of its prompt per call (attention only; recurrent mixers raise,
+their state cannot be replayed chunk-wise).
 
 Every ffn has the signature ``y, aux = ffn(p, cfg, spec, x, cache, mode)``
 where ``aux`` is a dict of auxiliary scalars (MoE load-balance / router
@@ -156,6 +160,55 @@ def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
                         cfg.frontend_len)
     q = qr.reshape(B, S, KV, G, hd)
     k = kr
+
+    if mode == "prefill_chunk":
+        # Chunked paged prefill: the chunk's C tokens (row b's absolute
+        # positions pos[b]) are scattered straight into the block pool
+        # through the page tables, then a causal flash over the chunk's
+        # queries attends each row's already-written KV blocks
+        # (kernels/prefill_attention).  Rows not prefilling this tick
+        # carry q_len == 0: their writes are redirected to the reserved
+        # null block 0 and their outputs are discarded by the engine, so
+        # one fixed-shape program serves any mix of per-row chunk starts
+        # and tail lengths.
+        if pages is None:
+            raise ValueError("prefill_chunk requires pages={'page_table', "
+                             "'q_len'} over a block-paged cache")
+        from repro.kernels import ops as kernel_ops
+        pt = pages["page_table"]                        # [B, P] int32
+        q_len = pages["q_len"]                          # [B] int32
+        bs = cache["k"].shape[1]
+        P = pt.shape[1]
+        # token i of row b lands at (page_table[b, pos//bs], pos % bs);
+        # padded tail positions (i >= q_len) may point past the row's
+        # pages — clamp the page index and redirect the write to block 0
+        page = jnp.minimum(pos // bs, P - 1)
+        blk = jnp.take_along_axis(pt, page, axis=1)     # [B, C]
+        valid = jax.lax.broadcasted_iota(
+            jnp.int32, pos.shape, 1) < q_len[:, None]
+        blk = jnp.where(valid, blk, 0)
+        off = pos % bs
+        q_start = pos[:, 0]
+        quant = "k_scale" in cache
+        if quant:
+            kq, ksc = _quant_i8(k)
+            vq, vsc = _quant_i8(v)
+            ck = cache["k"].at[blk, off].set(kq)
+            cv = cache["v"].at[blk, off].set(vq)
+            cks = cache["k_scale"].at[blk, off].set(ksc)
+            cvs = cache["v_scale"].at[blk, off].set(vsc)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            out = kernel_ops.paged_prefill_attention(
+                q, ck, cv, pt, q_start, q_len, k_scale=cks, v_scale=cvs,
+                window=spec.window)
+        else:
+            ck = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            out = kernel_ops.paged_prefill_attention(
+                q, ck, cv, pt, q_start, q_len, window=spec.window)
+        y = out.astype(x.dtype).reshape(B, S, H * hd) @ p["wo"]
+        return y, new_cache
 
     if mode == "decode" and pages is not None:
         # Block-paged decode: the KV cache is a shared pool of fixed-size
@@ -307,6 +360,10 @@ def _causal_conv(x, w, b, cache, mode):
 
 
 def mamba(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
+    if mode == "prefill_chunk":
+        raise NotImplementedError(
+            "chunked prefill carries no recurrent state across chunks; "
+            "mamba layers require the dense uniform prefill path")
     B, S, D = x.shape
     d_in = spec.expand * cfg.d_model
     n = spec.d_state
@@ -372,6 +429,10 @@ def _token_shift(x, x_prev, mode):
 
 
 def rwkv6(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
+    if mode == "prefill_chunk":
+        raise NotImplementedError(
+            "chunked prefill carries no recurrent state across chunks; "
+            "rwkv6 layers require the dense uniform prefill path")
     B, S, D = x.shape
     hd = spec.head_dim
     H = D // hd
@@ -440,6 +501,10 @@ def _zero_aux():
 
 def dense_ffn(p, cfg: ModelConfig, spec, x, cache, mode):
     if spec.act == "rwkv_cmix":
+        if mode == "prefill_chunk":
+            raise NotImplementedError(
+                "chunked prefill carries no token-shift state across "
+                "chunks; rwkv_cmix ffns require the dense prefill path")
         x_prev = cache["x_prev"] if cache is not None else None
         xs = _token_shift(x, x_prev, mode)
         xk = x + (xs - x) * p["mix_k"]
@@ -539,7 +604,7 @@ def apply_layer(p, cfg: ModelConfig, layer, x, cache, pos, mode, pages=None):
     x = x + y
 
     new_cache = None
-    if mode in ("decode", "prefill"):
+    if mode in ("decode", "prefill", "prefill_chunk"):
         new_cache = {"mixer": new_mix if new_mix is not None else {},
                      "ffn": new_ffn if new_ffn is not None else {}}
     return x, new_cache, aux

@@ -100,6 +100,10 @@ def _logits(params, cfg: ModelConfig, x):
 def _embed(params, cfg: ModelConfig, batch, mode):
     tokens = batch["tokens"]
     x = params["embed"][tokens]  # gather; vocab-sharded -> GSPMD collective
+    if cfg.frontend and mode == "prefill_chunk":
+        raise NotImplementedError(
+            "chunked prefill does not inject modality frontend embeddings; "
+            "frontend models require the dense uniform prefill path")
     if cfg.frontend and mode != "decode":
         # sanctioned modality stub: precomputed frame/patch embeddings are
         # projected into d_model and replace the first frontend_len slots.
@@ -125,15 +129,19 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
 
     batch: {"tokens": [B,S] int32, optional "frontend_embeds": [B,fl,fd]}
     pos:   [B,S] absolute positions (defaults to arange for train/prefill;
-           required for decode).
-    pages: decode only — ``{"page_table": [B, P] int32}`` selects the
-           block-paged KV layout (cache from ``init_paged_cache``).
+           required for decode and prefill_chunk).
+    pages: ``{"page_table": [B, P] int32}`` selects the block-paged KV
+           layout (cache from ``init_paged_cache``); decode and
+           prefill_chunk.  prefill_chunk additionally needs
+           ``"q_len": [B] int32`` (live tokens per row this chunk) and
+           per-row chunk positions in ``pos`` — see
+           :func:`repro.models.blocks.attention`.
     """
     x = _embed(params, cfg, batch, mode)
     B, S = batch["tokens"].shape
     if pos is None:
-        if mode == "decode":
-            raise ValueError("decode requires pos")
+        if mode in ("decode", "prefill_chunk"):
+            raise ValueError(f"{mode} requires pos")
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
 
     aux = {"lb_loss": jnp.zeros((), jnp.float32),
@@ -150,7 +158,8 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
     exits = None
     if cfg.num_periods:
         c = cache.get("period") if cache else None
-        collect = bool(cfg.early_exit_periods) and mode != "decode"
+        collect = bool(cfg.early_exit_periods) and mode not in (
+            "decode", "prefill_chunk")
         x, nc, aux, exits = _apply_periods(params, cfg, x, c, pos, mode, aux,
                                            collect_exits=collect, pages=pages)
         if nc is not None:
@@ -189,6 +198,19 @@ def train_logits(params, cfg: ModelConfig, batch):
 
 def prefill(params, cfg: ModelConfig, batch, pos=None):
     return forward(params, cfg, batch, mode="prefill", pos=pos)
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, cache, pos, pages):
+    """One chunked-prefill step: tokens [B,C] int32 (row b's chunk, padded
+    past ``pages['q_len'][b]``); pos [B,C] per-row absolute positions;
+    pages {"page_table": [B,P], "q_len": [B]} over a block-paged cache.
+    Writes the chunk's KV through the page tables and returns
+    (logits [B,C,V], new_cache); logits past a row's q_len are
+    unspecified (the engine reads position q_len-1 of the final chunk)."""
+    logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
+                                   mode="prefill_chunk", cache=cache,
+                                   pos=pos, pages=pages)
+    return logits, new_cache
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, pages=None):

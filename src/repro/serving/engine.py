@@ -4,17 +4,28 @@ One engine step (tick) per tier:
 
   1. **admit** — pop queued/escalated requests into free KV slots
      (continuous batching: admission happens while other slots are mid
-     decode).  Admitted prompts are packed densely, prefilled in one
-     batch, and their caches scattered into the tier's slot arena; the
-     first token (argmax of the prefill logits) is emitted immediately.
-  2. **decode** — one fused decode step over the whole slot pool (fixed
+     decode).  Under chunked prefill (the default on block-paged,
+     attention-only tiers) prompts of *any* length up to
+     ``max_prompt_len`` are accepted; admission is bounded by a prompt
+     **token budget** per tick and by free KV blocks for the first chunk.
+  2. **prefill** — each admitted row advances one fixed-size chunk of its
+     prompt per tick, written straight into the paged KV block pool
+     through its page table and attended with the Pallas chunked paged
+     prefill kernel (:mod:`repro.kernels.prefill_attention`): a 7-token
+     prompt batches next to a 900-token one with no cross-row padding
+     beyond the last chunk.  A row's first token (argmax at its final
+     prompt position) is emitted when its last chunk completes.  The
+     legacy path (``use_chunked_prefill=False``) packs uniform-length
+     prompts densely, prefills in one shot, and scatters the caches —
+     kept as the bit-exactness oracle and for recurrent-state models.
+  3. **decode** — one fused decode step over the whole slot pool (fixed
      shape => a single compiled program per tier), attending through the
      block-paged KV arena with the Pallas paged flash-decode kernel
      (:mod:`repro.kernels.paged_attention`; page tables grow lazily as
      rows cross block boundaries).  Per-token confidence comes from the
      Pallas :func:`repro.kernels.ops.confidence_gate` (max-softmax-prob,
      the paper's conf) or a jnp fallback.
-  3. **gate** — requests that hit ``gen_len`` aggregate their token
+  4. **gate** — requests that hit ``gen_len`` aggregate their token
      confidences; at non-final tiers the scheduler's gate (fixed δ or
      escalation budget) decides DONE vs ESCALATED.  Escalated requests
      join the next tier's queue and are re-decoded there from scratch.
@@ -98,11 +109,15 @@ class _TierRuntime:
     def __init__(self, spec: TierSpec, capacity: int, prompt_len: int,
                  max_seq: int, use_gate_kernel: bool, *,
                  use_paged_kv: bool = True, block_size: int = 16,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 use_chunked_prefill: bool = False,
+                 prefill_chunk: int = 128):
         self.spec = spec
         self.capacity = capacity
-        self.prompt_len = prompt_len
+        self.prompt_len = prompt_len          # max prompt length (tokens)
         self.paged = use_paged_kv
+        self.chunked = use_chunked_prefill
+        self.chunk = min(prefill_chunk, prompt_len)
         if use_paged_kv:
             self.pool = TierSlotPool(spec.cfg, capacity, max_seq,
                                      block_size=block_size,
@@ -112,6 +127,7 @@ class _TierRuntime:
         self.slot_req: List[Optional[Request]] = [None] * capacity
         self.tok = np.zeros(capacity, np.int32)
         self.pos = np.zeros(capacity, np.int32)
+        self.prefill_pos = np.zeros(capacity, np.int32)   # tokens written
         cfg = spec.cfg
 
         def pick(logits2d):
@@ -139,16 +155,36 @@ class _TierRuntime:
             nxt, conf = pick(logits[:, 0])
             return nxt, conf, new_cache
 
+        def chunk_fn(params, tokens, cache, pos, page_table, q_len):
+            logits, new_cache = transformer.prefill_chunk(
+                params, cfg, tokens, cache, pos,
+                {"page_table": page_table, "q_len": q_len})
+            # first generated token = argmax at each row's last live
+            # prompt position; host keeps it only for final chunks
+            rows = jnp.arange(logits.shape[0])
+            last = jnp.maximum(q_len - 1, 0)
+            tok, conf = pick(logits[rows, last])
+            return tok, conf, new_cache
+
         self.prefill_fn = jax.jit(prefill_fn)
         # Donate the cache so XLA updates the slot arena in place instead
         # of copying it every token (2x peak cache memory otherwise).  CPU
         # ignores donation and warns, so only donate on accelerators.
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self.step_fn = jax.jit(step_fn, donate_argnums=donate)
+        self.chunk_fn = jax.jit(chunk_fn, donate_argnums=donate)
 
-    def page_table_device(self):
+    def page_table_device(self, mask_rows: Sequence[int] = ()):
+        """Device page tables; ``mask_rows`` (rows mid-prefill during a
+        decode step) have their pages unmapped in the copy so the decode
+        scatter/gather for those rows hits the null block instead of the
+        blocks their prefill chunks are filling."""
         if self.paged:
-            return jnp.asarray(self.pool.page_table)
+            pt = self.pool.page_table
+            if len(mask_rows):
+                pt = pt.copy()
+                pt[list(mask_rows)] = 0
+            return jnp.asarray(pt)
         # dense pools take a dummy (the traced fn ignores it)
         return jnp.zeros((self.capacity, 1), jnp.int32)
 
@@ -159,6 +195,10 @@ class _TierRuntime:
         return [s for s, r in enumerate(self.slot_req)
                 if r is not None and r.state is RequestState.DECODE
                 and not r.decode_finished]
+
+    def prefilling(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req)
+                if r is not None and r.state is RequestState.PREFILL]
 
 
 class CascadeEngine:
@@ -174,6 +214,9 @@ class CascadeEngine:
                  use_paged_kv: bool = True,
                  kv_block_size: int = 16,
                  kv_blocks: Optional[int | Sequence[Optional[int]]] = None,
+                 use_chunked_prefill: Optional[bool] = None,
+                 prefill_chunk: int = 128,
+                 prefill_token_budget: Optional[int] = None,
                  clock=None):
         """``use_paged_kv`` selects the block-paged KV arena + Pallas
         paged flash-decode kernel (interpret mode off-TPU); False keeps
@@ -183,11 +226,37 @@ class CascadeEngine:
         (``slots * ceil(max_seq / block_size) + 1``); a smaller count
         over-subscribes the arena: admission is then block-limited and
         rows may stall a tick waiting for a free block (attention-only
-        models; recurrent state cannot replay a stalled step)."""
+        models; recurrent state cannot replay a stalled step).
+
+        ``use_chunked_prefill`` (default: auto — on whenever the arena is
+        paged and every tier is attention-only with no modality frontend)
+        replaces the dense packed prefill with **chunked paged prefill**:
+        ``prompt_len`` becomes the *maximum* prompt length, ``submit``
+        accepts any length in ``[1, prompt_len]``, and each admitted row
+        advances ``prefill_chunk`` prompt tokens per tick written directly
+        into its KV blocks.  Admission is bounded by
+        ``prefill_token_budget`` prompt tokens per tier per tick (default
+        ``slots * prefill_chunk``).  ``use_chunked_prefill=False`` keeps
+        the uniform-length packed prefill (exact ``prompt_len`` enforced
+        at submit) — the bit-exactness oracle for the chunked path."""
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers = list(tiers)
         m = len(self.tiers)
+        chunkable = use_paged_kv and all(
+            not cache_lib.has_recurrent_state(t.cfg) and t.cfg.frontend
+            is None for t in self.tiers)
+        if use_chunked_prefill is None:
+            use_chunked_prefill = chunkable
+        elif use_chunked_prefill and not chunkable:
+            raise ValueError(
+                "chunked prefill requires the block-paged KV arena "
+                "(use_paged_kv=True) and attention-only tiers without a "
+                "modality frontend (recurrent state cannot be carried "
+                "across prefill chunks)")
+        self.chunked_prefill = use_chunked_prefill
+        if prefill_chunk <= 0:
+            raise ValueError("prefill_chunk must be positive")
         slots_per_tier = ([int(slots)] * m if np.isscalar(slots)
                           else [int(s) for s in slots])
         kv_blocks_per_tier = (
@@ -208,9 +277,13 @@ class CascadeEngine:
         if len(gates) != m - 1:
             raise ValueError("one gate per non-final tier")
 
-        self.prompt_len = prompt_len
+        self.prompt_len = prompt_len        # chunked: max prompt length
         self.gen_len = gen_len
         self.conf_reduce = conf_reduce
+        self.prefill_chunk = min(prefill_chunk, prompt_len)
+        self.prefill_token_budget = (
+            prefill_token_budget if prefill_token_budget is not None
+            else max(slots_per_tier) * self.prefill_chunk)
         self.scheduler = CascadeScheduler(slots_per_tier, gates)
         self.metrics = ServingMetrics(
             [TierCost(t.name, t.flops_per_request(gen_len))
@@ -232,20 +305,29 @@ class CascadeEngine:
         self.runtimes = [
             _TierRuntime(spec, cap, prompt_len, max_seq, use_gate_kernel,
                          use_paged_kv=use_paged_kv, block_size=kv_block_size,
-                         kv_blocks=nb)
+                         kv_blocks=nb,
+                         use_chunked_prefill=use_chunked_prefill,
+                         prefill_chunk=self.prefill_chunk)
             for spec, cap, nb in zip(self.tiers, slots_per_tier,
                                      kv_blocks_per_tier)]
         self.requests: List[Request] = []
         self._rid = 0
+        self._admitted_tokens = [0] * m     # per-tier, reset each tick
 
     # -- submission --------------------------------------------------------
 
     def submit(self, prompt, arrival_time: float = 0.0) -> Request:
         prompt = np.asarray(prompt, np.int32)
-        if prompt.shape != (self.prompt_len,):
+        if self.chunked_prefill:
+            if prompt.ndim != 1 or not 1 <= prompt.shape[0] <= self.prompt_len:
+                raise ValueError(
+                    f"prompt must be 1D with 1..{self.prompt_len} tokens, "
+                    f"got shape {prompt.shape}")
+        elif prompt.shape != (self.prompt_len,):
             raise ValueError(
                 f"prompt must be [{self.prompt_len}], got {prompt.shape} "
-                "(the packed prefill batches uniform prompt lengths)")
+                "(the uniform packed prefill batches one prompt length; "
+                "use chunked prefill for mixed lengths)")
         req = Request(rid=self._rid, prompt=prompt, gen_len=self.gen_len,
                       arrival_time=float(arrival_time))
         self._rid += 1
@@ -257,6 +339,39 @@ class CascadeEngine:
 
     def _admit(self, tier: int, now: float) -> None:
         rt = self.runtimes[tier]
+        if rt.chunked:
+            # mixed-length admission: bind rows one at a time, bounded by
+            # free rows, free KV blocks for the *first chunk* (later
+            # chunks grow lazily), and the tier's prompt-token budget per
+            # tick (scheduler-enforced; the budget window spans both
+            # admission passes of a tick via _admitted_tokens, and the
+            # window's first request is always admitted so a prompt
+            # longer than the whole budget cannot starve).  No compute
+            # here — chunks run in _prefill.
+            admitted = 0
+            while True:
+                head = self.scheduler.peek(tier, now)
+                if head is None:
+                    break
+                plen = head.prompt_tokens
+                if not rt.pool.can_admit(min(rt.chunk, plen)):
+                    break
+                reqs, slot_ids = self.scheduler.admit(
+                    tier, now, limit=1,
+                    token_budget=self.prefill_token_budget,
+                    budget_used=self._admitted_tokens[tier])
+                if not reqs:
+                    break               # over budget this tick
+                req, slot = reqs[0], slot_ids[0]
+                rt.pool.bind(slot, min(rt.chunk, plen),
+                             row_tokens=plen + self.gen_len)
+                rt.slot_req[slot] = req
+                rt.prefill_pos[slot] = 0
+                self._admitted_tokens[tier] += plen
+                admitted += 1
+            if admitted:
+                self.metrics.record_admission(tier, admitted)
+            return
         if rt.paged:
             # block-aware admission: one request at a time, binding its
             # prompt pages, until rows, blocks, or the queue run out
@@ -276,6 +391,8 @@ class CascadeEngine:
         if not reqs:
             return
         self.metrics.record_admission(tier, len(reqs))
+        self.metrics.record_prefill_tokens(
+            len(reqs) * self.prompt_len, rt.capacity * self.prompt_len)
         prompts = np.zeros((rt.capacity, self.prompt_len), np.int32)
         for i, req in enumerate(reqs):
             prompts[i] = req.prompt
@@ -294,6 +411,49 @@ class CascadeEngine:
             rt.slot_req[slot] = req
             rt.tok[slot] = ftok[i]
             rt.pos[slot] = self.prompt_len   # next decode writes here
+
+    def _prefill(self, tier: int, now: float) -> None:
+        """Advance every mid-prefill row one chunk (chunked mode only).
+        One fixed-shape ``chunk_fn`` call per tier per tick serves any mix
+        of per-row chunk starts and tail lengths; rows denied KV blocks
+        (over-subscribed arena) stall with ``q_len = 0`` and replay the
+        chunk next tick — attention KV writes are idempotent."""
+        rt = self.runtimes[tier]
+        pre = rt.prefilling()
+        if not pre:
+            return
+        C = rt.chunk
+        tokens = np.zeros((rt.capacity, C), np.int32)
+        pos = np.zeros((rt.capacity, C), np.int32)
+        qlen = np.zeros(rt.capacity, np.int32)
+        for s in pre:
+            req = rt.slot_req[s]
+            st = int(rt.prefill_pos[s])
+            n = min(C, req.prompt_tokens - st)
+            if not rt.pool.ensure_blocks(s, st + n - 1):
+                continue                      # stall: qlen stays 0
+            tokens[s, :n] = req.prompt[st:st + n]
+            pos[s] = st + np.arange(C)        # row's q_start is pos[s, 0]
+            qlen[s] = n
+        if not qlen.any():
+            return                      # every row stalled: skip the batch
+        tok, conf, rt.pool.cache = rt.chunk_fn(
+            rt.spec.params, jnp.asarray(tokens), rt.pool.cache,
+            jnp.asarray(pos), rt.page_table_device(), jnp.asarray(qlen))
+        self.metrics.record_prefill_tokens(int(qlen.sum()),
+                                           rt.capacity * C)
+        tok, conf = jax.device_get((tok, conf))
+        t_emit = self.clock.now()             # post-compute (see _admit)
+        for s in pre:
+            if qlen[s] == 0:
+                continue
+            rt.prefill_pos[s] += qlen[s]
+            req = rt.slot_req[s]
+            if rt.prefill_pos[s] == req.prompt_tokens:
+                req.start_decode()
+                req.emit(int(tok[s]), float(conf[s]), t_emit)
+                rt.tok[s] = tok[s]
+                rt.pos[s] = req.prompt_tokens   # next decode writes here
 
     def _decode(self, tier: int, now: float) -> int:
         rt = self.runtimes[tier]
@@ -315,10 +475,13 @@ class CascadeEngine:
                 return 0
         else:
             active = decoding
+        # rows mid-prefill share the fused decode batch but must not touch
+        # their (bound, partially-filled) pages: mask them to the null
+        # block in the decode step's page-table copy
         nxt, conf, rt.pool.cache = rt.step_fn(
             rt.spec.params, jnp.asarray(rt.tok[:, None]),
             rt.pool.cache, jnp.asarray(rt.pos[:, None]),
-            rt.page_table_device())
+            rt.page_table_device(mask_rows=rt.prefilling()))
         # single blocking transfer per tick for both outputs (was two
         # sequential np.asarray syncs)
         nxt, conf = jax.device_get((nxt, conf))
@@ -349,15 +512,18 @@ class CascadeEngine:
             rt.slot_req[slot] = None
             rt.tok[slot] = 0
             rt.pos[slot] = 0
+            rt.prefill_pos[slot] = 0
             if rt.paged:
                 rt.pool.release(slot)
             self.scheduler.release(tier, slot)
 
     def step(self, now: Optional[float] = None) -> None:
         now = self.clock.now() if now is None else now
+        self._admitted_tokens = [0] * len(self.tiers)
         active = []
         for tier in range(len(self.tiers)):
             self._admit(tier, now)
+            self._prefill(tier, now)
             active.append(self._decode(tier, now))
             self._finish(tier, now)
         # Trailing admission pass: requests escalated this tick enter the
@@ -399,8 +565,17 @@ class CascadeEngine:
         resetting the clock so compile time never counts against request
         latency."""
         for rt in self.runtimes:
-            prompts = jnp.zeros((rt.capacity, self.prompt_len), jnp.int32)
-            rt.prefill_fn(rt.spec.params, prompts)
+            if rt.chunked:
+                ztok = jnp.zeros((rt.capacity, rt.chunk), jnp.int32)
+                zlen = jnp.zeros(rt.capacity, jnp.int32)
+                _, _, rt.pool.cache = rt.chunk_fn(
+                    rt.spec.params, ztok, rt.pool.cache,
+                    jnp.zeros((rt.capacity, rt.chunk), jnp.int32),
+                    rt.page_table_device(), zlen)
+            else:
+                prompts = jnp.zeros((rt.capacity, self.prompt_len),
+                                    jnp.int32)
+                rt.prefill_fn(rt.spec.params, prompts)
             zeros = jnp.zeros((rt.capacity, 1), jnp.int32)
             _, _, rt.pool.cache = rt.step_fn(rt.spec.params, zeros,
                                              rt.pool.cache, zeros,

@@ -12,7 +12,7 @@ Cost convention (matches ``CascadeServer.summary`` and Eq 7)::
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -24,6 +24,16 @@ def percentile(values: Sequence[float], q: float) -> float:
     if not values:
         return float("nan")
     return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+def length_bucket(n: int) -> str:
+    """Power-of-two prompt-length bucket label ("1", "2", "3-4", "5-8",
+    "9-16", ...)."""
+    hi = 1
+    while hi < n:
+        hi *= 2
+    lo = hi // 2 + 1
+    return str(hi) if lo >= hi else f"{lo}-{hi}"
 
 
 @dataclass
@@ -43,8 +53,15 @@ class ServingMetrics:
         self.stats = ServerStats(gates=[GateStats() for _ in range(n_gates)])
         self.latencies: List[float] = []
         self.ttfts: List[float] = []
+        self.ttft_by_bucket: Dict[str, List[float]] = {}
+        self.prompt_lens: List[int] = []
         self.tier_requests = [0] * len(tiers)   # N_m: requests reaching m
         self.busy_slot_steps = [0] * len(tiers)
+        # padding tax: live prompt tokens actually belonging to requests
+        # vs tokens the fixed-shape prefill batches processed (chunked
+        # prefill keeps the ratio near 1; pad-to-max burns the difference)
+        self.prefill_live_tokens = 0
+        self.prefill_processed_tokens = 0
         self.steps = 0
         # throughput window: first arrival -> last completion (makespan),
         # not first->last engine step (zero for single-step runs)
@@ -64,10 +81,19 @@ class ServingMetrics:
         for t, n in enumerate(active_per_tier):
             self.busy_slot_steps[t] += n
 
+    def record_prefill_tokens(self, live: int, processed: int) -> None:
+        """One prefill execution: `live` real prompt tokens inside a
+        fixed-shape batch of `processed` token slots."""
+        self.prefill_live_tokens += int(live)
+        self.prefill_processed_tokens += int(processed)
+
     def record_completion(self, req: Request) -> None:
         self.latencies.append(req.latency)
+        self.prompt_lens.append(req.prompt_tokens)
         if req.ttft is not None:
             self.ttfts.append(req.ttft)
+            self.ttft_by_bucket.setdefault(
+                length_bucket(req.prompt_tokens), []).append(req.ttft)
         if self.first_arrival is None \
                 or req.arrival_time < self.first_arrival:
             self.first_arrival = req.arrival_time
@@ -107,6 +133,20 @@ class ServingMetrics:
             "latency_p95": percentile(self.latencies, 95),
             "ttft_p50": percentile(self.ttfts, 50),
             "ttft_p95": percentile(self.ttfts, 95),
+            "ttft_p50_by_prompt_bucket": {
+                b: percentile(v, 50)
+                for b, v in sorted(
+                    self.ttft_by_bucket.items(),
+                    key=lambda kv: int(kv[0].split("-")[0]))},
+            "prompt_len_mean": (float(np.mean(self.prompt_lens))
+                                if self.prompt_lens else float("nan")),
+            "prompt_len_max": (max(self.prompt_lens)
+                               if self.prompt_lens else 0),
+            "prefill_live_tokens": self.prefill_live_tokens,
+            "prefill_processed_tokens": self.prefill_processed_tokens,
+            "prefill_live_token_ratio": (
+                self.prefill_live_tokens / self.prefill_processed_tokens
+                if self.prefill_processed_tokens else float("nan")),
             "tier_names": [t.name for t in self.tiers],
             "tier_requests": list(self.tier_requests),
             "tier_utilization": util,

@@ -90,6 +90,11 @@ class Request:
             self.first_token_time = now
 
     @property
+    def prompt_tokens(self) -> int:
+        """Prompt length in tokens (mixed-length serving: per request)."""
+        return int(self.prompt.shape[0])
+
+    @property
     def decode_finished(self) -> bool:
         return len(self.tokens) >= self.gen_len
 

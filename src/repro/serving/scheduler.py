@@ -75,22 +75,47 @@ class CascadeScheduler:
         q = self.queues[tier]
         return bool(q) and (tier > 0 or q[0].arrival_time <= now)
 
-    def admit(self, tier: int, now: float,
-              limit: Optional[int] = None) -> Tuple[List[Request], List[int]]:
+    def peek(self, tier: int, now: float) -> Optional[Request]:
+        """The queue head that :meth:`admit` would pop next (None if the
+        queue is empty, not yet arrived, or the tier has no free slot).
+        Lets the engine inspect prompt length / block demand before
+        committing to the admission."""
+        if not self.admissible(tier, now) \
+                or self.allocators[tier].num_free == 0:
+            return None
+        return self.queues[tier][0]
+
+    def admit(self, tier: int, now: float, limit: Optional[int] = None,
+              token_budget: Optional[int] = None, budget_used: int = 0,
+              ) -> Tuple[List[Request], List[int]]:
         """Pop requests into free slots of `tier` until either runs out.
         Returns the packed (requests, slot_ids) admitted this step.
         ``limit`` caps the number admitted (the engine's block-paged KV
-        arena may run out of blocks before the tier runs out of rows)."""
+        arena may run out of blocks before the tier runs out of rows).
+        ``token_budget`` caps the total *prompt tokens* admitted in one
+        budget window — the mixed-length admission knob: a tier should
+        not accept more prefill work per tick than its chunked prefill
+        can absorb.  ``budget_used`` carries tokens already admitted in
+        the current window (the engine admits one request per call while
+        binding KV blocks in between, with a per-tick window).  The
+        window's first request is always admitted (a prompt longer than
+        the whole budget must not starve); the rest must fit."""
         reqs: List[Request] = []
         slots: List[int] = []
+        used = budget_used
         alloc = self.allocators[tier]
         while self.admissible(tier, now) and alloc.num_free > 0 \
                 and (limit is None or len(reqs) < limit):
+            need = self.queues[tier][0].prompt_tokens
+            if token_budget is not None and used \
+                    and used + need > token_budget:
+                break
             slot = alloc.alloc()
             req = self.queues[tier].popleft()
             req.admit(tier, slot, now)
             reqs.append(req)
             slots.append(slot)
+            used += need
         return reqs, slots
 
     def release(self, tier: int, slot: int) -> None:
@@ -126,7 +151,11 @@ class CascadeScheduler:
 
     def check_invariant(self, now: float) -> None:
         """Continuous-batching invariant: no tier has both a free slot and
-        an admissible queued request (call after admission)."""
+        an admissible queued request (call after admission).  Holds for
+        unbounded admission; a token-budget-limited tier may legitimately
+        leave admissible requests queued past the budget (and a
+        block-limited one past free KV blocks), so this is a test helper
+        for fully-provisioned, budget-unconstrained runs."""
         for t in range(self.num_tiers):
             if self.allocators[t].num_free > 0 and self.admissible(t, now):
                 raise AssertionError(

@@ -188,12 +188,16 @@ class TierSlotPool:
         self._meta = _leaf_meta(decl)
         self.page_table = np.zeros((capacity, self.pages_per_row), np.int32)
         self._row_blocks: List[List[int]] = [[] for _ in range(capacity)]
+        self._row_demand: List[int] = [self.pages_per_row] * capacity
         self._order: List[int] = []     # bound rows, oldest first
 
     # -- admission-side block accounting -----------------------------------
 
     def _worst_remaining(self, slot: int) -> int:
-        return self.pages_per_row - len(self._row_blocks[slot])
+        """Blocks `slot` may still need: its bound lifetime demand (from
+        ``bind``'s row_tokens — mixed-length rows demand fewer pages than
+        ``pages_per_row``) minus what it already holds."""
+        return self._row_demand[slot] - len(self._row_blocks[slot])
 
     def _oldest_worst(self) -> int:
         return self._worst_remaining(self._order[0]) if self._order else 0
@@ -207,14 +211,26 @@ class TierSlotPool:
         need = self.blocks_for(prompt_len)
         return self.blocks.num_free - need >= self._oldest_worst()
 
-    def bind(self, slot: int, prompt_len: int) -> None:
-        """Claim `slot` (newest) and allocate its prompt pages.  Callers
-        must check :meth:`can_admit` first."""
+    def bind(self, slot: int, ntokens: int,
+             row_tokens: Optional[int] = None) -> None:
+        """Claim `slot` (newest) and allocate pages for its first
+        ``ntokens`` (the whole prompt under one-shot prefill; the first
+        chunk under chunked prefill — later chunks grow via
+        :meth:`ensure_blocks`).  ``row_tokens`` bounds the row's lifetime
+        demand (``prompt_len + gen_len``; default ``max_seq``) for the
+        oldest-first reserve accounting.  Callers must check
+        :meth:`can_admit` first."""
         if self._row_blocks[slot]:
             raise ValueError(f"slot {slot} already bound")
-        need = self.blocks_for(prompt_len)
+        need = self.blocks_for(ntokens)
         if self.blocks.num_free < need:
             raise RuntimeError("bind without can_admit: no free blocks")
+        demand = self.blocks_for(self.max_seq if row_tokens is None
+                                 else min(row_tokens, self.max_seq))
+        if demand < need:
+            raise ValueError(f"row_tokens={row_tokens} smaller than the "
+                             f"{ntokens} tokens being bound")
+        self._row_demand[slot] = demand
         self._order.append(slot)
         for j in range(need):
             b = self.blocks.alloc()
@@ -253,6 +269,7 @@ class TierSlotPool:
         for b in self._row_blocks[slot]:
             self.blocks.free(b)
         self._row_blocks[slot] = []
+        self._row_demand[slot] = self.pages_per_row
         self.page_table[slot] = NULL_BLOCK
         self._order.remove(slot)
 

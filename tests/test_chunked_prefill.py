@@ -1,0 +1,371 @@
+"""Chunked paged prefill: kernel vs oracle, mixed-length serving
+bit-exactness, token-budget admission, and the dense/uniform fallbacks."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.serving import CascadeEngine, CascadeScheduler, GateSpec, TierSpec
+from repro.serving.engine import VirtualClock
+from repro.serving.metrics import length_bucket
+from repro.serving.request import Request, RequestState
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def _rand_pool(rng, B, C, KV, G, hd, N, bs, P, quant=False):
+    q = jnp.asarray(rng.standard_normal((B, C, KV, G, hd)), jnp.float32)
+    pt = jnp.asarray(rng.integers(1, N, (B, P)), jnp.int32)
+    if quant:
+        k = jnp.asarray(rng.integers(-127, 128, (N, bs, KV, hd)), jnp.int8)
+        v = jnp.asarray(rng.integers(-127, 128, (N, bs, KV, hd)), jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.01, 0.05, (N, bs, KV)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.01, 0.05, (N, bs, KV)), jnp.float32)
+        return q, k, v, pt, ks, vs
+    k = jnp.asarray(rng.standard_normal((N, bs, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((N, bs, KV, hd)), jnp.float32)
+    return q, k, v, pt, None, None
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_prefill_kernel_matches_oracle(window):
+    rng = np.random.default_rng(0)
+    B, C, KV, G, hd = 3, 8, 2, 2, 16
+    N, bs, P = 11, 4, 6
+    q, k, v, pt, _, _ = _rand_pool(rng, B, C, KV, G, hd, N, bs, P)
+    # chunk starts straddle block boundaries; one row is a stalled /
+    # non-prefilling row (q_len 0) and must output exactly zero
+    start = jnp.asarray([0, 5, 13], jnp.int32)
+    qlen = jnp.asarray([8, 3, 0], jnp.int32)
+    got = kernel_ops.paged_prefill_attention(
+        q, k, v, pt, start, qlen, window=window, interpret=True)
+    want = ref.paged_prefill_attention_ref(
+        q, k, v, pt, start, qlen, window=window)
+    for b in range(B):
+        n = int(qlen[b])
+        np.testing.assert_allclose(np.asarray(got)[b, :n],
+                                   np.asarray(want)[b, :n],
+                                   rtol=2e-5, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(got)[2], 0.0)
+
+
+def test_prefill_kernel_int8_dequant_matches_oracle():
+    rng = np.random.default_rng(1)
+    B, C, KV, G, hd = 2, 4, 1, 3, 8
+    N, bs, P = 9, 4, 4
+    q, k, v, pt, ks, vs = _rand_pool(rng, B, C, KV, G, hd, N, bs, P,
+                                     quant=True)
+    start = jnp.asarray([2, 9], jnp.int32)
+    qlen = jnp.asarray([4, 2], jnp.int32)
+    got = kernel_ops.paged_prefill_attention(
+        q, k, v, pt, start, qlen, k_scale=ks, v_scale=vs, interpret=True)
+    want = ref.paged_prefill_attention_ref(
+        q, k, v, pt, start, qlen, k_scale=ks, v_scale=vs)
+    for b in range(B):
+        n = int(qlen[b])
+        np.testing.assert_allclose(np.asarray(got)[b, :n],
+                                   np.asarray(want)[b, :n],
+                                   rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: token-budget admission
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, plen, arrival=0.0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32), gen_len=2,
+                   arrival_time=arrival)
+
+
+def test_scheduler_token_budget_caps_admitted_prompt_tokens():
+    sched = CascadeScheduler([8], [])
+    for i, plen in enumerate([10, 10, 10, 10]):
+        sched.submit(_req(i, plen))
+    got, _ = sched.admit(0, now=0.0, token_budget=25)
+    assert [r.rid for r in got] == [0, 1]       # 10+10 fits, +10 would not
+    got, _ = sched.admit(0, now=0.0, token_budget=25)
+    assert [r.rid for r in got] == [2, 3]
+
+
+def test_scheduler_token_budget_never_starves_long_prompts():
+    sched = CascadeScheduler([4], [])
+    sched.submit(_req(0, 100))                  # longer than the budget
+    sched.submit(_req(1, 4))
+    got, _ = sched.admit(0, now=0.0, token_budget=16)
+    assert [r.rid for r in got] == [0]          # first always admitted
+    got, _ = sched.admit(0, now=0.0, token_budget=16)
+    assert [r.rid for r in got] == [1]
+
+
+def test_scheduler_peek_respects_arrivals_and_slots():
+    sched = CascadeScheduler([1], [])
+    sched.submit(_req(0, 4, arrival=5.0))
+    assert sched.peek(0, now=1.0) is None       # not arrived
+    assert sched.peek(0, now=5.0).rid == 0
+    sched.admit(0, now=5.0)
+    sched.submit(_req(1, 4, arrival=5.0))
+    assert sched.peek(0, now=6.0) is None       # no free slot
+
+
+def test_engine_token_budget_paces_admission():
+    """With a one-chunk token budget, a burst of arrivals is admitted at
+    most budget prompt-tokens per tick even though rows are free."""
+    cfg, fast_p, exp_p = _tiny_parts()
+    eng = _mk(cfg, fast_p, exp_p, slots=6, prompt_len=8, prefill_chunk=8,
+              prefill_token_budget=8)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32))
+    eng.step(0.0)
+    assert len(eng.runtimes[0].occupied()) == 1     # 8 of 8 budget tokens
+    eng.clock.step_done()
+    eng.step(1.0)
+    assert len(eng.runtimes[0].occupied()) == 2
+    eng.run(max_steps=200)
+    assert all(r.state is RequestState.DONE for r in eng.requests)
+
+
+# ---------------------------------------------------------------------------
+# engine: mixed-length bit-exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_parts():
+    return _tiny_parts()
+
+
+def _tiny_parts():
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("gemma3-1b", "smoke")
+    fast_p = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    exp_p = init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    return cfg, fast_p, exp_p
+
+
+def _mk(cfg, fast_p, exp_p, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("prompt_len", 16)
+    kw.setdefault("gen_len", 4)
+    kw.setdefault("deltas", [0.5])
+    kw.setdefault("kv_block_size", 4)
+    kw.setdefault("clock", VirtualClock())
+    return CascadeEngine([TierSpec("fast", cfg, fast_p),
+                          TierSpec("exp", cfg, exp_p)], **kw)
+
+
+def test_mixed_lengths_match_per_request_uniform_runs(tiny_parts):
+    """Acceptance: a mixed-length batch — lengths straddling the chunk
+    boundary, incl. 1 and max_prompt_len — produces token streams
+    bit-identical to per-request runs through the uniform one-shot
+    prefill path (the chunked path's oracle)."""
+    cfg, fast_p, exp_p = tiny_parts
+    rng = np.random.default_rng(0)
+    chunk = 5
+    lens = [1, 3, chunk, chunk + 1, 2 * chunk, 16]   # 16 == max_prompt_len
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+
+    eng = _mk(cfg, fast_p, exp_p, prefill_chunk=chunk)
+    assert eng.chunked_prefill
+    for i, p in enumerate(prompts):
+        eng.submit(p, arrival_time=float(i % 3))
+    eng.run(max_steps=500)
+    assert all(r.state is RequestState.DONE for r in eng.requests)
+
+    for p, r in zip(prompts, eng.requests):
+        uni = _mk(cfg, fast_p, exp_p, prompt_len=len(p),
+                  use_chunked_prefill=False)
+        uni.submit(p, arrival_time=0.0)
+        uni.run()
+        u = uni.requests[0]
+        assert r.tokens == u.tokens
+        assert r.tier == u.tier
+        np.testing.assert_allclose(r.token_conf, u.token_conf, rtol=1e-5)
+
+
+def test_chunked_uniform_matches_dense_fallback(tiny_parts):
+    """Regression: with uniform lengths, the chunked engine, the paged
+    one-shot engine, and the PR 1 dense arena all emit identical
+    streams — the fallbacks still match seed behaviour."""
+    cfg, fast_p, exp_p = tiny_parts
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab_size, (5, 8)).astype(np.int32)
+
+    outs = []
+    for kw in ({"prefill_chunk": 3},
+               {"use_chunked_prefill": False},
+               {"use_chunked_prefill": False, "use_paged_kv": False}):
+        eng = _mk(cfg, fast_p, exp_p, prompt_len=8, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(p, arrival_time=float(i % 2))
+        eng.run()
+        outs.append(eng.requests)
+    for a, b, c in zip(*outs):
+        assert a.tokens == b.tokens == c.tokens
+        assert a.tier == b.tier == c.tier
+        np.testing.assert_allclose(a.token_conf, b.token_conf, rtol=1e-5)
+
+
+def test_mixed_lengths_with_oversubscribed_arena(tiny_parts):
+    """Prefill chunks stall (not corrupt) when the block pool runs dry:
+    an over-subscribed mixed-length run completes with streams identical
+    to the fully-provisioned run."""
+    cfg, fast_p, exp_p = tiny_parts
+    rng = np.random.default_rng(7)
+    lens = [2, 16, 7, 11, 16, 4, 9, 1]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+
+    def build(kv_blocks):
+        return _mk(cfg, fast_p, exp_p, slots=4, prefill_chunk=4,
+                   kv_blocks=kv_blocks)
+
+    runs = []
+    for kv_blocks in ([12, None], None):    # 11 usable blocks = 44 tokens
+        eng = build(kv_blocks)
+        for p in prompts:
+            eng.submit(p, arrival_time=0.0)
+        eng.run(max_steps=1000)
+        assert all(r.state is RequestState.DONE for r in eng.requests)
+        runs.append(eng.requests)
+    for a, b in zip(*runs):
+        assert a.tokens == b.tokens
+        np.testing.assert_allclose(a.token_conf, b.token_conf, rtol=1e-5)
+
+
+def test_chunked_prefill_rejected_for_recurrent_and_dense(tiny_parts):
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg, fast_p, _ = tiny_parts
+    with pytest.raises(ValueError, match="chunked prefill requires"):
+        CascadeEngine([TierSpec("t", cfg, fast_p)], slots=2, prompt_len=8,
+                      gen_len=2, deltas=[], use_paged_kv=False,
+                      use_chunked_prefill=True)
+    jcfg = get_config("jamba-v0.1-52b", "smoke")    # mamba: recurrent
+    jp = init_params(jcfg, jax.random.PRNGKey(0), jnp.float32)
+    with pytest.raises(ValueError, match="chunked prefill requires"):
+        CascadeEngine([TierSpec("t", jcfg, jp)], slots=2, prompt_len=8,
+                      gen_len=2, deltas=[], use_chunked_prefill=True)
+    # auto mode falls back to the uniform path for recurrent models
+    eng = CascadeEngine([TierSpec("t", jcfg, jp)], slots=2, prompt_len=8,
+                        gen_len=2, deltas=[])
+    assert not eng.chunked_prefill
+
+
+def test_mixed_length_submit_validation(tiny_parts):
+    cfg, fast_p, exp_p = tiny_parts
+    eng = _mk(cfg, fast_p, exp_p, prompt_len=8)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(9, np.int32))       # beyond max_prompt_len
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(0, np.int32))       # empty
+    uni = _mk(cfg, fast_p, exp_p, prompt_len=8, use_chunked_prefill=False)
+    with pytest.raises(ValueError):
+        uni.submit(np.zeros(5, np.int32))       # uniform path: exact only
+
+
+def test_prefill_token_accounting(tiny_parts):
+    """The padding-tax metric: live prompt tokens vs token slots the
+    fixed-shape prefill batches processed."""
+    cfg, fast_p, exp_p = tiny_parts
+    eng = _mk(cfg, fast_p, exp_p, slots=2, prompt_len=16, prefill_chunk=4,
+              deltas=[-1.0])                    # nothing escalates
+    rng = np.random.default_rng(2)
+    for n in (3, 9):
+        eng.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32))
+    s = eng.run(max_steps=200)
+    assert s["prefill_live_tokens"] == 12
+    # the default token budget (slots*chunk = 8) delays the 9-token
+    # request to tick 1; its 3 chunks plus the 3-token request's single
+    # chunk are 4 fixed-shape batches of capacity*chunk = 8 token slots
+    assert s["prefill_processed_tokens"] == 32
+    assert s["prefill_live_token_ratio"] == pytest.approx(12 / 32)
+    assert s["prompt_len_max"] == 9
+
+
+def test_length_bucket_labels():
+    assert length_bucket(1) == "1"
+    assert length_bucket(2) == "2"
+    assert length_bucket(3) == "3-4"
+    assert length_bucket(4) == "3-4"
+    assert length_bucket(5) == "5-8"
+    assert length_bucket(900) == "513-1024"
+
+
+# ---------------------------------------------------------------------------
+# serve_async end-to-end (virtual clock)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", ["lognormal", "bimodal"])
+def test_serve_async_mixed_length_end_to_end(dist, tiny_parts):
+    """Acceptance: lognormal and bimodal length distributions run
+    end-to-end through serve_async, and every request's stream is
+    bit-identical to its per-request uniform-prefill run."""
+    from repro.launch import serve_async
+    cfg, fast_p, exp_p = tiny_parts
+
+    args = serve_async.make_parser().parse_args([
+        "--requests", "6", "--rate", "4", "--slots", "3",
+        "--prompt-len", "16", "--gen-len", "3", "--prefill-chunk", "4",
+        "--length-dist", dist, "--virtual-clock", "--delta", "0.5",
+    ])
+    engine, vocab = serve_async.build_engine(args, VirtualClock())
+    prompts = [p for p in np.asarray(
+        jax.random.randint(jax.random.PRNGKey(11), (6, 16), 0, vocab),
+        np.int32)]
+    lengths = serve_async.sample_lengths(dist, 6, 16, 1, seed=0)
+    assert len(set(lengths.tolist())) > 1       # genuinely mixed
+    arrivals = serve_async.poisson_arrivals(6, 4.0, 0)
+    for p, n, t in zip(prompts, lengths, arrivals):
+        engine.submit(p[:int(n)], arrival_time=float(t))
+    s = engine.run(max_steps=1000)
+    assert s["completed"] == 6
+    assert s["ttft_p50_by_prompt_bucket"]
+
+    for p, n, r in zip(prompts, lengths, engine.requests):
+        uni = CascadeEngine(
+            [TierSpec("fast", engine.tiers[0].cfg, engine.tiers[0].params),
+             TierSpec("exp", engine.tiers[1].cfg, engine.tiers[1].params)],
+            slots=3, prompt_len=int(n), gen_len=3, deltas=[0.5],
+            clock=VirtualClock(), use_chunked_prefill=False)
+        uni.submit(p[:int(n)], arrival_time=0.0)
+        uni.run()
+        assert r.tokens == uni.requests[0].tokens
+        assert r.tier == uni.requests[0].tier
+
+
+def test_serve_async_rejects_mixed_lengths_without_chunked_prefill():
+    """The CLI guard must fire on any fallback to uniform prefill —
+    explicit flags or the engine's auto-fallback — before serving."""
+    from repro.launch import serve_async
+    args = serve_async.make_parser().parse_args([
+        "--requests", "2", "--slots", "2", "--prompt-len", "8",
+        "--gen-len", "2", "--length-dist", "lognormal",
+        "--no-chunked-prefill", "--virtual-clock"])
+    with pytest.raises(ValueError, match="chunked paged prefill"):
+        serve_async.run(args, VirtualClock())
+
+
+def test_sample_lengths_distributions():
+    from repro.launch import serve_async
+    uni = serve_async.sample_lengths("uniform", 10, 64, 1, 0)
+    assert (uni == 64).all()
+    ln = serve_async.sample_lengths("lognormal", 200, 64, 1, 0)
+    assert ln.min() >= 1 and ln.max() <= 64 and len(set(ln.tolist())) > 5
+    bi = serve_async.sample_lengths("bimodal", 200, 64, 1, 0)
+    assert bi.min() >= 1 and bi.max() <= 64
+    # two modes: substantial mass both below and above the midpoint
+    assert (bi < 24).mean() > 0.25 and (bi > 40).mean() > 0.25
+    with pytest.raises(ValueError):
+        serve_async.sample_lengths("zipf", 10, 64, 1, 0)
