@@ -10,7 +10,9 @@ tax the chunked path removes) and per-prompt-length-bucket TTFT.
     PYTHONPATH=src python -m benchmarks.serving_throughput
 
 Scale knobs: REPRO_SERVE_BENCH_{REQUESTS,SLOTS,GEN_LEN,PROMPT_LEN,
-CHUNK,DISTS} (smoke defaults).
+CHUNK,DISTS,TIER_MESH} (smoke defaults).  The BENCH json records the
+host's device count, each tier's mesh topology, and per-data-shard KV
+block high-water marks.
 """
 from __future__ import annotations
 
@@ -26,6 +28,10 @@ CHUNK = int(os.environ.get("REPRO_SERVE_BENCH_CHUNK", "16"))
 RATES = (4.0, 16.0)
 DISTS = tuple(os.environ.get("REPRO_SERVE_BENCH_DISTS",
                              "uniform,lognormal,bimodal").split(","))
+# sharded serving: comma-separated per-tier mesh shapes ("4x1,4x1");
+# empty = single device.  Simulated multi-device runs additionally need
+# XLA_FLAGS=--xla_force_host_platform_device_count=N in the environment.
+TIER_MESH = os.environ.get("REPRO_SERVE_BENCH_TIER_MESH", "")
 OUT = os.environ.get("REPRO_SERVE_BENCH_OUT",
                      "experiments/bench/serving_throughput.json")
 
@@ -50,6 +56,7 @@ def environment() -> dict:
     return {
         "backend": jax.default_backend(),
         "device": str(jax.devices()[0]),
+        "device_count": jax.device_count(),
         "jax": jax.__version__,
         "python": platform.python_version(),
         "platform": platform.platform(),
@@ -63,12 +70,15 @@ def main() -> None:
     points = []
     for dist in DISTS:
         for rate in RATES:
-            args = serve_async.make_parser().parse_args([
+            argv = [
                 "--requests", str(REQUESTS), "--rate", str(rate),
                 "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
                 "--prompt-len", str(PROMPT_LEN),
                 "--length-dist", dist, "--prefill-chunk", str(CHUNK),
-            ])
+            ]
+            if TIER_MESH:
+                argv += ["--tier-mesh"] + TIER_MESH.split(",")
+            args = serve_async.make_parser().parse_args(argv)
             t0 = time.time()
             s = serve_async.run(args)
             check_open_loop(s)
@@ -95,6 +105,9 @@ def main() -> None:
                 "flops_per_request_cascade": s["flops_per_request_cascade"],
                 "flops_per_request_always_expensive":
                     s["flops_per_request_always_expensive"],
+                # mesh topology + per-shard KV high-water (kv_arena
+                # carries kv_high_water_blocks_by_shard per tier)
+                "tier_meshes": s["tier_meshes"],
                 "kv_arena": s["kv_arena"],
                 "kv_high_water_bytes_total":
                     sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
@@ -117,6 +130,7 @@ def main() -> None:
         "gen_len": GEN_LEN,
         "max_prompt_len": PROMPT_LEN,
         "prefill_chunk": CHUNK,
+        "tier_mesh": TIER_MESH or None,
         "env": environment(),
         "points": points,
         "flops_saving_vs_always_expensive": [

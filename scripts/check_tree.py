@@ -1,0 +1,52 @@
+"""Repo-hygiene guard: fail when git tracks build artifacts.
+
+Commit ca4bfbe shipped three ``__pycache__/*.pyc`` files because the repo
+had no ``.gitignore``; this script makes that class of regression a CI
+failure instead of a review catch.  It lists the files git tracks and
+rejects anything that is a Python bytecode cache, a pytest cache, or an
+egg-info directory — artifacts that are machine-local and never belong
+in history.
+
+Run it directly::
+
+    python scripts/check_tree.py
+
+Exit status 0 when the tree is clean, 1 otherwise (one line per tracked
+artifact).  Wired into CI (.github/workflows/ci.yml) next to
+``scripts/check_docs.py``.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from typing import List
+
+# path patterns that must never be tracked by git
+ARTIFACTS = re.compile(
+    r"(^|/)__pycache__(/|$)"
+    r"|\.py[co]$"
+    r"|(^|/)\.pytest_cache(/|$)"
+    r"|\.egg-info(/|$)"
+    r"|(^|/)\.hypothesis(/|$)")
+
+
+def tracked_artifacts(files: List[str]) -> List[str]:
+    """The subset of `files` that are build/cache artifacts."""
+    return [f for f in files if ARTIFACTS.search(f)]
+
+
+def main() -> int:
+    files = subprocess.run(
+        ["git", "ls-files"], capture_output=True, text=True,
+        check=True).stdout.splitlines()
+    bad = tracked_artifacts(files)
+    for f in bad:
+        print(f"check_tree: tracked build artifact: {f}", file=sys.stderr)
+    print(f"check_tree: {len(files)} tracked file(s), "
+          f"{len(bad)} artifact(s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

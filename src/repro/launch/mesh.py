@@ -41,5 +41,51 @@ def make_test_mesh(devices: int = 8):
     return _mk((1, devices), ("data", "model"))
 
 
+def make_tier_mesh(data: int = 1, model: int = 1, devices=None):
+    """A ('data','model') mesh for one cascade tier.
+
+    Multi-tier serving gives each tier its own mesh over a *subset* of
+    the host's devices (the heavy tier typically gets more chips), so
+    unlike :func:`make_test_mesh` this accepts an explicit device list.
+    With ``devices=None`` and ``data*model`` covering every local device
+    it defers to the :func:`_mk` compat helper (AxisType on jax >= 0.5);
+    otherwise it builds the Mesh over the given slice directly.
+    """
+    import numpy as np
+    shape, axes = (data, model), ("data", "model")
+    if devices is None:
+        devices = jax.devices()
+        if data * model == len(devices):
+            return _mk(shape, axes)
+        devices = devices[:data * model]
+    if len(devices) != data * model:
+        raise ValueError(f"tier mesh {data}x{model} needs {data * model} "
+                         f"devices, got {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_tier_meshes(shapes, devices=None):
+    """One mesh per cascade tier from ``[(data, model), ...]`` shapes.
+
+    Devices are assigned contiguously from ``jax.devices()`` so tiers
+    occupy disjoint chip sets when they fit side by side (tier 0 on the
+    first ``d0*m0`` chips, tier 1 on the next ``d1*m1``, ...); when a
+    tier would run past the end, assignment wraps to device 0 and tiers
+    share chips (JAX multiplexes fine on a single host).
+    """
+    devs = list(jax.devices()) if devices is None else list(devices)
+    meshes, off = [], 0
+    for data, model in shapes:
+        n = data * model
+        if n > len(devs):
+            raise ValueError(f"tier mesh {data}x{model} needs {n} devices, "
+                             f"only {len(devs)} available")
+        if off + n > len(devs):
+            off = 0                       # wrap: tiers share devices
+        meshes.append(make_tier_mesh(data, model, devs[off:off + n]))
+        off += n
+    return meshes
+
+
 def num_chips(mesh) -> int:
     return mesh.devices.size

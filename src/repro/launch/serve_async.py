@@ -20,6 +20,13 @@ The gate threshold is set from an escalation *budget* by default
 the operator caps cost, the runtime finds δ); pass ``--delta`` for a
 fixed threshold instead.
 
+Multi-device hosts can give each tier its own mesh: ``--tier-mesh 4x1
+4x1`` runs the fast tier on the first four devices and the expensive
+tier on the next four, request rows and the paged KV block pool sharded
+over each mesh's data axis (``--shard-params`` additionally
+tensor-shards params over 'model').  Token streams are bit-identical to
+the single-device engine.
+
     PYTHONPATH=src python -m repro.launch.serve_async \
         --requests 64 --rate 8 --slots 8 --length-dist lognormal
 
@@ -40,8 +47,29 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import bigram_lm
 from repro.models import init_params
+from repro.launch.mesh import make_tier_meshes
 from repro.serving import CascadeEngine, TierSpec
 from repro.serving.engine import VirtualClock, WallClock
+
+
+def parse_mesh_shape(s: str):
+    """'4x2' -> (data=4, model=2); bare '4' means data-only."""
+    data, _, model = s.lower().partition("x")
+    return int(data), int(model or 1)
+
+
+def tier_meshes(args, num_tiers: int):
+    """Per-tier meshes from ``--tier-mesh`` (None: unmeshed tiers).  One
+    shape is broadcast to every tier; otherwise one per tier."""
+    if not args.tier_mesh:
+        return [None] * num_tiers
+    shapes = [parse_mesh_shape(s) for s in args.tier_mesh]
+    if len(shapes) == 1:
+        shapes = shapes * num_tiers
+    if len(shapes) != num_tiers:
+        raise ValueError(f"--tier-mesh takes 1 or {num_tiers} shapes, "
+                         f"got {len(shapes)}")
+    return make_tier_meshes(shapes)
 
 
 def build_engine(args, clock=None):
@@ -53,9 +81,13 @@ def build_engine(args, clock=None):
                              jnp.float32)
     gate_kw = ({"deltas": [args.delta]} if args.delta is not None
                else {"escalation_budget": args.escalation_budget})
+    meshes = tier_meshes(args, 2)
+    shard_params = bool(getattr(args, "shard_params", False))
     engine = CascadeEngine(
-        [TierSpec(args.fast, fast_cfg, fast_params),
-         TierSpec(args.expensive, exp_cfg, exp_params)],
+        [TierSpec(args.fast, fast_cfg, fast_params, mesh=meshes[0],
+                  shard_params=shard_params),
+         TierSpec(args.expensive, exp_cfg, exp_params, mesh=meshes[1],
+                  shard_params=shard_params)],
         slots=args.slots, prompt_len=args.prompt_len, gen_len=args.gen_len,
         use_gate_kernel=not args.no_gate_kernel,
         use_paged_kv=not args.dense_kv, kv_block_size=args.kv_block_size,
@@ -140,8 +172,12 @@ def run(args, clock=None) -> dict:
     summary["delta"] = [engine.scheduler.delta(g)
                         for g in range(len(engine.scheduler.gates))]
     # block-paged KV arena accounting (high-water = blocks actually
-    # mapped at peak, the number the paged arena saves vs dense)
+    # mapped at peak, the number the paged arena saves vs dense; sharded
+    # pools additionally report per-data-shard high-water)
     summary["kv_arena"] = engine.memory_stats()
+    # sharded serving: per-tier mesh layout (None entries: single-device)
+    summary["tier_meshes"] = engine.mesh_topology()
+    summary["device_count"] = jax.device_count()
     return summary
 
 
@@ -150,6 +186,9 @@ def report(s: dict) -> None:
     print(f"served {s['completed']}/{s['requests']} requests "
           f"in {s['elapsed']:.2f}{unit} over {s['steps']} engine steps "
           f"(rate {s['rate']}/s, {s['slots']} slots/tier)")
+    if any(t["mesh"] for t in s.get("tier_meshes", [])):
+        print("  meshes " + "  ".join(
+            f"{t['tier']}={t['mesh']}" for t in s["tier_meshes"]))
     print(f"  latency  p50 {s['latency_p50']:.3f}{unit}  "
           f"p95 {s['latency_p95']:.3f}{unit}   "
           f"ttft p50 {s['ttft_p50']:.3f}{unit}  p95 {s['ttft_p95']:.3f}{unit}")
@@ -220,6 +259,17 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dense-kv", action="store_true",
                     help="PR 1 dense one-page-per-request arena instead of "
                          "the block-paged arena + paged decode kernel")
+    ap.add_argument("--tier-mesh", nargs="*", default=None,
+                    metavar="DATAxMODEL",
+                    help="per-tier mesh shapes, e.g. --tier-mesh 4x1 2x2: "
+                         "each tier gets its own mesh over a contiguous "
+                         "slice of jax.devices() (wrapping when tiers "
+                         "overrun the host); rows + KV block pool shard "
+                         "over the data axis.  One shape is broadcast to "
+                         "both tiers; default: no mesh (single device)")
+    ap.add_argument("--shard-params", action="store_true",
+                    help="tensor-shard tier params over the mesh 'model' "
+                         "axis (default: replicate params per tier)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="also write the summary dict to this path")

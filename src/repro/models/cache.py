@@ -155,8 +155,14 @@ def cache_spec_leaf(c: CP, mesh, *, shard_seq: bool,
     """Sharding rule for one cache leaf.
 
     Default: batch -> ('pod','data'), kv heads/d_inner -> 'model' when
-    divisible.  When ``shard_seq`` (long-context, batch=1): the KV seq dim
-    is sharded over 'data' (sequence-parallel cache) instead of batch.
+    divisible.  Block-paged leaves (``declare_paged_cache``) shard their
+    ``kv_blocks`` pool dim over ('pod','data') the same way — each data
+    shard owns a contiguous range of KV blocks, matching the serving
+    engine's shard-aware ``BlockAllocator`` so a request's blocks live on
+    the shard that decodes its row; the intra-block ``block`` dim is
+    never sharded.  When ``shard_seq`` (long-context, batch=1): the KV
+    seq dim is sharded over 'data' (sequence-parallel cache) instead of
+    batch.
     ``seq_over_model``: additionally shard the KV seq dim over 'model' —
     the §Perf lever for GQA archs whose kv_heads don't divide the model
     axis (their caches otherwise replicate across it; attention reductions
@@ -171,7 +177,8 @@ def cache_spec_leaf(c: CP, mesh, *, shard_seq: bool,
                        for a, s in zip(c.axes, c.shape)) and model > 1
     spec = [None] * len(c.shape)
     for i, (a, s) in enumerate(zip(c.axes, c.shape)):
-        if a == "batch" and not shard_seq and data_total > 1 and s % data_total == 0:
+        if a in ("batch", "kv_blocks") and not shard_seq \
+                and data_total > 1 and s % data_total == 0:
             spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
         elif a == "kv_seq":
             axes = []
@@ -212,3 +219,13 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, mesh,
         lambda c: cache_spec_leaf(c, mesh, shard_seq=shard_seq,
                                   seq_over_model=seq_over_model),
         decl, is_leaf=_IS_CP)
+
+
+def paged_cache_specs(cfg: ModelConfig, batch: int, num_blocks: int,
+                      block_size: int, mesh, dtype=jnp.bfloat16):
+    """PartitionSpecs for a block-paged serving cache on ``mesh``: the
+    ``kv_blocks`` pool dim and per-row recurrent ``batch`` dims shard
+    over ('pod','data'), kv heads over 'model' when divisible."""
+    decl = declare_paged_cache(cfg, batch, num_blocks, block_size, dtype)
+    return jax.tree.map(lambda c: cache_spec_leaf(c, mesh, shard_seq=False),
+                        decl, is_leaf=_IS_CP)

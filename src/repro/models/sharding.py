@@ -23,6 +23,17 @@ def _axis_total(mesh, names):
     return math.prod(dict(mesh.shape)[n] for n in names) if names else 1
 
 
+def data_axis_size(mesh) -> int:
+    """Total data parallelism of ``mesh``: the product of its 'pod' and
+    'data' axis sizes (1 for no mesh or a model-only mesh).  The serving
+    engine partitions each tier's request rows and KV block pool into
+    this many shards."""
+    if mesh is None:
+        return 1
+    sizes = dict(mesh.shape)
+    return _axis_total(mesh, [a for a in ("pod", "data") if a in sizes])
+
+
 def active_mesh():
     """The mesh activated by :func:`set_mesh`, across jax versions:
     ``jax.sharding.get_abstract_mesh`` (jax >= 0.5) or the ``with mesh:``

@@ -30,11 +30,27 @@ One engine step (tick) per tier:
      escalation budget) decides DONE vs ESCALATED.  Escalated requests
      join the next tier's queue and are re-decoded there from scratch.
 
+Steps 2 and 3 are *launched* back to back and fetched together: a row
+whose final prefill chunk completes decodes in the same tick, its first
+token flowing into the decode input on device, so a mixed
+prefill+decode tick pays exactly one blocking host sync per tier
+(``CascadeEngine.host_syncs`` counts them; test-asserted).
+
+**Sharded serving**: a tier whose :class:`TierSpec` carries a mesh runs
+params, KV arena, and per-tick batches sharded across it — request rows
+and the KV block pool partition over the mesh's data shards (shard-aware
+admission binds a request's row and blocks on one shard), params
+replicate or tensor-shard over 'model', and escalated requests are
+re-packed on the host and ``device_put`` under the *target* tier's
+sharding.  Token streams are bit-identical to the single-device engine
+(multi-device parity suite: ``tests/test_sharded_serving.py``).
+
 The clock is injectable: ``WallClock`` for real Poisson traffic,
 ``VirtualClock`` for deterministic tests (one tick per step).
 """
 from __future__ import annotations
 
+import contextlib
 import math
 import time
 from dataclasses import dataclass
@@ -43,11 +59,14 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core import confidence as conf_lib
 from repro.kernels import ops as kernel_ops
 from repro.models import cache as cache_lib
+from repro.models import params as params_lib
+from repro.models import sharding as sharding_lib
 from repro.models import transformer
 from repro.serving.metrics import ServingMetrics, TierCost
 from repro.serving.request import Request, RequestState
@@ -57,13 +76,30 @@ from repro.serving.slots import DenseTierSlotPool, TierSlotPool
 
 @dataclass
 class TierSpec:
+    """One cascade member: model + params, and optionally its own mesh.
+
+    ``mesh`` places the tier on a device mesh with ('data', 'model')
+    axes (see ``launch/mesh.py::make_tier_mesh``): params are replicated
+    across it (or tensor-sharded when ``shard_params`` — MaxText-style
+    ``models/params.py::param_specs`` rules), the KV arena shards its
+    request rows and block pool over the data axes, and every per-tick
+    host input is ``device_put`` with the tier's row sharding.  Tiers
+    may sit on disjoint device subsets (the usual production layout —
+    the heavy tier gets more chips) or share devices.  ``mesh=None``
+    keeps the single-device behaviour, bit-identical to a sharded run.
+    """
     name: str
     cfg: ModelConfig
     params: object
+    mesh: Optional[jax.sharding.Mesh] = None
+    shard_params: bool = False
 
     def flops_per_request(self, gen_len: int) -> float:
         """Eq 7 cost: FLOPs/token = 2 * active params (as in launch.serve)."""
         return 2.0 * self.cfg.active_param_count() * gen_len
+
+    def data_shards(self) -> int:
+        return sharding_lib.data_axis_size(self.mesh)
 
 
 class WallClock:
@@ -104,7 +140,17 @@ class VirtualClock:
 
 
 class _TierRuntime:
-    """Per-tier compiled functions + host-side slot state."""
+    """Per-tier compiled functions + host-side slot state.
+
+    With a tier mesh the runtime owns the device placement seam: params
+    are ``device_put`` once at construction (replicated or
+    tensor-sharded), every per-tick host array goes through
+    :meth:`put_rows` (row dim sharded over the data axes — this is also
+    the escalation transfer path: an escalated request's prompt chunks
+    are packed on the host and placed under the *target* tier's
+    sharding), and the jitted functions run inside the tier's mesh
+    context so ``shard_hint`` constraints resolve against it.
+    """
 
     def __init__(self, spec: TierSpec, capacity: int, prompt_len: int,
                  max_seq: int, use_gate_kernel: bool, *,
@@ -118,12 +164,20 @@ class _TierRuntime:
         self.paged = use_paged_kv
         self.chunked = use_chunked_prefill
         self.chunk = min(prefill_chunk, prompt_len)
+        self.mesh = spec.mesh
+        self.data_shards = spec.data_shards()
+        if capacity % self.data_shards:
+            raise ValueError(
+                f"tier {spec.name}: {capacity} slots must divide into the "
+                f"mesh's {self.data_shards} data shards")
         if use_paged_kv:
             self.pool = TierSlotPool(spec.cfg, capacity, max_seq,
                                      block_size=block_size,
-                                     num_blocks=kv_blocks)
+                                     num_blocks=kv_blocks, mesh=spec.mesh)
         else:
-            self.pool = DenseTierSlotPool(spec.cfg, capacity, max_seq)
+            self.pool = DenseTierSlotPool(spec.cfg, capacity, max_seq,
+                                          mesh=spec.mesh)
+        self.params = self._place_params(spec)
         self.slot_req: List[Optional[Request]] = [None] * capacity
         self.tok = np.zeros(capacity, np.int32)
         self.pos = np.zeros(capacity, np.int32)
@@ -174,6 +228,63 @@ class _TierRuntime:
         self.step_fn = jax.jit(step_fn, donate_argnums=donate)
         self.chunk_fn = jax.jit(chunk_fn, donate_argnums=donate)
 
+    # -- device placement ---------------------------------------------------
+
+    def _place_params(self, spec: TierSpec):
+        """Params on the tier mesh: replicated, or tensor-sharded over
+        'model' per the MaxText-style logical-axis rules when
+        ``spec.shard_params``."""
+        if spec.mesh is None:
+            return spec.params
+        if spec.shard_params:
+            shardings = jax.tree.map(
+                lambda ps: NamedSharding(spec.mesh, ps),
+                params_lib.param_specs(spec.cfg, spec.mesh),
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
+        else:
+            shardings = jax.tree.map(
+                lambda _: NamedSharding(spec.mesh, PartitionSpec()),
+                spec.params)
+        return jax.device_put(spec.params, shardings)
+
+    def put_rows(self, arr):
+        """A per-tick host array onto the tier's devices, row dim sharded
+        over the data axes (no mesh: plain transfer).  Used for tokens,
+        positions, chunk batches, and page tables — and thereby the
+        escalation transfer path: a request escalated from another tier
+        is packed into this tier's fixed-shape batches on the host and
+        placed under *this* tier's sharding here."""
+        arr = np.asarray(arr)
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        spec = PartitionSpec(*(("data",) + (None,) * (arr.ndim - 1)))
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def _ctx(self):
+        """The tier's mesh context (shard_hint constraints resolve
+        against it); a no-op without a mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return sharding_lib.set_mesh(self.mesh)
+
+    def run_prefill(self, prompts):
+        with self._ctx():
+            return self.prefill_fn(self.params, self.put_rows(prompts))
+
+    def run_chunk(self, tokens, pos, qlen):
+        with self._ctx():
+            return self.chunk_fn(
+                self.params, self.put_rows(tokens), self.pool.cache,
+                self.put_rows(pos), self.page_table_device(),
+                self.put_rows(qlen))
+
+    def run_step(self, tok_dev, mask_rows):
+        with self._ctx():
+            return self.step_fn(
+                self.params, tok_dev, self.pool.cache,
+                self.put_rows(self.pos[:, None]),
+                self.page_table_device(mask_rows=mask_rows))
+
     def page_table_device(self, mask_rows: Sequence[int] = ()):
         """Device page tables; ``mask_rows`` (rows mid-prefill during a
         decode step) have their pages unmapped in the copy so the decode
@@ -184,9 +295,9 @@ class _TierRuntime:
             if len(mask_rows):
                 pt = pt.copy()
                 pt[list(mask_rows)] = 0
-            return jnp.asarray(pt)
+            return self.put_rows(pt)
         # dense pools take a dummy (the traced fn ignores it)
-        return jnp.zeros((self.capacity, 1), jnp.int32)
+        return self.put_rows(np.zeros((self.capacity, 1), np.int32))
 
     def occupied(self) -> List[int]:
         return [s for s, r in enumerate(self.slot_req) if r is not None]
@@ -284,7 +395,12 @@ class CascadeEngine:
         self.prefill_token_budget = (
             prefill_token_budget if prefill_token_budget is not None
             else max(slots_per_tier) * self.prefill_chunk)
-        self.scheduler = CascadeScheduler(slots_per_tier, gates)
+        # sharded serving: each tier's rows partition over its mesh's
+        # data shards; admission targets the shard whose block pool can
+        # take the request (validated against slots in _TierRuntime)
+        shards_per_tier = [t.data_shards() for t in self.tiers]
+        self.scheduler = CascadeScheduler(slots_per_tier, gates,
+                                          shards_per_tier)
         self.metrics = ServingMetrics(
             [TierCost(t.name, t.flops_per_request(gen_len))
              for t in self.tiers], slots_per_tier)
@@ -313,6 +429,7 @@ class CascadeEngine:
         self.requests: List[Request] = []
         self._rid = 0
         self._admitted_tokens = [0] * m     # per-tier, reset each tick
+        self.host_syncs = 0                 # blocking device->host fetches
 
     # -- submission --------------------------------------------------------
 
@@ -337,29 +454,54 @@ class CascadeEngine:
 
     # -- one engine tick ---------------------------------------------------
 
+    def _fetch(self, tree):
+        """The tick's blocking device->host transfer (counted: the
+        per-tier sync-coalescing tests assert a mixed prefill+decode tick
+        pays exactly one of these per tier)."""
+        self.host_syncs += 1
+        return jax.device_get(tree)
+
+    def _pick_shard(self, tier: int, rt: _TierRuntime,
+                    ntokens: int) -> Optional[int]:
+        """The data shard the next admission should land on: a shard with
+        a free request row whose block pool passes ``can_admit`` for the
+        request's first pages, preferring the most free blocks (lowest
+        shard id on ties).  None when no shard can take it — single-shard
+        tiers degrade to the plain row+block check."""
+        alloc = self.scheduler.allocators[tier]
+        best, best_free = None, -1
+        for s in range(rt.data_shards):
+            if alloc.free_in(s) == 0 or not rt.pool.can_admit(ntokens, s):
+                continue
+            free = rt.pool.blocks.free_in(s)
+            if free > best_free:
+                best, best_free = s, free
+        return best
+
     def _admit(self, tier: int, now: float) -> None:
         rt = self.runtimes[tier]
         if rt.chunked:
             # mixed-length admission: bind rows one at a time, bounded by
             # free rows, free KV blocks for the *first chunk* (later
-            # chunks grow lazily), and the tier's prompt-token budget per
-            # tick (scheduler-enforced; the budget window spans both
-            # admission passes of a tick via _admitted_tokens, and the
-            # window's first request is always admitted so a prompt
-            # longer than the whole budget cannot starve).  No compute
-            # here — chunks run in _prefill.
+            # chunks grow lazily) on the target data shard, and the
+            # tier's prompt-token budget per tick (scheduler-enforced;
+            # the budget window spans both admission passes of a tick via
+            # _admitted_tokens, and the window's first request is always
+            # admitted so a prompt longer than the whole budget cannot
+            # starve).  No compute here — chunks run in _prefill.
             admitted = 0
             while True:
                 head = self.scheduler.peek(tier, now)
                 if head is None:
                     break
                 plen = head.prompt_tokens
-                if not rt.pool.can_admit(min(rt.chunk, plen)):
+                shard = self._pick_shard(tier, rt, min(rt.chunk, plen))
+                if shard is None:
                     break
                 reqs, slot_ids = self.scheduler.admit(
                     tier, now, limit=1,
                     token_budget=self.prefill_token_budget,
-                    budget_used=self._admitted_tokens[tier])
+                    budget_used=self._admitted_tokens[tier], shard=shard)
                 if not reqs:
                     break               # over budget this tick
                 req, slot = reqs[0], slot_ids[0]
@@ -374,13 +516,16 @@ class CascadeEngine:
             return
         if rt.paged:
             # block-aware admission: one request at a time, binding its
-            # prompt pages, until rows, blocks, or the queue run out
-            # (can_admit leaves the oldest row its worst-case remaining
-            # demand — the discipline that makes over-subscription
-            # deadlock-free; see serving.slots)
+            # prompt pages on the picked shard, until rows, blocks, or
+            # the queue run out (can_admit leaves the shard's oldest row
+            # its worst-case remaining demand — the discipline that makes
+            # over-subscription deadlock-free; see serving.slots)
             reqs, slot_ids = [], []
-            while rt.pool.can_admit(self.prompt_len):
-                r, s = self.scheduler.admit(tier, now, limit=1)
+            while self.scheduler.peek(tier, now) is not None:
+                shard = self._pick_shard(tier, rt, self.prompt_len)
+                if shard is None:
+                    break
+                r, s = self.scheduler.admit(tier, now, limit=1, shard=shard)
                 if not r:
                     break
                 rt.pool.bind(s[0], self.prompt_len)
@@ -396,14 +541,16 @@ class CascadeEngine:
         prompts = np.zeros((rt.capacity, self.prompt_len), np.int32)
         for i, req in enumerate(reqs):
             prompts[i] = req.prompt
-        part_cache, ftok, fconf = rt.prefill_fn(
-            rt.spec.params, jnp.asarray(prompts))
+        part_cache, ftok, fconf = rt.run_prefill(prompts)
         rt.pool.write_prefill(slot_ids, part_cache)
         # one blocking transfer for both outputs (device_get blocks until
         # prefill finished); timestamp tokens with the post-compute clock
         # so TTFT includes prefill, not just queueing (VirtualClock is
-        # constant within a step, so ticks are unaffected)
-        ftok, fconf = jax.device_get((ftok, fconf))
+        # constant within a step, so ticks are unaffected).  This sync is
+        # separate from the tick's coalesced prefill+decode fetch: the
+        # uniform one-shot path is the legacy bit-exactness oracle and
+        # admits at most twice per tick, not every tick.
+        ftok, fconf = self._fetch((ftok, fconf))
         t_emit = self.clock.now()
         for i, (req, slot) in enumerate(zip(reqs, slot_ids)):
             req.start_decode()
@@ -412,16 +559,22 @@ class CascadeEngine:
             rt.tok[slot] = ftok[i]
             rt.pos[slot] = self.prompt_len   # next decode writes here
 
-    def _prefill(self, tier: int, now: float) -> None:
+    def _prefill_launch(self, tier: int) -> Optional[dict]:
         """Advance every mid-prefill row one chunk (chunked mode only).
         One fixed-shape ``chunk_fn`` call per tier per tick serves any mix
         of per-row chunk starts and tail lengths; rows denied KV blocks
         (over-subscribed arena) stall with ``q_len = 0`` and replay the
-        chunk next tick — attention KV writes are idempotent."""
+        chunk next tick — attention KV writes are idempotent.
+
+        Launch half of the coalesced tick: all host-side state (chunk
+        positions, PREFILL->DECODE transitions) advances here — it only
+        depends on host-known chunk lengths — while the device outputs
+        (first token + confidence of rows whose last chunk completed)
+        stay on device for the tick's single joint fetch."""
         rt = self.runtimes[tier]
         pre = rt.prefilling()
         if not pre:
-            return
+            return None
         C = rt.chunk
         tokens = np.zeros((rt.capacity, C), np.int32)
         pos = np.zeros((rt.capacity, C), np.int32)
@@ -436,14 +589,11 @@ class CascadeEngine:
             pos[s] = st + np.arange(C)        # row's q_start is pos[s, 0]
             qlen[s] = n
         if not qlen.any():
-            return                      # every row stalled: skip the batch
-        tok, conf, rt.pool.cache = rt.chunk_fn(
-            rt.spec.params, jnp.asarray(tokens), rt.pool.cache,
-            jnp.asarray(pos), rt.page_table_device(), jnp.asarray(qlen))
+            return None                 # every row stalled: skip the batch
+        tok, conf, rt.pool.cache = rt.run_chunk(tokens, pos, qlen)
         self.metrics.record_prefill_tokens(int(qlen.sum()),
                                            rt.capacity * C)
-        tok, conf = jax.device_get((tok, conf))
-        t_emit = self.clock.now()             # post-compute (see _admit)
+        finished = []
         for s in pre:
             if qlen[s] == 0:
                 continue
@@ -451,47 +601,92 @@ class CascadeEngine:
             req = rt.slot_req[s]
             if rt.prefill_pos[s] == req.prompt_tokens:
                 req.start_decode()
-                req.emit(int(tok[s]), float(conf[s]), t_emit)
-                rt.tok[s] = tok[s]
                 rt.pos[s] = req.prompt_tokens   # next decode writes here
+                finished.append(s)
+        return {"tok": tok, "conf": conf, "finished": finished}
 
-    def _decode(self, tier: int, now: float) -> int:
+    def _decode_launch(self, tier: int,
+                       pf: Optional[dict]) -> Optional[dict]:
+        """Launch half of the fused decode step.  Rows whose final
+        prefill chunk completed this tick decode in the same tick; their
+        first token is still on device (in ``pf``), so it is mixed into
+        the decode input with a device-side ``where`` instead of a host
+        round-trip — the decode consumes the prefill output without ever
+        syncing between the two launches."""
         rt = self.runtimes[tier]
         decoding = rt.decoding()
+        if pf is not None and pf["finished"]:
+            # rows whose first token is still on device look one emit
+            # behind `decode_finished`: drop those the pending prefill
+            # emit already completes (gen_len=1), exactly as the old
+            # commit-then-decode order did
+            decoding = [s for s in decoding
+                        if s not in pf["finished"]
+                        or len(rt.slot_req[s].tokens) + 1
+                        < rt.slot_req[s].gen_len]
         if not decoding:
-            return 0
+            return None
         if rt.paged:
             # grow page tables lazily as rows cross block boundaries,
-            # oldest row first.  A row denied a block *stalls*: its page
-            # stays unmapped (writes hit the null block), its output is
-            # discarded, and it retries next tick — attention KV replay
-            # is idempotent, and over-subscription is rejected at engine
-            # construction for models with recurrent state.
+            # oldest row (per data shard) first.  A row denied a block
+            # *stalls*: its page stays unmapped (writes hit the null
+            # block), its output is discarded, and it retries next tick —
+            # attention KV replay is idempotent, and over-subscription is
+            # rejected at engine construction for models with recurrent
+            # state.
             dec = set(decoding)
             active = [s for s in rt.pool.bound_rows()
                       if s in dec and rt.pool.ensure_blocks(
                           s, int(rt.pos[s]))]
             if not active:
-                return 0
+                return None
         else:
             active = decoding
+        tok_in = rt.put_rows(rt.tok[:, None])
+        if pf is not None and pf["finished"]:
+            fresh = np.zeros(rt.capacity, bool)
+            fresh[pf["finished"]] = True
+            tok_in = jnp.where(rt.put_rows(fresh[:, None]),
+                               pf["tok"][:, None].astype(jnp.int32), tok_in)
         # rows mid-prefill share the fused decode batch but must not touch
         # their (bound, partially-filled) pages: mask them to the null
         # block in the decode step's page-table copy
-        nxt, conf, rt.pool.cache = rt.step_fn(
-            rt.spec.params, jnp.asarray(rt.tok[:, None]),
-            rt.pool.cache, jnp.asarray(rt.pos[:, None]),
-            rt.page_table_device(mask_rows=rt.prefilling()))
-        # single blocking transfer per tick for both outputs (was two
-        # sequential np.asarray syncs)
-        nxt, conf = jax.device_get((nxt, conf))
+        nxt, conf, rt.pool.cache = rt.run_step(
+            tok_in, mask_rows=rt.prefilling())
+        return {"active": active, "tok": nxt, "conf": conf}
+
+    def _prefill_decode(self, tier: int, now: float) -> int:
+        """One tier's compute for a tick: launch the prefill chunk batch,
+        launch the fused decode step (consuming the chunk outputs on
+        device), then pay a *single* blocking host sync for both result
+        pairs — a mixed prefill+decode tick costs one ``device_get`` per
+        tier instead of the two the split methods used to issue.  Ticks
+        whose prefill finishes no row and runs no decode skip the fetch
+        entirely (the chunk outputs are dead values)."""
+        rt = self.runtimes[tier]
+        pf = self._prefill_launch(tier)
+        dc = self._decode_launch(tier, pf)
+        emit_first = pf is not None and pf["finished"]
+        if not emit_first and dc is None:
+            return 0
+        fetched = self._fetch((
+            (pf["tok"], pf["conf"]) if emit_first else None,
+            (dc["tok"], dc["conf"]) if dc is not None else None))
         t_emit = self.clock.now()       # post-compute (see _admit)
-        for slot in active:
+        if emit_first:
+            ptok, pconf = fetched[0]
+            for s in pf["finished"]:
+                rt.slot_req[s].emit(int(ptok[s]), float(pconf[s]), t_emit)
+                rt.tok[s] = ptok[s]
+        if dc is None:
+            return 0
+        ntok, nconf = fetched[1]
+        for slot in dc["active"]:
             req = rt.slot_req[slot]
-            req.emit(int(nxt[slot]), float(conf[slot]), t_emit)
-            rt.tok[slot] = nxt[slot]
+            req.emit(int(ntok[slot]), float(nconf[slot]), t_emit)
+            rt.tok[slot] = ntok[slot]
             rt.pos[slot] += 1
-        return len(active)
+        return len(dc["active"])
 
     def _finish(self, tier: int, now: float) -> None:
         rt = self.runtimes[tier]
@@ -523,8 +718,7 @@ class CascadeEngine:
         active = []
         for tier in range(len(self.tiers)):
             self._admit(tier, now)
-            self._prefill(tier, now)
-            active.append(self._decode(tier, now))
+            active.append(self._prefill_decode(tier, now))
             self._finish(tier, now)
         # Trailing admission pass: requests escalated this tick enter the
         # next tier's slots immediately (their decode starts next tick),
@@ -544,10 +738,33 @@ class CascadeEngine:
 
     def memory_stats(self) -> List[dict]:
         """Per-tier KV arena accounting: block geometry, static arena
-        bytes, high-water bytes actually mapped (paged), and what the
-        dense one-page-per-request arena would have allocated."""
+        bytes, high-water bytes actually mapped (paged, overall and per
+        data shard), and what the dense one-page-per-request arena would
+        have allocated."""
         return [dict(tier=rt.spec.name, **rt.pool.memory_stats())
                 for rt in self.runtimes]
+
+    def mesh_topology(self) -> List[dict]:
+        """Per-tier mesh layout (None entries for unmeshed tiers): axis
+        sizes, device count/ids, data shard count, and whether params are
+        tensor-sharded — recorded into serving summaries and the BENCH
+        json."""
+        out = []
+        for rt in self.runtimes:
+            if rt.mesh is None:
+                out.append({"tier": rt.spec.name, "mesh": None,
+                            "devices": 1, "data_shards": 1})
+                continue
+            out.append({
+                "tier": rt.spec.name,
+                "mesh": {a: int(s) for a, s in
+                         zip(rt.mesh.axis_names, rt.mesh.devices.shape)},
+                "devices": int(rt.mesh.devices.size),
+                "device_ids": [int(d.id) for d in rt.mesh.devices.flat],
+                "data_shards": rt.data_shards,
+                "shard_params": bool(rt.spec.shard_params),
+            })
+        return out
 
     def reset_clock(self) -> None:
         """Restart the clock at t=0.  Call after compilation / setup and
@@ -566,20 +783,17 @@ class CascadeEngine:
         latency."""
         for rt in self.runtimes:
             if rt.chunked:
-                ztok = jnp.zeros((rt.capacity, rt.chunk), jnp.int32)
-                zlen = jnp.zeros(rt.capacity, jnp.int32)
-                _, _, rt.pool.cache = rt.chunk_fn(
-                    rt.spec.params, ztok, rt.pool.cache,
-                    jnp.zeros((rt.capacity, rt.chunk), jnp.int32),
-                    rt.page_table_device(), zlen)
+                ztok = np.zeros((rt.capacity, rt.chunk), np.int32)
+                _, _, rt.pool.cache = rt.run_chunk(
+                    ztok, ztok, np.zeros(rt.capacity, np.int32))
             else:
-                prompts = jnp.zeros((rt.capacity, self.prompt_len),
-                                    jnp.int32)
-                rt.prefill_fn(rt.spec.params, prompts)
-            zeros = jnp.zeros((rt.capacity, 1), jnp.int32)
-            _, _, rt.pool.cache = rt.step_fn(rt.spec.params, zeros,
-                                             rt.pool.cache, zeros,
-                                             rt.page_table_device())
+                prompts = np.zeros((rt.capacity, self.prompt_len), np.int32)
+                rt.run_prefill(prompts)
+            zeros = np.zeros((rt.capacity, 1), np.int32)
+            with rt._ctx():
+                _, _, rt.pool.cache = rt.step_fn(
+                    rt.params, rt.put_rows(zeros), rt.pool.cache,
+                    rt.put_rows(zeros), rt.page_table_device())
         self.reset_clock()
 
     def run(self, max_steps: int = 1_000_000) -> dict:

@@ -47,12 +47,20 @@ class CascadeScheduler:
     """Queues + slot accounting for an M-tier cascade."""
 
     def __init__(self, slots_per_tier: Sequence[int],
-                 gates: Sequence[GateSpec]):
+                 gates: Sequence[GateSpec],
+                 shards_per_tier: Optional[Sequence[int]] = None):
         num_tiers = len(slots_per_tier)
         if len(gates) != num_tiers - 1:
             raise ValueError("one gate per non-final tier")
         self.num_tiers = num_tiers
-        self.allocators = [SlotAllocator(c) for c in slots_per_tier]
+        # sharded serving: a tier on a mesh with D data shards partitions
+        # its rows into D contiguous ranges; admission targets one shard
+        shards = ([1] * num_tiers if shards_per_tier is None
+                  else [int(s) for s in shards_per_tier])
+        if len(shards) != num_tiers:
+            raise ValueError("one shard count per tier")
+        self.allocators = [SlotAllocator(c, d)
+                           for c, d in zip(slots_per_tier, shards)]
         self.gates = list(gates)
         self.gate_stats = [GateStats() for _ in gates]
         self._conf_windows: List[Deque[float]] = [
@@ -87,6 +95,7 @@ class CascadeScheduler:
 
     def admit(self, tier: int, now: float, limit: Optional[int] = None,
               token_budget: Optional[int] = None, budget_used: int = 0,
+              shard: Optional[int] = None,
               ) -> Tuple[List[Request], List[int]]:
         """Pop requests into free slots of `tier` until either runs out.
         Returns the packed (requests, slot_ids) admitted this step.
@@ -99,18 +108,21 @@ class CascadeScheduler:
         the current window (the engine admits one request per call while
         binding KV blocks in between, with a per-tick window).  The
         window's first request is always admitted (a prompt longer than
-        the whole budget must not starve); the rest must fit."""
+        the whole budget must not starve); the rest must fit.
+        ``shard`` pins the admission to one data shard's row range
+        (sharded serving: the engine picks the shard whose KV block pool
+        can hold the request); None lets the allocator balance shards."""
         reqs: List[Request] = []
         slots: List[int] = []
         used = budget_used
         alloc = self.allocators[tier]
-        while self.admissible(tier, now) and alloc.num_free > 0 \
+        while self.admissible(tier, now) and alloc.free_in(shard) > 0 \
                 and (limit is None or len(reqs) < limit):
             need = self.queues[tier][0].prompt_tokens
             if token_budget is not None and used \
                     and used + need > token_budget:
                 break
-            slot = alloc.alloc()
+            slot = alloc.alloc(shard)
             req = self.queues[tier].popleft()
             req.admit(tier, slot, now)
             reqs.append(req)

@@ -26,6 +26,18 @@ the oldest bound row may always take a free block, while younger rows
 and new admissions must leave ``worst_remaining(oldest)`` blocks free.
 Since every row releases all its blocks when it finishes, the oldest row
 always completes, then the next-oldest inherits the guarantee.
+
+**Sharded pools** (multi-device serving): when a tier runs on a mesh
+with ``D`` data shards, its ``capacity`` rows and its block pool are
+partitioned into ``D`` contiguous ranges — shard ``d`` owns rows
+``[d*capacity/D, (d+1)*capacity/D)`` and blocks
+``[d*num_blocks/D, (d+1)*num_blocks/D)``, matching the device layout of
+the row- and ``kv_blocks``-sharded cache arrays
+(:func:`repro.models.cache.cache_spec_leaf`), so a request's KV blocks
+live on the data shard that decodes its row.  Allocation, admission
+accounting, and the oldest-first reserve discipline all become
+per-shard: each shard's oldest row can always grow, so each shard is
+independently deadlock-free.
 """
 from __future__ import annotations
 
@@ -35,26 +47,49 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models import cache as cache_lib
+from repro.models.sharding import data_axis_size
 
 NULL_BLOCK = 0
 
 
 class SlotAllocator:
-    """Fixed-capacity free-list allocator."""
+    """Fixed-capacity free-list allocator over request rows.
 
-    def __init__(self, capacity: int):
+    ``shards > 1`` partitions the rows into contiguous per-shard ranges
+    (``capacity`` must divide evenly); ``alloc(shard)`` then pops from
+    that shard's free list only, and ``alloc(None)`` balances by picking
+    the shard with the most free rows (lowest shard id on ties).  With
+    the default ``shards=1`` behaviour is identical to the unsharded
+    allocator (LIFO free list, ascending first pass).
+    """
+
+    def __init__(self, capacity: int, shards: int = 1):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
+        if shards <= 0 or capacity % shards:
+            raise ValueError(
+                f"capacity {capacity} must divide into {shards} shards")
         self.capacity = capacity
-        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self.shards = shards
+        self._span = capacity // shards
+        self._free: List[List[int]] = [
+            list(range((s + 1) * self._span - 1, s * self._span - 1, -1))
+            for s in range(shards)]
         self._used = set()
 
-    def alloc(self) -> Optional[int]:
-        if not self._free:
+    def shard_of(self, slot: int) -> int:
+        return slot // self._span
+
+    def alloc(self, shard: Optional[int] = None) -> Optional[int]:
+        if shard is None:
+            shard = max(range(self.shards),
+                        key=lambda s: (len(self._free[s]), -s))
+        if not self._free[shard]:
             return None
-        slot = self._free.pop()
+        slot = self._free[shard].pop()
         self._used.add(slot)
         return slot
 
@@ -62,11 +97,16 @@ class SlotAllocator:
         if slot not in self._used:
             raise ValueError(f"slot {slot} is not allocated")
         self._used.remove(slot)
-        self._free.append(slot)
+        self._free[self.shard_of(slot)].append(slot)
+
+    def free_in(self, shard: Optional[int]) -> int:
+        if shard is None:
+            return self.num_free
+        return len(self._free[shard])
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
     @property
     def num_used(self) -> int:
@@ -78,33 +118,64 @@ class SlotAllocator:
 
 
 class BlockAllocator:
-    """Free-list over KV blocks ``1..num_blocks-1`` (0 = null block)."""
+    """Free-list over KV blocks ``1..num_blocks-1`` (0 = null block).
 
-    def __init__(self, num_blocks: int):
+    ``shards > 1`` partitions the block ids into contiguous per-shard
+    ranges aligned with the ``kv_blocks``-sharded device arrays
+    (``num_blocks`` must divide evenly); shard 0's range contains the
+    reserved null block, so it exposes one fewer usable block.
+    ``alloc(shard)`` pops from that shard's free list; per-shard
+    high-water marks feed the BENCH json's per-shard KV accounting.
+    """
+
+    def __init__(self, num_blocks: int, shards: int = 1):
         if num_blocks < 2:
             raise ValueError("need at least one block besides the null block")
+        if shards <= 0 or num_blocks % shards:
+            raise ValueError(
+                f"num_blocks {num_blocks} must divide into {shards} shards")
         self.num_blocks = num_blocks
-        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self.shards = shards
+        self._span = num_blocks // shards
+        # shard s owns ids [s*span, (s+1)*span); descending lists pop the
+        # lowest id first; the null block (id 0, shard 0) is never free
+        self._free: List[List[int]] = [
+            list(range((s + 1) * self._span - 1,
+                       max(s * self._span - 1, 0), -1))
+            for s in range(shards)]
         self._used = set()
+        self._used_by_shard = [0] * shards
         self.high_water = 0
+        self.high_water_by_shard = [0] * shards
 
-    def alloc(self) -> Optional[int]:
-        if not self._free:
+    def shard_of(self, block: int) -> int:
+        return block // self._span
+
+    def alloc(self, shard: int = 0) -> Optional[int]:
+        if not self._free[shard]:
             return None
-        b = self._free.pop()
+        b = self._free[shard].pop()
         self._used.add(b)
+        self._used_by_shard[shard] += 1
         self.high_water = max(self.high_water, len(self._used))
+        self.high_water_by_shard[shard] = max(
+            self.high_water_by_shard[shard], self._used_by_shard[shard])
         return b
 
     def free(self, block: int) -> None:
         if block not in self._used:
             raise ValueError(f"block {block} is not allocated")
         self._used.remove(block)
-        self._free.append(block)
+        shard = self.shard_of(block)
+        self._used_by_shard[shard] -= 1
+        self._free[shard].append(block)
+
+    def free_in(self, shard: int) -> int:
+        return len(self._free[shard])
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
     @property
     def num_used(self) -> int:
@@ -161,10 +232,21 @@ class TierSlotPool:
     stall can ever occur.  Smaller ``num_blocks`` over-subscribes the
     arena — admission and block growth then enforce the oldest-first
     reserve discipline (see module docstring).
+
+    ``mesh`` shards the pool for multi-device serving: request rows and
+    KV blocks partition into ``data_axis_size(mesh)`` contiguous shards
+    (``capacity`` must divide; ``num_blocks`` is rounded up to divide),
+    the device arrays are placed with the matching NamedShardings
+    (``kv_blocks``/``batch`` over the data axes, kv heads over 'model' —
+    :func:`repro.models.cache.paged_cache_specs`), and allocation /
+    reserve accounting run per shard so a row's blocks stay on its data
+    shard.  ``data_shards`` overrides the shard count without a mesh
+    (host-side accounting only; unit tests).
     """
 
     def __init__(self, cfg, capacity: int, max_seq: int, dtype=jnp.float32,
-                 *, block_size: int = 16, num_blocks: Optional[int] = None):
+                 *, block_size: int = 16, num_blocks: Optional[int] = None,
+                 mesh=None, data_shards: Optional[int] = None):
         if block_size <= 0:
             raise ValueError("block_size must be positive")
         self.cfg = cfg
@@ -172,19 +254,43 @@ class TierSlotPool:
         self.max_seq = max_seq
         self.dtype = dtype
         self.block_size = block_size
+        self.mesh = mesh
+        self.data_shards = (data_axis_size(mesh) if data_shards is None
+                            else int(data_shards))
+        if self.data_shards <= 0 or capacity % self.data_shards:
+            raise ValueError(
+                f"capacity {capacity} must divide into {self.data_shards} "
+                "data shards (rows are partitioned across the mesh)")
+        self._row_span = capacity // self.data_shards
         self.pages_per_row = math.ceil(max_seq / block_size)
         full = capacity * self.pages_per_row + 1
         self.num_blocks = full if num_blocks is None else int(num_blocks)
-        if self.num_blocks < self.pages_per_row + 1:
+        if self.data_shards > 1:
+            # round up so the block pool shards evenly over the data axis
+            self.num_blocks = self.data_shards * math.ceil(
+                self.num_blocks / self.data_shards)
+            if self.num_blocks // self.data_shards < self.pages_per_row + 1:
+                raise ValueError(
+                    f"num_blocks={self.num_blocks} over {self.data_shards} "
+                    f"shards cannot hold one full request per shard "
+                    f"({self.pages_per_row} blocks + the null block)")
+        elif self.num_blocks < self.pages_per_row + 1:
             raise ValueError(
                 f"num_blocks={self.num_blocks} cannot hold one full request "
                 f"({self.pages_per_row} blocks) plus the null block")
         self.oversubscribed = self.num_blocks < full
-        self.blocks = BlockAllocator(self.num_blocks)
+        self.blocks = BlockAllocator(self.num_blocks, self.data_shards)
         self.cache = cache_lib.init_paged_cache(
             cfg, capacity, self.num_blocks, block_size, dtype)
         decl = cache_lib.declare_paged_cache(
             cfg, capacity, self.num_blocks, block_size, dtype)
+        if mesh is not None:
+            specs = cache_lib.paged_cache_specs(
+                cfg, capacity, self.num_blocks, block_size, mesh, dtype)
+            shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
+            self.cache = jax.device_put(self.cache, shardings)
         self._meta = _leaf_meta(decl)
         self.page_table = np.zeros((capacity, self.pages_per_row), np.int32)
         self._row_blocks: List[List[int]] = [[] for _ in range(capacity)]
@@ -193,37 +299,56 @@ class TierSlotPool:
 
     # -- admission-side block accounting -----------------------------------
 
+    def shard_of(self, slot: int) -> int:
+        """The data shard owning request row `slot` (contiguous ranges)."""
+        return slot // self._row_span
+
+    def shard_of_block(self, block: int) -> int:
+        """The data shard owning KV block id `block`."""
+        return self.blocks.shard_of(block)
+
     def _worst_remaining(self, slot: int) -> int:
         """Blocks `slot` may still need: its bound lifetime demand (from
         ``bind``'s row_tokens — mixed-length rows demand fewer pages than
         ``pages_per_row``) minus what it already holds."""
         return self._row_demand[slot] - len(self._row_blocks[slot])
 
-    def _oldest_worst(self) -> int:
-        return self._worst_remaining(self._order[0]) if self._order else 0
+    def _oldest_in(self, shard: int) -> Optional[int]:
+        """Oldest bound row on `shard` (block-growth priority holder)."""
+        for s in self._order:
+            if self.shard_of(s) == shard:
+                return s
+        return None
+
+    def _oldest_worst(self, shard: int = 0) -> int:
+        oldest = self._oldest_in(shard)
+        return self._worst_remaining(oldest) if oldest is not None else 0
 
     def blocks_for(self, ntokens: int) -> int:
         return math.ceil(ntokens / self.block_size)
 
-    def can_admit(self, prompt_len: int) -> bool:
-        """True if a new request's prompt pages fit while leaving the
-        oldest bound row its worst-case remaining demand."""
+    def can_admit(self, prompt_len: int, shard: int = 0) -> bool:
+        """True if a new request's prompt pages fit on `shard` while
+        leaving that shard's oldest bound row its worst-case remaining
+        demand."""
         need = self.blocks_for(prompt_len)
-        return self.blocks.num_free - need >= self._oldest_worst()
+        return self.blocks.free_in(shard) - need >= self._oldest_worst(shard)
 
     def bind(self, slot: int, ntokens: int,
              row_tokens: Optional[int] = None) -> None:
         """Claim `slot` (newest) and allocate pages for its first
         ``ntokens`` (the whole prompt under one-shot prefill; the first
         chunk under chunked prefill — later chunks grow via
-        :meth:`ensure_blocks`).  ``row_tokens`` bounds the row's lifetime
-        demand (``prompt_len + gen_len``; default ``max_seq``) for the
+        :meth:`ensure_blocks`).  Blocks come from `slot`'s data shard.
+        ``row_tokens`` bounds the row's lifetime demand
+        (``prompt_len + gen_len``; default ``max_seq``) for the
         oldest-first reserve accounting.  Callers must check
         :meth:`can_admit` first."""
         if self._row_blocks[slot]:
             raise ValueError(f"slot {slot} already bound")
+        shard = self.shard_of(slot)
         need = self.blocks_for(ntokens)
-        if self.blocks.num_free < need:
+        if self.blocks.free_in(shard) < need:
             raise RuntimeError("bind without can_admit: no free blocks")
         demand = self.blocks_for(self.max_seq if row_tokens is None
                                  else min(row_tokens, self.max_seq))
@@ -233,23 +358,25 @@ class TierSlotPool:
         self._row_demand[slot] = demand
         self._order.append(slot)
         for j in range(need):
-            b = self.blocks.alloc()
+            b = self.blocks.alloc(shard)
             self._row_blocks[slot].append(b)
             self.page_table[slot, j] = b
 
     def ensure_blocks(self, slot: int, pos: int) -> bool:
-        """Grow `slot`'s page table to cover token index `pos`.  Returns
-        False (row must stall this tick) if the reserve discipline denies
-        the allocation; the oldest bound row is never denied."""
+        """Grow `slot`'s page table to cover token index `pos` with
+        blocks from its data shard.  Returns False (row must stall this
+        tick) if the reserve discipline denies the allocation; a shard's
+        oldest bound row is never denied."""
         page = pos // self.block_size
         if page >= self.pages_per_row:
             raise ValueError(f"pos {pos} beyond max_seq {self.max_seq}")
-        is_oldest = bool(self._order) and self._order[0] == slot
+        shard = self.shard_of(slot)
+        is_oldest = self._oldest_in(shard) == slot
         while len(self._row_blocks[slot]) <= page:
             if not is_oldest and \
-                    self.blocks.num_free - 1 < self._oldest_worst():
+                    self.blocks.free_in(shard) - 1 < self._oldest_worst(shard):
                 return False
-            b = self.blocks.alloc()
+            b = self.blocks.alloc(shard)
             if b is None:
                 return False
             j = len(self._row_blocks[slot])
@@ -331,6 +458,11 @@ class TierSlotPool:
             "kv_arena_bytes": per_block * self.num_blocks,
             "kv_high_water_bytes": per_block * self.blocks.high_water,
             "kv_high_water_blocks": self.blocks.high_water,
+            # sharded pools: per-data-shard peaks (BENCH json records the
+            # shard balance the shard-aware allocator achieved)
+            "data_shards": self.data_shards,
+            "kv_high_water_blocks_by_shard":
+                list(self.blocks.high_water_by_shard),
             # what the one-page-per-request arena (PR 1) would allocate
             "dense_equiv_bytes": per_token * self.capacity * self.max_seq,
         }
@@ -350,15 +482,29 @@ def _prompt_len(part_cache, meta_tree) -> Optional[int]:
 class DenseTierSlotPool:
     """The PR 1 one-page-per-request arena (``[capacity, max_seq, ...]``
     rows): kept as the dense reference the paged pool is validated
-    against (``CascadeEngine(use_paged_kv=False)``)."""
+    against (``CascadeEngine(use_paged_kv=False)``).  ``mesh`` shards the
+    request rows over the data axes (no block accounting to shard)."""
 
-    def __init__(self, cfg, capacity: int, max_seq: int, dtype=jnp.float32):
+    def __init__(self, cfg, capacity: int, max_seq: int, dtype=jnp.float32,
+                 *, mesh=None):
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
         self.dtype = dtype
+        self.mesh = mesh
+        self.data_shards = data_axis_size(mesh)
+        if capacity % self.data_shards:
+            raise ValueError(
+                f"capacity {capacity} must divide into {self.data_shards} "
+                "data shards")
         self.cache = cache_lib.init_cache(cfg, capacity, max_seq, dtype)
         decl = cache_lib.declare_cache(cfg, capacity, max_seq, dtype)
+        if mesh is not None:
+            shardings = jax.tree.map(
+                lambda c: NamedSharding(
+                    mesh, cache_lib.cache_spec_leaf(c, mesh, shard_seq=False)),
+                decl, is_leaf=lambda x: isinstance(x, cache_lib.CP))
+            self.cache = jax.device_put(self.cache, shardings)
         self._bax = jax.tree.map(
             lambda c: c.axes.index("batch"), decl,
             is_leaf=lambda x: isinstance(x, cache_lib.CP))
@@ -390,5 +536,6 @@ class DenseTierSlotPool:
             "num_blocks": self.capacity,
             "kv_arena_bytes": total,
             "kv_high_water_bytes": total,
+            "data_shards": self.data_shards,
             "dense_equiv_bytes": total,
         }

@@ -1,0 +1,44 @@
+"""Repo-hygiene guard (scripts/check_tree.py): committed build artifacts
+must fail CI — the regression that let commit ca4bfbe ship three
+``__pycache__/*.pyc`` files."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+from check_tree import tracked_artifacts  # noqa: E402
+
+
+def test_artifact_patterns():
+    files = [
+        "src/repro/serving/engine.py",
+        "scripts/check_tree.py",
+        "docs/serving.md",
+        ".gitignore",
+    ]
+    bad = [
+        "scripts/__pycache__/check_docs.cpython-310.pyc",
+        "src/repro/kernels/__pycache__/prefill_attention.cpython-310.pyc",
+        "__pycache__/x.pyc",
+        "a/b/mod.pyc",
+        "pkg.egg-info/PKG-INFO",
+        ".pytest_cache/v/cache/lastfailed",
+        "tests/.hypothesis/examples/deadbeef",
+    ]
+    assert tracked_artifacts(files) == []
+    assert tracked_artifacts(bad) == bad
+    # prefix lookalikes are not artifacts
+    assert tracked_artifacts(["docs/pycache_notes.md", "src/epyc.py"]) == []
+
+
+def test_repo_tree_is_clean():
+    """The guard itself passes on this repo (and .gitignore exists, so
+    fresh *.pyc can't be committed by accident again)."""
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "check_tree.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 artifact(s)" in r.stdout
+    assert os.path.exists(os.path.join(REPO, ".gitignore"))

@@ -1,0 +1,354 @@
+"""Sharded multi-tier serving: shard-aware allocators (host-side units)
+and the multi-device parity suite.
+
+The parity tests run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+tests/test_dryrun_small.py pattern, so the main pytest process keeps its
+single real device) and assert that the engine on per-tier meshes —
+params placed per tier, request rows and the paged KV block pool sharded
+over each mesh's data axis — produces **bit-identical token streams and
+identical escalation decisions** to the single-device engine, for
+uniform and lognormal prompt lengths and for an over-subscribed sharded
+arena.  Confidences are compared to 1e-6: GSPMD partitioning may reorder
+float reductions by a few ulps, which greedy argmax and the fixed-δ gate
+absorb.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.serving.slots import BlockAllocator, SlotAllocator, TierSlotPool
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# -- shard-aware allocators (no devices needed) -----------------------------
+
+
+def test_slot_allocator_sharded_ranges():
+    a = SlotAllocator(8, shards=2)
+    assert a.shard_of(3) == 0 and a.shard_of(4) == 1
+    assert a.free_in(0) == a.free_in(1) == 4
+    # pinned alloc stays in the shard's contiguous range, ascending first
+    assert [a.alloc(1) for _ in range(4)] == [4, 5, 6, 7]
+    assert a.alloc(1) is None           # shard 1 exhausted
+    assert a.free_in(0) == 4            # shard 0 untouched
+    s = a.alloc(0)
+    assert s == 0
+    a.free(5)
+    assert a.free_in(1) == 1 and a.alloc(1) == 5   # LIFO within shard
+    # balanced alloc picks the shard with most free rows
+    assert a.shard_of(a.alloc(None)) == 0
+
+
+def test_slot_allocator_shard_divisibility():
+    with pytest.raises(ValueError):
+        SlotAllocator(6, shards=4)
+
+
+def test_slot_allocator_unsharded_matches_legacy():
+    a = SlotAllocator(4)
+    assert [a.alloc() for _ in range(4)] == [0, 1, 2, 3]
+    a.free(1)
+    a.free(2)
+    assert a.alloc() == 2               # LIFO free list, as before
+
+
+def test_block_allocator_sharded_null_block():
+    b = BlockAllocator(8, shards=2)
+    # shard 0 owns ids 0..3 but never hands out the null block 0
+    assert b.free_in(0) == 3 and b.free_in(1) == 4
+    got = [b.alloc(0) for _ in range(3)]
+    assert got == [1, 2, 3]
+    assert b.alloc(0) is None
+    assert b.shard_of(b.alloc(1)) == 1
+    assert b.high_water_by_shard == [3, 1]
+    b.free(2)
+    assert b.free_in(0) == 1
+    assert b.high_water_by_shard == [3, 1]      # high water sticks
+
+
+def test_block_allocator_unsharded_matches_legacy():
+    b = BlockAllocator(4)
+    assert [b.alloc() for _ in range(3)] == [1, 2, 3]
+    assert b.alloc() is None
+    assert b.high_water == 3 and b.high_water_by_shard == [3]
+
+
+def test_tier_slot_pool_sharded_accounting():
+    """Rows and blocks partition per shard; the oldest-first reserve is
+    enforced within a shard, not across shards."""
+    from repro.configs import get_config
+    cfg = get_config("gemma3-1b", "smoke")
+    # 4 rows / 2 shards, block_size 4, max_seq 16 -> 4 pages per row;
+    # 10 blocks round up to 10 (already even): shard 0 usable 4, shard 1: 5
+    pool = TierSlotPool(cfg, 4, 16, block_size=4, num_blocks=10,
+                        data_shards=2)
+    assert pool.data_shards == 2 and pool.num_blocks == 10
+    assert pool.shard_of(1) == 0 and pool.shard_of(2) == 1
+    # shard 1's blocks come from its own range [5, 10)
+    assert pool.can_admit(8, shard=1)
+    pool.bind(2, 8, row_tokens=16)      # slot 2 = shard 1, 2 blocks
+    assert all(pool.shard_of_block(b) == 1 for b in pool._row_blocks[2])
+    # shard 0 is independent: full demand there is still admissible
+    assert pool.can_admit(8, shard=0)
+    pool.bind(0, 8, row_tokens=16)
+    assert all(pool.shard_of_block(b) == 0 for b in pool._row_blocks[0])
+    # shard 1: second row must leave the oldest row's remaining demand
+    # (2 more blocks) free: 5 - 2 bound = 3 free, a 2-block prompt would
+    # leave only 1 -> denied; a 1-block prompt leaves 2 -> admitted
+    assert not pool.can_admit(8, shard=1)
+    assert pool.can_admit(4, shard=1)
+    # growth beyond the reserve stalls the younger row, never the oldest
+    pool.bind(3, 4, row_tokens=8)       # shard 1, youngest
+    assert pool.ensure_blocks(2, 11)    # oldest grows to page 2
+    assert not pool.ensure_blocks(3, 7)  # younger denied (reserve)
+    pool.release(2)
+    assert pool.ensure_blocks(3, 7)     # freed blocks return to shard 1
+
+
+def test_tier_slot_pool_rounds_blocks_to_shards():
+    from repro.configs import get_config
+    cfg = get_config("gemma3-1b", "smoke")
+    # capacity*ppr+1 = 4*4+1 = 17 rounds up to 18 over 2 shards
+    pool = TierSlotPool(cfg, 4, 16, block_size=4, data_shards=2)
+    assert pool.num_blocks == 18
+    stats = pool.memory_stats()
+    assert stats["data_shards"] == 2
+    assert stats["kv_high_water_blocks_by_shard"] == [0, 0]
+    with pytest.raises(ValueError):     # 3 rows cannot split 2 ways
+        TierSlotPool(cfg, 3, 16, block_size=4, data_shards=2)
+    with pytest.raises(ValueError):     # one request per shard must fit
+        TierSlotPool(cfg, 4, 16, block_size=4, num_blocks=6, data_shards=2)
+
+
+# -- host-sync coalescing (satellite: one device_get per tier per tick) -----
+
+
+def _one_tier_engine(**kw):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import CascadeEngine, TierSpec
+    from repro.serving.engine import VirtualClock
+    cfg = get_config("gemma3-1b", "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return CascadeEngine([TierSpec("t", cfg, params)], slots=4,
+                         prompt_len=32, gen_len=4, prefill_chunk=8,
+                         clock=VirtualClock(), **kw)
+
+
+def test_mixed_prefill_decode_tick_pays_one_sync():
+    """A tick advancing prefill chunks AND a fused decode step must cost
+    exactly one blocking host fetch for the tier (the prefill chunk's
+    first-token outputs are consumed by the decode launch on device)."""
+    eng = _one_tier_engine()
+    eng.warmup()
+    assert eng.host_syncs == 0          # warmup never blocks on results
+    long = np.arange(32, dtype=np.int32) % 7
+    short = np.arange(6, dtype=np.int32) % 5
+    eng.submit(long)
+    eng.step()                          # admit long, chunk 1: no finished
+    assert eng.host_syncs == 0          # nothing to emit -> fetch skipped
+    eng.submit(short)
+    eng.step()                          # short finishes prefill + decodes;
+    assert eng.host_syncs == 1          # long mid-prefill: ONE sync
+    before = eng.host_syncs
+    eng.step()                          # long still prefilling, short
+    assert eng.host_syncs == before + 1  # decoding: still one per tick
+    eng.run(max_steps=100)
+    assert all(len(r.tokens) == 4 for r in eng.requests)
+
+
+def test_gen_len_one_emits_exactly_one_token():
+    """The coalesced tick must not decode a row whose pending prefill
+    first-token emit already completes it: gen_len=1 requests end with
+    exactly one token, bit-identical to the uniform one-shot oracle."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import CascadeEngine, TierSpec
+    from repro.serving.engine import VirtualClock
+    cfg = get_config("gemma3-1b", "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = [(np.arange(16) * (i + 3) % 11).astype(np.int32)
+               for i in range(3)]
+
+    def run(chunked):
+        eng = CascadeEngine(
+            [TierSpec("t", cfg, params)], slots=4, prompt_len=16,
+            gen_len=1, prefill_chunk=8, use_chunked_prefill=chunked,
+            clock=VirtualClock())
+        eng.warmup()
+        for p in prompts:
+            eng.submit(p)
+        eng.run(max_steps=100)
+        return [r.tokens for r in eng.requests]
+
+    chunked, uniform = run(True), run(False)
+    assert all(len(t) == 1 for t in chunked), chunked
+    assert chunked == uniform
+
+
+def test_tick_sync_count_does_not_regress():
+    """Regression bound for the whole drain: the chunked engine must
+    average at most one host sync per tier per step."""
+    eng = _one_tier_engine()
+    eng.warmup()
+    for i in range(6):
+        eng.submit((np.arange(5 + 3 * i) % 11).astype(np.int32))
+    eng.run(max_steps=200)
+    assert eng.metrics.steps > 0
+    assert eng.host_syncs <= eng.metrics.steps
+
+
+# -- multi-device parity (subprocess, 8 simulated host devices) -------------
+
+
+def _run(code: str, timeout=540):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+_PARITY_PRELUDE = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import CascadeEngine, TierSpec
+    from repro.serving.engine import VirtualClock
+    from repro.launch.mesh import make_tier_meshes
+
+    assert jax.device_count() == 8, jax.device_count()
+    fast = get_config("gemma3-1b", "smoke")
+    exp = get_config("phi4-mini-3.8b", "smoke")
+    fp = init_params(fast, jax.random.PRNGKey(0), jnp.float32)
+    ep = init_params(exp, jax.random.PRNGKey(1), jnp.float32)
+    vocab = min(fast.vocab_size, exp.vocab_size)
+
+    def build(meshes, delta, **kw):
+        m = [None, None] if meshes is None else meshes
+        eng = CascadeEngine(
+            [TierSpec("fast", fast, fp, mesh=m[0]),
+             TierSpec("exp", exp, ep, mesh=m[1])],
+            deltas=[delta], clock=VirtualClock(), **kw)
+        eng.warmup()
+        return eng
+
+    def drain(eng, prompts):
+        for p in prompts:
+            eng.submit(np.asarray(p, np.int32), arrival_time=0.0)
+        eng.run(max_steps=3000)
+        return [(r.rid, tuple(r.tokens), r.tier,
+                 tuple(r.seq_conf_by_tier)) for r in eng.requests]
+
+    def check_parity(base, shard):
+        assert len(base) == len(shard)
+        for a, b in zip(base, shard):
+            assert a[0] == b[0]
+            assert a[1] == b[1], (a, b)         # bit-identical tokens
+            assert a[2] == b[2], (a, b)         # same escalation decisions
+            assert np.allclose(a[3], b[3], atol=1e-6)
+
+    def mid_delta(results):
+        # a fixed gate threshold splitting tier-0 confidences at the
+        # widest gap: maximally robust to ulp-level reduction reordering
+        confs = sorted(r[3][0] for r in results)
+        gaps = [(confs[i + 1] - confs[i], i) for i in range(len(confs) - 1)]
+        _, i = max(gaps)
+        return 0.5 * (confs[i] + confs[i + 1])
+"""
+
+
+def test_sharded_parity_uniform_and_lognormal():
+    """Per-tier data meshes (disjoint 4-device sets): token streams and
+    escalation decisions bit-match the single-device engine for uniform
+    and lognormal prompt lengths, with a δ chosen to split traffic."""
+    out = _run(_PARITY_PRELUDE + """
+    rng = np.random.default_rng(7)
+    PLEN, GLEN, N = 16, 4, 10
+    uniform = [rng.integers(0, vocab, PLEN) for _ in range(N)]
+    lens = np.clip(np.rint(rng.lognormal(np.log(PLEN / 4), 0.8, N)),
+                   1, PLEN).astype(int)
+    mixed = [rng.integers(0, vocab, L) for L in lens]
+    kw = dict(slots=8, prompt_len=PLEN, gen_len=GLEN, prefill_chunk=8)
+
+    # pass 1: learn a splitting delta on the single-device engine
+    probe = drain(build(None, 0.5, **kw), uniform)
+    delta = mid_delta(probe)
+
+    for prompts in (uniform, mixed):
+        meshes = make_tier_meshes([(4, 1), (4, 1)])
+        base = drain(build(None, delta, **kw), prompts)
+        shard = drain(build(meshes, delta, **kw), prompts)
+        check_parity(base, shard)
+        tiers = {r[2] for r in base}
+        assert tiers == {0, 1}, tiers   # delta really splits traffic
+    print("PARITY-OK")
+    """)
+    assert "PARITY-OK" in out
+
+
+def test_sharded_parity_oversubscribed_arena():
+    """Over-subscribed sharded KV arena: stalls and per-shard reserve
+    discipline may reorder work but never change tokens or escalation
+    decisions vs the single-device over-subscribed run."""
+    out = _run(_PARITY_PRELUDE + """
+    rng = np.random.default_rng(11)
+    PLEN, GLEN, N = 16, 4, 12
+    lens = np.clip(np.rint(rng.lognormal(np.log(PLEN / 4), 0.8, N)),
+                   1, PLEN).astype(int)
+    prompts = [rng.integers(0, vocab, L) for L in lens]
+    # max_seq 20, bs 4 -> 5 pages/row; 8 rows full = 41 blocks; 24
+    # over-subscribes (sharded: 6 per shard = one full request + null)
+    kw = dict(slots=8, prompt_len=PLEN, gen_len=GLEN, prefill_chunk=8,
+              kv_block_size=4, kv_blocks=24)
+    meshes = make_tier_meshes([(4, 1), (4, 1)])
+    base = drain(build(None, 0.5, **kw), prompts)
+    shard = drain(build(meshes, 0.5, **kw), prompts)
+    check_parity(base, shard)
+    print("PARITY-OK")
+    """)
+    assert "PARITY-OK" in out
+
+
+def test_sharded_engine_model_axis_and_memory_stats():
+    """A tier mesh with a 'model' axis (2x2: tensor-sharded params) runs
+    end to end; per-shard KV high-water marks land in memory_stats and
+    every request completes.  Model-axis float reductions reassociate, so
+    only stream plausibility — not bit-parity — is asserted."""
+    out = _run(_PARITY_PRELUDE + """
+    rng = np.random.default_rng(3)
+    PLEN, GLEN, N = 16, 4, 8
+    prompts = [rng.integers(0, vocab, PLEN) for _ in range(N)]
+    meshes = make_tier_meshes([(2, 2), (2, 2)])
+    eng = build(meshes, 0.5, slots=4, prompt_len=PLEN, gen_len=GLEN,
+                prefill_chunk=8)
+    res = drain(eng, prompts)
+    assert all(len(r[1]) == GLEN for r in res)
+    stats = eng.memory_stats()
+    for tier in stats:
+        assert tier["data_shards"] == 2
+        by_shard = tier["kv_high_water_blocks_by_shard"]
+        assert len(by_shard) == 2 and sum(by_shard) > 0
+        # per-shard maxima may peak at different ticks, so their sum
+        # bounds the global concurrent peak from above
+        assert sum(by_shard) >= tier["kv_high_water_blocks"]
+    topo = eng.mesh_topology()
+    assert [t["mesh"] for t in topo] == [{"data": 2, "model": 2}] * 2
+    assert topo[0]["device_ids"] == [0, 1, 2, 3]
+    assert topo[1]["device_ids"] == [4, 5, 6, 7]
+    print("MODEL-AXIS-OK")
+    """)
+    assert "MODEL-AXIS-OK" in out
