@@ -13,9 +13,9 @@ import traceback
 
 from benchmarks import (decode_attention, fig3_splitting, fig4_params,
                         fig5_histograms, roofline, serving_throughput,
-                        table1_models, table23_cascade, table4_three_element,
-                        table5_hard_task, table6_accuracy_effect,
-                        table7_llm_cascade)
+                        step_launches, table1_models, table23_cascade,
+                        table4_three_element, table5_hard_task,
+                        table6_accuracy_effect, table7_llm_cascade)
 
 ARTIFACTS = {
     "table1": table1_models.main,
@@ -30,6 +30,7 @@ ARTIFACTS = {
     "roofline": roofline.main,
     "serving": serving_throughput.main,
     "decode_attn": decode_attention.main,
+    "step_launches": step_launches.main,
 }
 
 

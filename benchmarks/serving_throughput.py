@@ -3,9 +3,15 @@ traffic, swept over offered load and prompt-length distribution.
 
 Emits one ``BENCH {json}`` line (and a json file) with throughput,
 latency percentiles, escalation rate, Eq 7 cascade-vs-always-expensive
-FLOPs per request, and — for the mixed-length workloads served by chunked
-paged prefill — the live-vs-processed prefill token ratio (the padding
-tax the chunked path removes) and per-prompt-length-bucket TTFT.
+FLOPs per request, per-tier **launches-per-tick and host_syncs** (the
+unified token-batch execution budget: one compiled program and one
+``device_get`` per active tier per tick), and — for the mixed-length
+workloads served by chunked paged prefill — the live-vs-processed
+prefill token ratio (the padding tax the chunked path removes) and
+per-prompt-length-bucket TTFT.  One sweep point is additionally re-run
+with ``--split-step`` and recorded as a unified-vs-split A/B pair
+(``step_ab`` in the artifact; ``benchmarks/step_launches.py`` is the
+dedicated A/B microbenchmark).
 
     PYTHONPATH=src python -m benchmarks.serving_throughput
 
@@ -64,21 +70,39 @@ def environment() -> dict:
     }
 
 
+def launch_stats(s: dict) -> dict:
+    """The launch-efficiency slice of a summary: compiled-program
+    dispatches and blocking device_gets, per tier, absolute and per
+    engine tick."""
+    return {
+        "unified_step": s.get("unified_step"),
+        "steps": s["steps"],
+        "launches": s["launches"],
+        "launches_per_tick": s["launches_per_tick"],
+        "host_syncs": s["host_syncs"],
+        "host_syncs_per_tick": s["host_syncs_per_tick"],
+    }
+
+
 def main() -> None:
     from repro.launch import serve_async
+
+    def base_argv(dist, rate):
+        argv = [
+            "--requests", str(REQUESTS), "--rate", str(rate),
+            "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
+            "--prompt-len", str(PROMPT_LEN),
+            "--length-dist", dist, "--prefill-chunk", str(CHUNK),
+        ]
+        if TIER_MESH:
+            argv += ["--tier-mesh"] + TIER_MESH.split(",")
+        return argv
 
     points = []
     for dist in DISTS:
         for rate in RATES:
-            argv = [
-                "--requests", str(REQUESTS), "--rate", str(rate),
-                "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
-                "--prompt-len", str(PROMPT_LEN),
-                "--length-dist", dist, "--prefill-chunk", str(CHUNK),
-            ]
-            if TIER_MESH:
-                argv += ["--tier-mesh"] + TIER_MESH.split(",")
-            args = serve_async.make_parser().parse_args(argv)
+            args = serve_async.make_parser().parse_args(
+                base_argv(dist, rate))
             t0 = time.time()
             s = serve_async.run(args)
             check_open_loop(s)
@@ -108,6 +132,7 @@ def main() -> None:
                 # mesh topology + per-shard KV high-water (kv_arena
                 # carries kv_high_water_blocks_by_shard per tier)
                 "tier_meshes": s["tier_meshes"],
+                "step_exec": launch_stats(s),
                 "kv_arena": s["kv_arena"],
                 "kv_high_water_bytes_total":
                     sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
@@ -124,6 +149,40 @@ def main() -> None:
                   f"esc {s['escalation_rates'][0]:.3f} "
                   f"(budget {s['escalation_budget']})", flush=True)
 
+    # unified-vs-split A/B at one representative point (mixed lengths,
+    # low rate): same workload, only the execution backend differs — the
+    # split path dispatches chunk_fn AND step_fn on mixed ticks, the
+    # unified path one mixed program, so launches/tick is the headline.
+    # The unified arm IS the sweep point already recorded above (same
+    # argv, deterministic workload), so only the split arm re-runs.
+    ab_dist = "lognormal" if "lognormal" in DISTS else DISTS[0]
+    uni_point = next(p for p in points
+                     if p["length_dist"] == ab_dist
+                     and p["rate"] == RATES[0])
+    step_ab = {"length_dist": ab_dist, "rate": RATES[0]}
+    step_ab["unified"] = dict(uni_point["step_exec"],
+                              throughput=uni_point["throughput"],
+                              latency_p50=uni_point["latency_p50"],
+                              ttft_p50=uni_point["ttft_p50"],
+                              wall_s=uni_point["wall_s"])
+    args = serve_async.make_parser().parse_args(
+        base_argv(ab_dist, RATES[0]) + ["--split-step"])
+    t0 = time.time()
+    s = serve_async.run(args)
+    check_open_loop(s)
+    step_ab["split"] = dict(launch_stats(s),
+                            throughput=s["throughput"],
+                            latency_p50=s["latency_p50"],
+                            ttft_p50=s["ttft_p50"],
+                            wall_s=time.time() - t0)
+    for mode in ("unified", "split"):
+        r = step_ab[mode]
+        print(f"step A/B [{mode}]: launches/tick "
+              f"{[round(x, 3) for x in r['launches_per_tick']]}, "
+              f"host-syncs/tick "
+              f"{[round(x, 3) for x in r['host_syncs_per_tick']]}, "
+              f"throughput {r['throughput']:.2f} req/s", flush=True)
+
     bench = {
         "bench": "serving_throughput",
         "slots": SLOTS,
@@ -133,6 +192,7 @@ def main() -> None:
         "tier_mesh": TIER_MESH or None,
         "env": environment(),
         "points": points,
+        "step_ab": step_ab,
         "flops_saving_vs_always_expensive": [
             1.0 - p["flops_per_request_cascade"]
             / p["flops_per_request_always_expensive"] for p in points],

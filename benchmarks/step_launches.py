@@ -1,0 +1,108 @@
+"""Launch-count A/B: unified token-batch execution vs the split
+chunk+decode path, on an identical mixed-length serving workload.
+
+The unified engine executes every tick as ONE compiled mixed
+prefill+decode program per tier (``kernels/mixed_attention.py`` behind
+``transformer.mixed_step``) with one blocking ``device_get``; the split
+escape hatch (``--split-step``) dispatches the legacy chunk_fn +
+step_fn pair — two launches on every mixed tick.  This benchmark runs
+both backends over the same deterministic workload (virtual clock, same
+seed/arrivals/lengths) and reports per-tier launches and host syncs,
+absolute and per tick, plus wall time — and asserts the two backends
+produced identical token counts (the parity suite asserts bit-identical
+streams; here we just guard the A/B comparison's apples-to-apples-ness).
+
+    PYTHONPATH=src python -m benchmarks.step_launches
+
+Emits one ``BENCH {json}`` line and writes
+``experiments/bench/step_launches.json``.  Scale knobs:
+REPRO_STEP_BENCH_{REQUESTS,SLOTS,GEN_LEN,PROMPT_LEN,CHUNK,RATE,DIST}.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+REQUESTS = int(os.environ.get("REPRO_STEP_BENCH_REQUESTS", "32"))
+SLOTS = int(os.environ.get("REPRO_STEP_BENCH_SLOTS", "8"))
+GEN_LEN = int(os.environ.get("REPRO_STEP_BENCH_GEN_LEN", "12"))
+PROMPT_LEN = int(os.environ.get("REPRO_STEP_BENCH_PROMPT_LEN", "64"))
+CHUNK = int(os.environ.get("REPRO_STEP_BENCH_CHUNK", "16"))
+RATE = float(os.environ.get("REPRO_STEP_BENCH_RATE", "8"))
+DIST = os.environ.get("REPRO_STEP_BENCH_DIST", "lognormal")
+OUT = os.environ.get("REPRO_STEP_BENCH_OUT",
+                     "experiments/bench/step_launches.json")
+
+
+def run_mode(split: bool) -> dict:
+    from repro.launch import serve_async
+    from repro.serving.engine import VirtualClock
+
+    argv = [
+        "--requests", str(REQUESTS), "--rate", str(RATE),
+        "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
+        "--prompt-len", str(PROMPT_LEN), "--prefill-chunk", str(CHUNK),
+        "--length-dist", DIST, "--virtual-clock",
+    ] + (["--split-step"] if split else [])
+    args = serve_async.make_parser().parse_args(argv)
+    t0 = time.time()
+    s = serve_async.run(args, VirtualClock())
+    return {
+        "unified_step": s["unified_step"],
+        "steps": s["steps"],
+        "completed": s["completed"],
+        "tokens": int(s["completed"]) * GEN_LEN,
+        "launches": s["launches"],
+        "launches_total": sum(s["launches"]),
+        "launches_per_tick": s["launches_per_tick"],
+        "host_syncs": s["host_syncs"],
+        "host_syncs_per_tick": s["host_syncs_per_tick"],
+        "tier_names": s["tier_names"],
+        "wall_s": time.time() - t0,
+    }
+
+
+def main() -> None:
+    import platform
+
+    import jax
+
+    unified = run_mode(split=False)
+    split = run_mode(split=True)
+    assert unified["unified_step"] and not split["unified_step"]
+    # same workload, same per-request decode lengths: completed-token
+    # counts must agree or the A/B compares different work
+    assert unified["tokens"] == split["tokens"], (unified, split)
+
+    for mode, r in (("unified", unified), ("split", split)):
+        print(f"{mode:8s} launches {r['launches']} "
+              f"({[round(x, 3) for x in r['launches_per_tick']]}/tick)  "
+              f"host-syncs {r['host_syncs']} over {r['steps']} ticks, "
+              f"{r['wall_s']:.1f}s wall", flush=True)
+
+    bench = {
+        "bench": "step_launches",
+        "requests": REQUESTS, "slots": SLOTS, "gen_len": GEN_LEN,
+        "max_prompt_len": PROMPT_LEN, "prefill_chunk": CHUNK,
+        "rate": RATE, "length_dist": DIST,
+        "env": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+        },
+        "unified": unified,
+        "split": split,
+        "launch_reduction": (
+            1.0 - unified["launches_total"] / split["launches_total"]
+            if split["launches_total"] else float("nan")),
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(bench, f, indent=2, default=float)
+    print("BENCH " + json.dumps(bench, default=float))
+
+
+if __name__ == "__main__":
+    main()

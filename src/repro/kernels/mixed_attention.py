@@ -1,0 +1,196 @@
+"""Unified mixed prefill+decode attention (Pallas TPU kernel).
+
+The serving engine's **unified token-batch** execution path: one program
+per tier per tick serves every live row, whatever it is doing.  Each
+batch row contributes a width-``C`` token slice of the tick's work —
+
+  * a **prefill** row's next prompt chunk (``q_len = C`` or the shorter
+    final-chunk tail),
+  * a **decode** row's single new token (``q_len = 1``),
+  * a **stalled / idle** row nothing at all (``q_len = 0``: skipped,
+    output zeroed).
+
+All rows share the block-paged KV pool layout of
+:mod:`repro.kernels.paged_attention` (``[num_blocks, block_size, KV,
+hd]``); row ``b``'s query ``i`` sits at absolute position
+``q_start[b] + i`` and causally attends every key at
+``t <= q_start[b] + i``, gathered through the row's page table.  With
+``q_len = 1`` this computes exactly the paged flash-decode step
+(``q_start`` is the row's decode position); with ``q_len = C`` it is the
+chunked paged prefill step — the kernel *generalizes*
+:mod:`repro.kernels.prefill_attention` and
+:mod:`repro.kernels.paged_attention` into the one program the engine
+launches per tick, instead of one of each.
+
+Grid = (rows, kv_heads, pages), page sweep innermost: the online-softmax
+accumulators (acc, m, l) live in VMEM scratch sized ``[C*G, ...]`` (chunk
+queries × GQA group flattened into the flash row dim) and persist across
+each (row, head)'s page sweep.  The page table and the per-row
+``q_start``/``q_len`` scalars are scalar-prefetched
+(:class:`pltpu.PrefetchScalarGridSpec`) so the KV block DMA of grid step
+``(b, k, j)`` gathers through ``page_table[b, j]`` in the BlockSpec index
+map.  Pages starting after the row's last live query
+(``j*bs > q_start + q_len - 1``), pages wholly behind the sliding window
+of the row's first query, and every page of a ``q_len == 0`` row are
+``pl.when``-skipped (no FLOPs).  int8 KV dequantizes in-kernel: per-token
+scales fold into the score matrix (k) and attention probs (v).
+
+Queries at ``i >= q_len[b]`` (the padded tail of a final chunk, or the
+``C-1`` padding slots of a decode row in a mixed-width batch) produce
+**unspecified** output — every key is masked, the softmax denominator
+clamps; callers read only position ``q_len - 1`` (the engine's
+next-token logits).
+
+``interpret=True`` runs the same body through the Pallas interpreter —
+the off-TPU path used by this container and the tests; the jnp oracle is
+:func:`repro.kernels.ref.mixed_attention_ref`.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _mixed_kernel(pt_ref, start_ref, qlen_ref, q_ref, k_ref, v_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, ks_ref, vs_ref,
+                  bs: int, C: int, G: int, scale: float, window,
+                  np_: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    start = start_ref[b]
+    qlen = qlen_ref[b]
+    last = start + qlen - 1                # abs position of last live query
+    live = (qlen > 0) & (j * bs <= last)
+    if window is not None:
+        # first query's window lower bound; later queries see more
+        live &= j * bs + bs - 1 > start - window
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(C * G, -1)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # [bs, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)         # [bs, hd]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if ks_ref is not None:
+            s = s * ks_ref[0, :, 0][None, :]           # fused k dequant
+        ci = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        pq = start + ci                                # abs query positions
+        t = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (t <= pq) & (ci < qlen)
+        if window is not None:
+            mask &= t > pq - window
+        s = jnp.where(mask, s, _NEG)
+
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+        corr = jnp.exp(m_old - m_new)
+        e = jnp.exp(s - m_new[:, None])
+        e = jnp.where(mask, e, 0.0)        # fully-masked rows: e would be 1
+        l_ref[...] = l_ref[...] * corr + jnp.sum(e, axis=1)
+        if vs_ref is not None:
+            e = e * vs_ref[0, :, 0][None, :]           # fused v dequant
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            e, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == np_ - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0] = (acc_ref[...] / denom).reshape(
+            C, G, o_ref.shape[-1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def mixed_attention(q, k_pages, v_pages, page_table, q_start, q_len,
+                    *, k_scale=None, v_scale=None, window=None,
+                    interpret: bool = False):
+    """One unified mixed prefill+decode step over a block-paged KV pool.
+
+    q           [B, C, KV, G, hd] token-batch queries (C slots per row)
+    k_pages     [N, bs, KV, hd]   shared KV block pool (f32/bf16 or int8)
+    v_pages     [N, bs, KV, hd]
+    page_table  [B, P] int32      block id of page j of row b (0 = null)
+    q_start     [B]    int32      absolute position of slot 0's query
+                                  (prefill: chunk start; decode: position)
+    q_len       [B]    int32      live queries this tick — C/tail for a
+                                  prefill chunk, 1 for a decode token,
+                                  0 for a stalled or idle row (skipped)
+    k_scale     [N, bs, KV] f32   per-token dequant scales (int8 pool)
+    v_scale     [N, bs, KV] f32
+    window      sliding-window size (None = full causal)
+
+    Every live query's own key must be scattered into the pool before
+    the call (query i attends keys up to and including ``q_start + i``).
+    Output positions ``i >= q_len[b]`` are unspecified; ``q_len == 0``
+    rows output zeros.  Returns [B, C, KV, G, hd] in q's dtype.
+    """
+    B, C, KV, G, hd = q.shape
+    bs = k_pages.shape[1]
+    P = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
+
+    def idx_q(b, k, j, pt, st, ql):
+        return (b, 0, k, 0, 0)
+
+    def idx_kv(b, k, j, pt, st, ql):
+        return (pt[b, j], 0, k, 0)
+
+    def idx_sc(b, k, j, pt, st, ql):
+        return (pt[b, j], 0, k)
+
+    in_specs = [
+        pl.BlockSpec((1, C, 1, G, hd), idx_q),
+        pl.BlockSpec((1, bs, 1, hd), idx_kv),
+        pl.BlockSpec((1, bs, 1, hd), idx_kv),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1), idx_sc),
+                     pl.BlockSpec((1, bs, 1), idx_sc)]
+        operands += [k_scale, v_scale]
+
+    kernel = functools.partial(
+        _mixed_kernel, bs=bs, C=C, G=G, scale=scale, window=window, np_=P)
+
+    def body(pt_ref, start_ref, qlen_ref, *rest):
+        if quant:
+            (q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+             acc_ref, m_ref, l_ref) = rest
+        else:
+            q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = rest
+            ks_ref = vs_ref = None
+        kernel(pt_ref, start_ref, qlen_ref, q_ref, k_ref, v_ref,
+               o_ref, acc_ref, m_ref, l_ref, ks_ref=ks_ref, vs_ref=vs_ref)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KV, P),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, C, 1, G, hd), idx_q),
+        scratch_shapes=[
+            pltpu.VMEM((C * G, hd), jnp.float32),   # acc
+            pltpu.VMEM((C * G,), jnp.float32),      # running max m
+            pltpu.VMEM((C * G,), jnp.float32),      # running Σexp l
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, q_start, q_len, *operands)

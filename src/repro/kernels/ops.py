@@ -12,6 +12,7 @@ import jax
 from repro.kernels.confidence_gate import confidence_gate as _gate
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.mixed_attention import mixed_attention as _mixed
 from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.prefill_attention import \
     paged_prefill_attention as _paged_prefill
@@ -49,6 +50,15 @@ def paged_prefill_attention(q, k_pages, v_pages, page_table, q_start, q_len,
                           k_scale=k_scale, v_scale=v_scale, window=window,
                           interpret=_default_interpret()
                           if interpret is None else interpret)
+
+
+def mixed_attention(q, k_pages, v_pages, page_table, q_start, q_len, *,
+                    k_scale=None, v_scale=None, window=None,
+                    interpret=None):
+    return _mixed(q, k_pages, v_pages, page_table, q_start, q_len,
+                  k_scale=k_scale, v_scale=v_scale, window=window,
+                  interpret=_default_interpret()
+                  if interpret is None else interpret)
 
 
 def rwkv6_scan(r, k, v, w, u, *, interpret=None):

@@ -12,99 +12,31 @@ prompt tokens 256..383 while another prefills tokens 0..6), which is what
 lets the engine batch a 7-token prompt next to a 900-token one with no
 cross-row padding beyond the last chunk.
 
-Grid = (rows, kv_heads, pages) with the page sweep innermost, exactly as
-in the paged decode kernel: the online-softmax accumulators (acc, m, l)
-live in VMEM scratch, now sized ``[C*G, ...]`` — the chunk's queries and
-GQA group heads flattened into one flash row dim.  The page table and the
-per-row ``q_start``/``q_len`` scalars are scalar-prefetched
-(:class:`pltpu.PrefetchScalarGridSpec`) so the KV block DMA of step
-``(b, k, j)`` gathers through ``page_table[b, j]`` in the BlockSpec index
-map.  Pages that start after the row's last valid query
-(``j*bs > q_start + q_len - 1``) are ``pl.when``-skipped, as are pages
-wholly behind the sliding window of the row's *first* query; rows with
-``q_len == 0`` (not prefilling this tick, or stalled on block
-exhaustion) skip every page and output zeros.
+The chunked-prefill contract is the prefill-only restriction of the
+**unified mixed prefill+decode** contract, so the single kernel body
+lives in :mod:`repro.kernels.mixed_attention` (grid
+``(rows, kv_heads, pages)``, scalar-prefetched page table +
+``q_start``/``q_len``, online-softmax accumulators ``[C*G, hd]`` in VMEM
+scratch, in-kernel int8 dequant and sliding windows — see that module
+and ``docs/kernels.md`` for the layout) and this wrapper delegates to
+it: a prefill chunk is just a row with ``q_len`` up to ``C``, exactly as
+a decode row is one with ``q_len = 1``.  Keeping the public name lets
+the engine's split path (``use_unified_step=False``) and the unified
+path share one compiled body — bit-identical by construction, never by
+maintenance.
 
 Queries at ``i >= q_len[b]`` (the padded tail of a row's final chunk)
-produce **unspecified** output — every key is masked, so the softmax
-denominator clamps; callers discard those positions (the engine reads
-logits only at ``q_len - 1``).  int8 KV dequantizes in-kernel: per-token
-scales fold into the score matrix (k) and attention probs (v).
-
-``interpret=True`` runs the same body through the Pallas interpreter —
-the off-TPU path used by this container and the tests; the jnp oracle is
-:func:`repro.kernels.ref.paged_prefill_attention_ref`.
+produce **unspecified** output; rows with ``q_len == 0`` (not prefilling
+this tick, or stalled on block exhaustion) skip every page and output
+zeros.  ``interpret=True`` runs the kernel body through the Pallas
+interpreter — the off-TPU path used by this container and the tests; the
+jnp oracle is :func:`repro.kernels.ref.paged_prefill_attention_ref`.
 """
 from __future__ import annotations
 
-import functools
-import math
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-_NEG = -1e30
+from repro.kernels.mixed_attention import mixed_attention
 
 
-def _prefill_kernel(pt_ref, start_ref, qlen_ref, q_ref, k_ref, v_ref,
-                    o_ref, acc_ref, m_ref, l_ref, *, ks_ref, vs_ref,
-                    bs: int, C: int, G: int, scale: float, window,
-                    np_: int):
-    b = pl.program_id(0)
-    j = pl.program_id(2)
-
-    @pl.when(j == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, _NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-
-    start = start_ref[b]
-    qlen = qlen_ref[b]
-    last = start + qlen - 1                # abs position of last live query
-    live = (qlen > 0) & (j * bs <= last)
-    if window is not None:
-        # first query's window lower bound; later queries see more
-        live &= j * bs + bs - 1 > start - window
-
-    @pl.when(live)
-    def _accumulate():
-        q = q_ref[0, :, 0].astype(jnp.float32).reshape(C * G, -1)
-        k = k_ref[0, :, 0].astype(jnp.float32)         # [bs, hd]
-        v = v_ref[0, :, 0].astype(jnp.float32)         # [bs, hd]
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        if ks_ref is not None:
-            s = s * ks_ref[0, :, 0][None, :]           # fused k dequant
-        ci = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
-        pq = start + ci                                # abs query positions
-        t = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = (t <= pq) & (ci < qlen)
-        if window is not None:
-            mask &= t > pq - window
-        s = jnp.where(mask, s, _NEG)
-
-        m_old = m_ref[...]
-        m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
-        corr = jnp.exp(m_old - m_new)
-        e = jnp.exp(s - m_new[:, None])
-        e = jnp.where(mask, e, 0.0)        # fully-masked rows: e would be 1
-        l_ref[...] = l_ref[...] * corr + jnp.sum(e, axis=1)
-        if vs_ref is not None:
-            e = e * vs_ref[0, :, 0][None, :]           # fused v dequant
-        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
-            e, v, preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
-
-    @pl.when(j == np_ - 1)
-    def _finish():
-        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
-        o_ref[0, :, 0] = (acc_ref[...] / denom).reshape(
-            C, G, o_ref.shape[-1]).astype(o_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_prefill_attention(q, k_pages, v_pages, page_table, q_start, q_len,
                             *, k_scale=None, v_scale=None, window=None,
                             interpret: bool = False):
@@ -123,61 +55,10 @@ def paged_prefill_attention(q, k_pages, v_pages, page_table, q_start, q_len,
     The chunk's own keys must be scattered into the pool before the call
     (query i attends keys up to and including its own position).  Output
     positions ``i >= q_len[b]`` are unspecified.  Returns
-    [B, C, KV, G, hd] in q's dtype.
+    [B, C, KV, G, hd] in q's dtype.  Delegates to
+    :func:`repro.kernels.mixed_attention.mixed_attention` (the
+    generalized kernel this contract restricts).
     """
-    B, C, KV, G, hd = q.shape
-    bs = k_pages.shape[1]
-    P = page_table.shape[1]
-    scale = 1.0 / math.sqrt(hd)
-    quant = k_scale is not None
-
-    def idx_q(b, k, j, pt, st, ql):
-        return (b, 0, k, 0, 0)
-
-    def idx_kv(b, k, j, pt, st, ql):
-        return (pt[b, j], 0, k, 0)
-
-    def idx_sc(b, k, j, pt, st, ql):
-        return (pt[b, j], 0, k)
-
-    in_specs = [
-        pl.BlockSpec((1, C, 1, G, hd), idx_q),
-        pl.BlockSpec((1, bs, 1, hd), idx_kv),
-        pl.BlockSpec((1, bs, 1, hd), idx_kv),
-    ]
-    operands = [q, k_pages, v_pages]
-    if quant:
-        in_specs += [pl.BlockSpec((1, bs, 1), idx_sc),
-                     pl.BlockSpec((1, bs, 1), idx_sc)]
-        operands += [k_scale, v_scale]
-
-    kernel = functools.partial(
-        _prefill_kernel, bs=bs, C=C, G=G, scale=scale, window=window, np_=P)
-
-    def body(pt_ref, start_ref, qlen_ref, *rest):
-        if quant:
-            (q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
-             acc_ref, m_ref, l_ref) = rest
-        else:
-            q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = rest
-            ks_ref = vs_ref = None
-        kernel(pt_ref, start_ref, qlen_ref, q_ref, k_ref, v_ref,
-               o_ref, acc_ref, m_ref, l_ref, ks_ref=ks_ref, vs_ref=vs_ref)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(B, KV, P),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, C, 1, G, hd), idx_q),
-        scratch_shapes=[
-            pltpu.VMEM((C * G, hd), jnp.float32),   # acc
-            pltpu.VMEM((C * G,), jnp.float32),      # running max m
-            pltpu.VMEM((C * G,), jnp.float32),      # running Σexp l
-        ],
-    )
-    return pl.pallas_call(
-        body,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, C, KV, G, hd), q.dtype),
-        interpret=interpret,
-    )(page_table, q_start, q_len, *operands)
+    return mixed_attention(q, k_pages, v_pages, page_table, q_start, q_len,
+                           k_scale=k_scale, v_scale=v_scale, window=window,
+                           interpret=interpret)

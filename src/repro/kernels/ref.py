@@ -118,6 +118,26 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, page_table, q_start,
     return jnp.where(valid, out, 0.0).astype(q.dtype)
 
 
+def mixed_attention_ref(q, k_pages, v_pages, page_table, q_start, q_len, *,
+                        k_scale=None, v_scale=None, window=None):
+    """Gather-then-attend oracle for the unified mixed prefill+decode
+    kernel (``kernels/mixed_attention.py``).
+
+    One token batch serves every live row: row b's ``q_len[b]`` live
+    queries start at absolute position ``q_start[b]`` — a prefill chunk
+    (``q_len = C`` or the final-chunk tail), a single decode token
+    (``q_len = 1`` at the row's decode position), or nothing at all
+    (``q_len = 0``, output zeroed).  The causal-over-pages math is the
+    chunked-prefill contract with decode as its width-1 special case, so
+    the oracle delegates to :func:`paged_prefill_attention_ref` (a
+    ``q_len = 1`` row there *is* a paged decode step — pinned against
+    :func:`paged_attention_ref` in the tests).
+    """
+    return paged_prefill_attention_ref(
+        q, k_pages, v_pages, page_table, q_start, q_len,
+        k_scale=k_scale, v_scale=v_scale, window=window)
+
+
 def rwkv6_scan_ref(r, k, v, w, u):
     """All inputs [B,H,T,hd] except u [H,hd].  Returns y [B,H,T,hd].
 

@@ -10,9 +10,12 @@ Real traffic has mixed prompt lengths: ``--length-dist
 {uniform,lognormal,bimodal}`` samples a per-request length in
 ``[--min-prompt-len, --prompt-len]`` and the engine's chunked paged
 prefill (``--prefill-chunk`` tokens per row per tick, admission capped at
-``--prefill-token-budget`` prompt tokens per tier per tick) serves them
-with no cross-row padding beyond each row's last chunk.  ``--dense-kv``
-or ``--no-chunked-prefill`` fall back to the uniform packed prefill
+``--prefill-token-budget`` tokens per tier per tick) serves them with no
+cross-row padding beyond each row's last chunk.  Each tick runs as ONE
+unified mixed prefill+decode program per tier (``--split-step`` keeps
+the legacy two-launch chunk+decode pair as the A/B baseline; the summary
+reports realized launches/tick either way).  ``--dense-kv`` or
+``--no-chunked-prefill`` fall back to the uniform packed prefill
 (uniform lengths only).
 
 The gate threshold is set from an escalation *budget* by default
@@ -96,6 +99,8 @@ def build_engine(args, clock=None):
                                       or args.dense_kv) else None,
         prefill_chunk=args.prefill_chunk,
         prefill_token_budget=args.prefill_token_budget,
+        use_unified_step=False if getattr(args, "split_step", False)
+        else None,
         clock=clock if clock is not None else WallClock(), **gate_kw)
     return engine, min(fast_cfg.vocab_size, exp_cfg.vocab_size)
 
@@ -167,6 +172,7 @@ def run(args, clock=None) -> dict:
     summary["prefill_chunk"] = (engine.prefill_chunk
                                 if engine.chunked_prefill else None)
     summary["chunked_prefill"] = engine.chunked_prefill
+    summary["unified_step"] = engine.unified_step
     summary["escalation_budget"] = (None if args.delta is not None
                                     else args.escalation_budget)
     summary["delta"] = [engine.scheduler.delta(g)
@@ -203,6 +209,16 @@ def report(s: dict) -> None:
           f"tier utilization "
           + "  ".join(f"{n}={u:.2f}" for n, u in
                       zip(s['tier_names'], s['tier_utilization'])))
+    # realized launch efficiency: compiled-program dispatches and
+    # blocking device_gets per engine tick, per tier (the unified
+    # token-batch path's budget is one of each per active tier per tick)
+    mode = "unified" if s.get("unified_step") else "split"
+    print(f"  launches/tick [{mode}] "
+          + "  ".join(f"{n}={l:.2f}" for n, l in
+                      zip(s["tier_names"], s["launches_per_tick"]))
+          + "   host-syncs/tick "
+          + "  ".join(f"{n}={h:.2f}" for n, h in
+                      zip(s["tier_names"], s["host_syncs_per_tick"])))
     rates = ", ".join(f"{r:.3f}" for r in s["escalation_rates"])
     deltas = ", ".join(f"{d:.4f}" for d in s["delta"])
     target = ("" if s.get("escalation_budget") is None
@@ -244,6 +260,11 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-chunked-prefill", action="store_true",
                     help="uniform one-shot packed prefill (the chunked "
                          "path's bit-exactness oracle)")
+    ap.add_argument("--split-step", action="store_true",
+                    help="legacy split chunk+decode launches instead of "
+                         "the unified mixed token-batch program (the "
+                         "launch-count A/B escape hatch; default: unified "
+                         "on paged attention-only tiers)")
     ap.add_argument("--delta", type=float, default=None,
                     help="fixed gate threshold (overrides the budget)")
     ap.add_argument("--escalation-budget", type=float, default=0.25,

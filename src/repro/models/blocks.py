@@ -4,17 +4,21 @@ Every mixer has the signature::
 
     y, new_cache, = mixer(p, cfg, spec, x, cache, pos, mode, pages=None)
 
-with ``mode in {'train', 'prefill', 'prefill_chunk', 'decode'}``.  In
-train mode caches are ignored (``None`` in / ``None`` out); prefill
-returns a populated cache; decode consumes ``x`` of seq-len 1 and a
-cache, and returns the updated cache.  ``pos`` is ``[B, S]`` int32
-absolute positions (decode: ``[B, 1]``).  ``pages`` switches attention to
-the block-paged KV layout: ``{"page_table": [B, P] int32}`` over a cache
-from ``repro.models.cache.init_paged_cache`` (decode), plus
-``"q_len": [B] int32`` live-token counts in prefill_chunk mode — the
-serving engine's mixed-length path where each row advances one fixed-size
-chunk of its prompt per call (attention only; recurrent mixers raise,
-their state cannot be replayed chunk-wise).
+with ``mode in {'train', 'prefill', 'prefill_chunk', 'mixed_step',
+'decode'}``.  In train mode caches are ignored (``None`` in / ``None``
+out); prefill returns a populated cache; decode consumes ``x`` of
+seq-len 1 and a cache, and returns the updated cache.  ``pos`` is
+``[B, S]`` int32 absolute positions (decode: ``[B, 1]``).  ``pages``
+switches attention to the block-paged KV layout:
+``{"page_table": [B, P] int32}`` over a cache from
+``repro.models.cache.init_paged_cache`` (decode), plus
+``"q_len": [B] int32`` live-token counts in prefill_chunk and
+mixed_step modes — the serving engine's mixed-length paths.  In
+prefill_chunk each live row advances one fixed-size chunk of its prompt
+per call; mixed_step is the unified token-batch step where decode rows
+additionally ride in the same batch with ``q_len == 1`` (attention
+only; recurrent mixers raise, their state cannot be replayed
+chunk-wise).
 
 Every ffn has the signature ``y, aux = ffn(p, cfg, spec, x, cache, mode)``
 where ``aux`` is a dict of auxiliary scalars (MoE load-balance / router
@@ -161,20 +165,29 @@ def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
     q = qr.reshape(B, S, KV, G, hd)
     k = kr
 
-    if mode == "prefill_chunk":
-        # Chunked paged prefill: the chunk's C tokens (row b's absolute
-        # positions pos[b]) are scattered straight into the block pool
-        # through the page tables, then a causal flash over the chunk's
-        # queries attends each row's already-written KV blocks
-        # (kernels/prefill_attention).  Rows not prefilling this tick
-        # carry q_len == 0: their writes are redirected to the reserved
-        # null block 0 and their outputs are discarded by the engine, so
-        # one fixed-shape program serves any mix of per-row chunk starts
-        # and tail lengths.
+    if mode in ("prefill_chunk", "mixed_step"):
+        # Paged token-batch step: row b's S token slots (absolute
+        # positions pos[b], q_len[b] of them live) are scattered straight
+        # into the block pool through the page tables, then a causal
+        # flash over the live queries attends each row's already-written
+        # KV blocks.  In ``prefill_chunk`` mode (the legacy split path)
+        # every live row is a prefill chunk and the program is
+        # kernels/prefill_attention; in ``mixed_step`` mode (unified
+        # token-batch execution) decode rows ride in the same batch with
+        # q_len == 1 — their single token is the new decode token, so the
+        # scatter is simultaneously the prefill-chunk KV write and the
+        # decode token's KV write — and the program is the generalized
+        # kernels/mixed_attention.  Rows with q_len == 0 (stalled or
+        # idle this tick) have their writes redirected to the reserved
+        # null block 0 and their outputs discarded by the engine, so one
+        # fixed-shape program serves any mix of per-row kinds, chunk
+        # starts, and tail lengths.
         if pages is None:
-            raise ValueError("prefill_chunk requires pages={'page_table', "
-                             "'q_len'} over a block-paged cache")
+            raise ValueError(f"{mode} requires pages={{'page_table', "
+                             "'q_len'}} over a block-paged cache")
         from repro.kernels import ops as kernel_ops
+        attn_kernel = (kernel_ops.mixed_attention if mode == "mixed_step"
+                       else kernel_ops.paged_prefill_attention)
         pt = pages["page_table"]                        # [B, P] int32
         q_len = pages["q_len"]                          # [B] int32
         bs = cache["k"].shape[1]
@@ -198,14 +211,14 @@ def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
             cks = cache["k_scale"].at[blk, off].set(ksc)
             cvs = cache["v_scale"].at[blk, off].set(vsc)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
-            out = kernel_ops.paged_prefill_attention(
+            out = attn_kernel(
                 q, ck, cv, pt, q_start, q_len, k_scale=cks, v_scale=cvs,
                 window=spec.window)
         else:
             ck = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
             cv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
             new_cache = {"k": ck, "v": cv}
-            out = kernel_ops.paged_prefill_attention(
+            out = attn_kernel(
                 q, ck, cv, pt, q_start, q_len, window=spec.window)
         y = out.astype(x.dtype).reshape(B, S, H * hd) @ p["wo"]
         return y, new_cache
@@ -360,10 +373,11 @@ def _causal_conv(x, w, b, cache, mode):
 
 
 def mamba(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
-    if mode == "prefill_chunk":
+    if mode in ("prefill_chunk", "mixed_step"):
         raise NotImplementedError(
-            "chunked prefill carries no recurrent state across chunks; "
-            "mamba layers require the dense uniform prefill path")
+            "chunked/unified token-batch steps carry no recurrent state "
+            "across chunks; mamba layers require the dense uniform "
+            "prefill path")
     B, S, D = x.shape
     d_in = spec.expand * cfg.d_model
     n = spec.d_state
@@ -429,10 +443,11 @@ def _token_shift(x, x_prev, mode):
 
 
 def rwkv6(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
-    if mode == "prefill_chunk":
+    if mode in ("prefill_chunk", "mixed_step"):
         raise NotImplementedError(
-            "chunked prefill carries no recurrent state across chunks; "
-            "rwkv6 layers require the dense uniform prefill path")
+            "chunked/unified token-batch steps carry no recurrent state "
+            "across chunks; rwkv6 layers require the dense uniform "
+            "prefill path")
     B, S, D = x.shape
     hd = spec.head_dim
     H = D // hd
@@ -501,10 +516,11 @@ def _zero_aux():
 
 def dense_ffn(p, cfg: ModelConfig, spec, x, cache, mode):
     if spec.act == "rwkv_cmix":
-        if mode == "prefill_chunk":
+        if mode in ("prefill_chunk", "mixed_step"):
             raise NotImplementedError(
-                "chunked prefill carries no token-shift state across "
-                "chunks; rwkv_cmix ffns require the dense prefill path")
+                "chunked/unified token-batch steps carry no token-shift "
+                "state across chunks; rwkv_cmix ffns require the dense "
+                "prefill path")
         x_prev = cache["x_prev"] if cache is not None else None
         xs = _token_shift(x, x_prev, mode)
         xk = x + (xs - x) * p["mix_k"]
@@ -604,7 +620,7 @@ def apply_layer(p, cfg: ModelConfig, layer, x, cache, pos, mode, pages=None):
     x = x + y
 
     new_cache = None
-    if mode in ("decode", "prefill", "prefill_chunk"):
+    if mode in ("decode", "prefill", "prefill_chunk", "mixed_step"):
         new_cache = {"mixer": new_mix if new_mix is not None else {},
                      "ffn": new_ffn if new_ffn is not None else {}}
     return x, new_cache, aux

@@ -100,10 +100,11 @@ def _logits(params, cfg: ModelConfig, x):
 def _embed(params, cfg: ModelConfig, batch, mode):
     tokens = batch["tokens"]
     x = params["embed"][tokens]  # gather; vocab-sharded -> GSPMD collective
-    if cfg.frontend and mode == "prefill_chunk":
+    if cfg.frontend and mode in ("prefill_chunk", "mixed_step"):
         raise NotImplementedError(
-            "chunked prefill does not inject modality frontend embeddings; "
-            "frontend models require the dense uniform prefill path")
+            "chunked/unified token-batch steps do not inject modality "
+            "frontend embeddings; frontend models require the dense "
+            "uniform prefill path")
     if cfg.frontend and mode != "decode":
         # sanctioned modality stub: precomputed frame/patch embeddings are
         # projected into d_model and replace the first frontend_len slots.
@@ -129,18 +130,18 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
 
     batch: {"tokens": [B,S] int32, optional "frontend_embeds": [B,fl,fd]}
     pos:   [B,S] absolute positions (defaults to arange for train/prefill;
-           required for decode and prefill_chunk).
+           required for decode, prefill_chunk, and mixed_step).
     pages: ``{"page_table": [B, P] int32}`` selects the block-paged KV
-           layout (cache from ``init_paged_cache``); decode and
-           prefill_chunk.  prefill_chunk additionally needs
-           ``"q_len": [B] int32`` (live tokens per row this chunk) and
-           per-row chunk positions in ``pos`` — see
+           layout (cache from ``init_paged_cache``); decode,
+           prefill_chunk, and mixed_step.  prefill_chunk/mixed_step
+           additionally need ``"q_len": [B] int32`` (live tokens per row
+           this step) and per-row positions in ``pos`` — see
            :func:`repro.models.blocks.attention`.
     """
     x = _embed(params, cfg, batch, mode)
     B, S = batch["tokens"].shape
     if pos is None:
-        if mode in ("decode", "prefill_chunk"):
+        if mode in ("decode", "prefill_chunk", "mixed_step"):
             raise ValueError(f"{mode} requires pos")
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
 
@@ -159,7 +160,7 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
     if cfg.num_periods:
         c = cache.get("period") if cache else None
         collect = bool(cfg.early_exit_periods) and mode not in (
-            "decode", "prefill_chunk")
+            "decode", "prefill_chunk", "mixed_step")
         x, nc, aux, exits = _apply_periods(params, cfg, x, c, pos, mode, aux,
                                            collect_exits=collect, pages=pages)
         if nc is not None:
@@ -211,6 +212,32 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, pos, pages):
                                    mode="prefill_chunk", cache=cache,
                                    pos=pos, pages=pages)
     return logits, new_cache
+
+
+def mixed_step(params, cfg: ModelConfig, tokens, cache, pos, pages):
+    """One unified mixed prefill+decode token-batch step.
+
+    tokens [B,C] int32 — row b's token slots for this tick: its next
+    prefill chunk, its single decode token in slot 0, or padding (rows
+    stalled/idle this tick); ``pages['q_len'][b]`` live slots each.
+    pos [B,C] per-row absolute positions (slot 0 = chunk start / decode
+    position); pages {"page_table": [B,P], "q_len": [B]} over a
+    block-paged cache.  Scatters every live slot's KV — prefill-chunk
+    writes and the decode token's write — through the page tables in one
+    program (:func:`repro.models.blocks.attention` mode="mixed_step",
+    attention via ``kernels/mixed_attention.py``) and returns
+    (last_logits [B,V], new_cache): each row's logits at its last live
+    position ``q_len - 1`` — the next-token logits the engine's
+    confidence gate consumes (a final prefill chunk's first generated
+    token, or a decode row's next token).  ``q_len == 0`` rows return
+    unspecified logits; the engine discards them.
+    """
+    logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
+                                   mode="mixed_step", cache=cache,
+                                   pos=pos, pages=pages)
+    rows = jnp.arange(logits.shape[0])
+    last = jnp.maximum(pages["q_len"] - 1, 0)
+    return logits[rows, last], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, pages=None):

@@ -8,33 +8,42 @@ One engine step (tick) per tier:
      attention-only tiers) prompts of *any* length up to
      ``max_prompt_len`` are accepted; admission is bounded by a prompt
      **token budget** per tick and by free KV blocks for the first chunk.
-  2. **prefill** — each admitted row advances one fixed-size chunk of its
-     prompt per tick, written straight into the paged KV block pool
-     through its page table and attended with the Pallas chunked paged
-     prefill kernel (:mod:`repro.kernels.prefill_attention`): a 7-token
-     prompt batches next to a 900-token one with no cross-row padding
-     beyond the last chunk.  A row's first token (argmax at its final
-     prompt position) is emitted when its last chunk completes.  The
-     legacy path (``use_chunked_prefill=False``) packs uniform-length
-     prompts densely, prefills in one shot, and scatters the caches —
-     kept as the bit-exactness oracle and for recurrent-state models.
-  3. **decode** — one fused decode step over the whole slot pool (fixed
-     shape => a single compiled program per tier), attending through the
-     block-paged KV arena with the Pallas paged flash-decode kernel
-     (:mod:`repro.kernels.paged_attention`; page tables grow lazily as
-     rows cross block boundaries).  Per-token confidence comes from the
-     Pallas :func:`repro.kernels.ops.confidence_gate` (max-softmax-prob,
-     the paper's conf) or a jnp fallback.
+  2. **plan** — a :class:`StepPlan` is built on the host: every live row
+     is assigned its tick's work — the next fixed-size chunk of its
+     prompt (``q_len = chunk`` or the shorter final tail), its single
+     decode token (``q_len = 1``), or a stall (``q_len = 0``, block
+     exhaustion) — into one flat ``[capacity, width]`` token batch.
+  3. **execute** — **unified token-batch execution** (the default on
+     block-paged attention-only tiers): the whole plan runs as ONE
+     compiled mixed-attention program per tier per tick
+     (``transformer.mixed_step`` over
+     :mod:`repro.kernels.mixed_attention`), scattering prefill-chunk KV
+     and decode-token KV through the page tables in the same program
+     and emitting each row's last-position token + confidence through a
+     single blocking ``device_get`` (``CascadeEngine.host_syncs``;
+     test-asserted).  Per-token confidence comes from the Pallas
+     :func:`repro.kernels.ops.confidence_gate` (max-softmax-prob, the
+     paper's conf) or a jnp fallback.  A row's first token (argmax at
+     its final prompt position) is emitted when its last chunk
+     completes; it starts decoding next tick.  The **split** backend
+     (``use_unified_step=False``, and always for dense-arena or
+     recurrent-state tiers) executes the same plan as the legacy
+     chunk_fn + step_fn pair — two launches on mixed ticks, first
+     tokens flowing into the same-tick decode via a device-side
+     ``where`` — with token streams bit-identical to unified.  The
+     fully legacy path (``use_chunked_prefill=False``) packs
+     uniform-length prompts densely, prefills in one shot, and scatters
+     the caches — kept as the bit-exactness oracle and for
+     recurrent-state models.
   4. **gate** — requests that hit ``gen_len`` aggregate their token
      confidences; at non-final tiers the scheduler's gate (fixed δ or
      escalation budget) decides DONE vs ESCALATED.  Escalated requests
      join the next tier's queue and are re-decoded there from scratch.
 
-Steps 2 and 3 are *launched* back to back and fetched together: a row
-whose final prefill chunk completes decodes in the same tick, its first
-token flowing into the decode input on device, so a mixed
-prefill+decode tick pays exactly one blocking host sync per tier
-(``CascadeEngine.host_syncs`` counts them; test-asserted).
+Admission and the tick's compute share **one token currency** under
+unified execution: the per-tick token budget is pre-charged with the
+carried load (decode tokens + in-flight prefill chunks) and a new
+request bills only its first chunk — see :meth:`CascadeEngine._admit`.
 
 **Sharded serving**: a tier whose :class:`TierSpec` carries a mesh runs
 params, KV arena, and per-tick batches sharded across it — request rows
@@ -139,6 +148,51 @@ class VirtualClock:
         self.t += self.dt
 
 
+# per-row kinds in a StepPlan
+KIND_IDLE, KIND_PREFILL, KIND_DECODE, KIND_STALL = 0, 1, 2, 3
+
+
+@dataclass
+class StepPlan:
+    """One tier's tick, planned on the host before anything launches.
+
+    Pure host-side data: per-row kind (idle / prefill chunk / decode
+    token / stalled on block exhaustion), the packed token batch, per-slot
+    absolute positions, live-query counts, and the data shard owning each
+    row.  Built by :meth:`CascadeEngine._build_plan` from scheduler and
+    slot-pool state, then executed by one of two backends behind the same
+    interface:
+
+    * **unified** (default on paged attention-only tiers): one
+      :meth:`_TierRuntime.run_mixed` launch consumes
+      ``tokens``/``pos``/``q_len`` verbatim — every live row's work in a
+      single compiled program per tick.
+    * **split** (``use_unified_step=False`` escape hatch; the only option
+      for dense-arena and recurrent-state tiers): the legacy
+      ``chunk_fn`` + ``step_fn`` pair, two launches on mixed ticks.
+
+    The executors consume ``tokens``/``pos``/``q_len`` and the three row
+    lists; ``kind`` and ``shard`` are the plan's per-row record of the
+    same decisions (introspection: tests and debugging read them, the
+    launch does not — a stall is equally expressed by exclusion from
+    ``prefill_rows``/``decode_rows``).
+    """
+    width: int                  # token slots per row (chunk; 1 decode-only)
+    kind: np.ndarray            # [capacity] int8 KIND_*
+    tokens: np.ndarray          # [capacity, width] int32
+    pos: np.ndarray             # [capacity, width] int32 abs positions
+    q_len: np.ndarray           # [capacity] int32 live tokens per row
+    shard: np.ndarray           # [capacity] int32 data shard of each row
+    prefill_rows: List[int]     # live prefill rows (q_len > 0)
+    decode_rows: List[int]      # decode rows (unified: stalls excluded)
+    finishing: List[int]        # prefill rows whose last chunk completes
+
+    @property
+    def live_prefill_tokens(self) -> int:
+        return int(self.q_len[self.prefill_rows].sum()) \
+            if self.prefill_rows else 0
+
+
 class _TierRuntime:
     """Per-tier compiled functions + host-side slot state.
 
@@ -157,12 +211,14 @@ class _TierRuntime:
                  use_paged_kv: bool = True, block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  use_chunked_prefill: bool = False,
-                 prefill_chunk: int = 128):
+                 prefill_chunk: int = 128,
+                 use_unified_step: bool = False):
         self.spec = spec
         self.capacity = capacity
         self.prompt_len = prompt_len          # max prompt length (tokens)
         self.paged = use_paged_kv
         self.chunked = use_chunked_prefill
+        self.unified = use_unified_step and use_chunked_prefill
         self.chunk = min(prefill_chunk, prompt_len)
         self.mesh = spec.mesh
         self.data_shards = spec.data_shards()
@@ -220,6 +276,16 @@ class _TierRuntime:
             tok, conf = pick(logits[rows, last])
             return tok, conf, new_cache
 
+        def mixed_fn(params, tokens, cache, pos, page_table, q_len):
+            # unified token-batch step: every live row's work — prefill
+            # chunk or decode token — in ONE compiled program; q_len
+            # selects each row's last live position for the gate
+            pages = {"page_table": page_table, "q_len": q_len}
+            logits, new_cache = transformer.mixed_step(
+                params, cfg, tokens, cache, pos, pages)
+            tok, conf = pick(logits)
+            return tok, conf, new_cache
+
         self.prefill_fn = jax.jit(prefill_fn)
         # Donate the cache so XLA updates the slot arena in place instead
         # of copying it every token (2x peak cache memory otherwise).  CPU
@@ -227,6 +293,7 @@ class _TierRuntime:
         donate = (2,) if jax.default_backend() != "cpu" else ()
         self.step_fn = jax.jit(step_fn, donate_argnums=donate)
         self.chunk_fn = jax.jit(chunk_fn, donate_argnums=donate)
+        self.mixed_fn = jax.jit(mixed_fn, donate_argnums=donate)
 
     # -- device placement ---------------------------------------------------
 
@@ -285,6 +352,17 @@ class _TierRuntime:
                 self.put_rows(self.pos[:, None]),
                 self.page_table_device(mask_rows=mask_rows))
 
+    def run_mixed(self, tokens, pos, qlen):
+        """The unified token-batch launch: one compiled program serves
+        every live row's tick — prefill chunks and decode tokens share
+        the batch, so no page-table masking is needed (each row scatters
+        into and attends its *own* pages inside the same program)."""
+        with self._ctx():
+            return self.mixed_fn(
+                self.params, self.put_rows(tokens), self.pool.cache,
+                self.put_rows(pos), self.page_table_device(),
+                self.put_rows(qlen))
+
     def page_table_device(self, mask_rows: Sequence[int] = ()):
         """Device page tables; ``mask_rows`` (rows mid-prefill during a
         decode step) have their pages unmapped in the copy so the decode
@@ -328,6 +406,7 @@ class CascadeEngine:
                  use_chunked_prefill: Optional[bool] = None,
                  prefill_chunk: int = 128,
                  prefill_token_budget: Optional[int] = None,
+                 use_unified_step: Optional[bool] = None,
                  clock=None):
         """``use_paged_kv`` selects the block-paged KV arena + Pallas
         paged flash-decode kernel (interpret mode off-TPU); False keeps
@@ -349,7 +428,22 @@ class CascadeEngine:
         ``prefill_token_budget`` prompt tokens per tier per tick (default
         ``slots * prefill_chunk``).  ``use_chunked_prefill=False`` keeps
         the uniform-length packed prefill (exact ``prompt_len`` enforced
-        at submit) — the bit-exactness oracle for the chunked path."""
+        at submit) — the bit-exactness oracle for the chunked path.
+
+        ``use_unified_step`` (default: auto — on exactly when chunked
+        prefill is on) selects **unified token-batch execution**: each
+        tick builds one flat token batch in which every live row
+        contributes its next prefill chunk or its single decode token,
+        executed by ONE compiled mixed-attention program per tier per
+        tick (``transformer.mixed_step`` over
+        ``kernels/mixed_attention.py``) with one blocking ``device_get``.
+        The per-tick token budget then spans prefill chunks *and* decode
+        tokens uniformly: admission charges a request's first chunk
+        against the same currency the tick's carried decode+chunk load
+        already occupies.  ``use_unified_step=False`` is the split-path
+        escape hatch (legacy ``chunk_fn`` + ``step_fn``, two launches on
+        mixed ticks) — the A/B baseline; token streams are bit-identical
+        between the two."""
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers = list(tiers)
@@ -366,6 +460,15 @@ class CascadeEngine:
                 "modality frontend (recurrent state cannot be carried "
                 "across prefill chunks)")
         self.chunked_prefill = use_chunked_prefill
+        if use_unified_step is None:
+            use_unified_step = use_chunked_prefill
+        elif use_unified_step and not use_chunked_prefill:
+            raise ValueError(
+                "unified token-batch execution requires chunked paged "
+                "prefill (use_paged_kv=True, attention-only tiers); dense "
+                "and recurrent-state tiers keep the legacy split "
+                "chunk+decode path (use_unified_step=False)")
+        self.unified_step = use_unified_step
         if prefill_chunk <= 0:
             raise ValueError("prefill_chunk must be positive")
         slots_per_tier = ([int(slots)] * m if np.isscalar(slots)
@@ -423,12 +526,17 @@ class CascadeEngine:
                          use_paged_kv=use_paged_kv, block_size=kv_block_size,
                          kv_blocks=nb,
                          use_chunked_prefill=use_chunked_prefill,
-                         prefill_chunk=self.prefill_chunk)
+                         prefill_chunk=self.prefill_chunk,
+                         use_unified_step=use_unified_step)
             for spec, cap, nb in zip(self.tiers, slots_per_tier,
                                      kv_blocks_per_tier)]
         self.requests: List[Request] = []
         self._rid = 0
-        self._admitted_tokens = [0] * m     # per-tier, reset each tick
+        # per-tier token-budget window state, reset each tick: tokens
+        # charged (unified: seeded with the tick's carried decode+chunk
+        # load — one currency) and requests admitted (never-starve guard)
+        self._budget_used = [0] * m
+        self._admitted = [0] * m
         self.host_syncs = 0                 # blocking device->host fetches
 
     # -- submission --------------------------------------------------------
@@ -454,11 +562,12 @@ class CascadeEngine:
 
     # -- one engine tick ---------------------------------------------------
 
-    def _fetch(self, tree):
-        """The tick's blocking device->host transfer (counted: the
-        per-tier sync-coalescing tests assert a mixed prefill+decode tick
-        pays exactly one of these per tier)."""
+    def _fetch(self, tier: int, tree):
+        """The tick's blocking device->host transfer (counted overall and
+        per tier: the sync-coalescing tests assert a mixed prefill+decode
+        tick pays exactly one of these per active tier)."""
         self.host_syncs += 1
+        self.metrics.record_host_sync(tier)
         return jax.device_get(tree)
 
     def _pick_shard(self, tier: int, rt: _TierRuntime,
@@ -484,12 +593,20 @@ class CascadeEngine:
             # mixed-length admission: bind rows one at a time, bounded by
             # free rows, free KV blocks for the *first chunk* (later
             # chunks grow lazily) on the target data shard, and the
-            # tier's prompt-token budget per tick (scheduler-enforced;
-            # the budget window spans both admission passes of a tick via
-            # _admitted_tokens, and the window's first request is always
-            # admitted so a prompt longer than the whole budget cannot
-            # starve).  No compute here — chunks run in _prefill.
+            # tier's token budget per tick (scheduler-enforced; the
+            # budget window spans both admission passes of a tick via
+            # _budget_used, and the window's first admitted request is
+            # always admitted so a prompt longer than the whole budget
+            # cannot starve).  Unified tiers reason in ONE currency: the
+            # window is pre-charged with the tick's carried load (decode
+            # tokens + in-flight prefill chunks, see _tick_load) and a
+            # new request bills only its first chunk — later chunks
+            # occupy later ticks' windows.  Legacy split tiers keep the
+            # old accounting (full prompt length, prefill-only window).
+            # No compute here — the token batch runs in _tier_step.
             admitted = 0
+            cost = ((lambda r: min(rt.chunk, r.prompt_tokens))
+                    if rt.unified else None)
             while True:
                 head = self.scheduler.peek(tier, now)
                 if head is None:
@@ -501,7 +618,10 @@ class CascadeEngine:
                 reqs, slot_ids = self.scheduler.admit(
                     tier, now, limit=1,
                     token_budget=self.prefill_token_budget,
-                    budget_used=self._admitted_tokens[tier], shard=shard)
+                    budget_used=self._budget_used[tier],
+                    admitted_before=(self._admitted[tier] if rt.unified
+                                     else None),
+                    token_cost=cost, shard=shard)
                 if not reqs:
                     break               # over budget this tick
                 req, slot = reqs[0], slot_ids[0]
@@ -509,7 +629,9 @@ class CascadeEngine:
                              row_tokens=plen + self.gen_len)
                 rt.slot_req[slot] = req
                 rt.prefill_pos[slot] = 0
-                self._admitted_tokens[tier] += plen
+                self._budget_used[tier] += (min(rt.chunk, plen)
+                                            if rt.unified else plen)
+                self._admitted[tier] += 1
                 admitted += 1
             if admitted:
                 self.metrics.record_admission(tier, admitted)
@@ -542,6 +664,7 @@ class CascadeEngine:
         for i, req in enumerate(reqs):
             prompts[i] = req.prompt
         part_cache, ftok, fconf = rt.run_prefill(prompts)
+        self.metrics.record_launches(tier, 1)
         rt.pool.write_prefill(slot_ids, part_cache)
         # one blocking transfer for both outputs (device_get blocks until
         # prefill finished); timestamp tokens with the post-compute clock
@@ -550,7 +673,7 @@ class CascadeEngine:
         # separate from the tick's coalesced prefill+decode fetch: the
         # uniform one-shot path is the legacy bit-exactness oracle and
         # admits at most twice per tick, not every tick.
-        ftok, fconf = self._fetch((ftok, fconf))
+        ftok, fconf = self._fetch(tier, (ftok, fconf))
         t_emit = self.clock.now()
         for i, (req, slot) in enumerate(zip(reqs, slot_ids)):
             req.start_decode()
@@ -559,61 +682,198 @@ class CascadeEngine:
             rt.tok[slot] = ftok[i]
             rt.pos[slot] = self.prompt_len   # next decode writes here
 
-    def _prefill_launch(self, tier: int) -> Optional[dict]:
-        """Advance every mid-prefill row one chunk (chunked mode only).
-        One fixed-shape ``chunk_fn`` call per tier per tick serves any mix
-        of per-row chunk starts and tail lengths; rows denied KV blocks
-        (over-subscribed arena) stall with ``q_len = 0`` and replay the
-        chunk next tick — attention KV writes are idempotent.
+    def _tick_load(self, rt: _TierRuntime) -> int:
+        """Tokens the tier's live rows already claim this tick: one per
+        decoding row plus each mid-prefill row's next chunk.  Unified
+        admission pre-charges this carried load against the tick's token
+        budget — prefill chunks and decode tokens are one currency."""
+        load = len(rt.decoding())
+        for s in rt.prefilling():
+            req = rt.slot_req[s]
+            load += min(rt.chunk, req.prompt_tokens - int(rt.prefill_pos[s]))
+        return load
 
-        Launch half of the coalesced tick: all host-side state (chunk
-        positions, PREFILL->DECODE transitions) advances here — it only
-        depends on host-known chunk lengths — while the device outputs
-        (first token + confidence of rows whose last chunk completed)
-        stay on device for the tick's single joint fetch."""
-        rt = self.runtimes[tier]
-        pre = rt.prefilling()
-        if not pre:
+    def _build_plan(self, rt: _TierRuntime) -> Optional[StepPlan]:
+        """Plan one tier's tick on the host: which rows prefill a chunk,
+        which decode a token, which stall — plus the packed token batch
+        the launch consumes.  Rows denied KV blocks (over-subscribed
+        arena) are marked ``KIND_STALL`` and retry next tick: a stalled
+        chunk replays idempotently, a stalled decode row's write lands in
+        the null block and its output is discarded (over-subscription is
+        rejected at construction for recurrent-state models).  Page
+        tables grow lazily here — prefill rows in slot order first, then
+        decode rows oldest-bound-first (matching the legacy split launch
+        order; deadlock freedom itself comes from the oldest-first
+        *reserve* in ``serving/slots.py``, not from this visit order).
+
+        Under the split backend decode rows are only *listed* (their
+        stall check, input token, and same-tick first-token fusion live
+        in `_exec_split`, preserving the legacy launch order exactly);
+        the unified backend consumes the plan verbatim."""
+        pre = rt.prefilling() if rt.chunked else []
+        dec = rt.decoding()
+        if not pre and not dec:
             return None
-        C = rt.chunk
-        tokens = np.zeros((rt.capacity, C), np.int32)
-        pos = np.zeros((rt.capacity, C), np.int32)
-        qlen = np.zeros(rt.capacity, np.int32)
+        cap = rt.capacity
+        kind = np.zeros(cap, np.int8)
+        qlen = np.zeros(cap, np.int32)
+        shard = np.zeros(cap, np.int32)
+        if rt.paged:
+            for s in rt.pool.bound_rows():
+                shard[s] = rt.pool.shard_of(s)
+        prefill_rows: List[int] = []
+        finishing: List[int] = []
+        chunks: List[tuple] = []              # (slot, chunk start, length)
         for s in pre:
             req = rt.slot_req[s]
             st = int(rt.prefill_pos[s])
-            n = min(C, req.prompt_tokens - st)
+            n = min(rt.chunk, req.prompt_tokens - st)
             if not rt.pool.ensure_blocks(s, st + n - 1):
-                continue                      # stall: qlen stays 0
-            tokens[s, :n] = req.prompt[st:st + n]
-            pos[s] = st + np.arange(C)        # row's q_start is pos[s, 0]
-            qlen[s] = n
-        if not qlen.any():
-            return None                 # every row stalled: skip the batch
-        tok, conf, rt.pool.cache = rt.run_chunk(tokens, pos, qlen)
-        self.metrics.record_prefill_tokens(int(qlen.sum()),
-                                           rt.capacity * C)
-        finished = []
-        for s in pre:
-            if qlen[s] == 0:
+                kind[s] = KIND_STALL          # replay the chunk next tick
                 continue
-            rt.prefill_pos[s] += qlen[s]
+            kind[s] = KIND_PREFILL
+            qlen[s] = n
+            prefill_rows.append(s)
+            chunks.append((s, st, n))
+            if st + n == req.prompt_tokens:
+                finishing.append(s)
+        # batch width: the chunk when any prefill row survived its block
+        # check, else the width-1 decode-only program (a tick whose
+        # prefill rows ALL stalled decodes at width 1, not chunk width)
+        width = rt.chunk if prefill_rows else 1
+        tokens = np.zeros((cap, width), np.int32)
+        pos = np.zeros((cap, width), np.int32)
+        for s, st, n in chunks:
+            tokens[s, :n] = rt.slot_req[s].prompt[st:st + n]
+            pos[s] = st + np.arange(width)    # row's q_start is pos[s, 0]
+        decode_rows: List[int] = []
+        if rt.unified:
+            dec_set = set(dec)
+            for s in (rt.pool.bound_rows() if rt.paged else dec):
+                if s not in dec_set:
+                    continue
+                p = int(rt.pos[s])
+                if rt.paged and not rt.pool.ensure_blocks(s, p):
+                    kind[s] = KIND_STALL      # stall: retry next tick
+                    continue
+                kind[s] = KIND_DECODE
+                tokens[s, 0] = rt.tok[s]
+                pos[s] = p + np.arange(width)
+                qlen[s] = 1
+                decode_rows.append(s)
+        else:
+            decode_rows = list(dec)
+            for s in dec:
+                kind[s] = KIND_DECODE
+        return StepPlan(width=width, kind=kind, tokens=tokens, pos=pos,
+                        q_len=qlen, shard=shard, prefill_rows=prefill_rows,
+                        decode_rows=decode_rows, finishing=finishing)
+
+    def _tier_step(self, tier: int, now: float) -> int:
+        """One tier's compute for a tick, planned host-side then executed
+        by the unified or split backend.  Returns the number of decode
+        tokens emitted (the occupancy metric)."""
+        rt = self.runtimes[tier]
+        plan = self._build_plan(rt)
+        if plan is None:
+            return 0
+        if rt.unified:
+            return self._exec_unified(tier, rt, plan)
+        return self._exec_split(tier, rt, plan)
+
+    def _exec_unified(self, tier: int, rt: _TierRuntime,
+                      plan: StepPlan) -> int:
+        """Unified token-batch execution: ONE compiled program per tier
+        per tick serves every live row — each contributes its next
+        prefill chunk or its single decode token (``q_len`` 0/1/chunk
+        over the shared page-table gather) — and one blocking
+        ``device_get`` fetches every emitted (token, confidence) pair.
+        A row finishing prefill this tick emits its first token from the
+        batch's last-position logits and starts decoding next tick.
+        Mid-prompt-only ticks (nothing to emit) skip the fetch; ticks
+        where every live row stalled skip the launch too."""
+        if not plan.prefill_rows and not plan.decode_rows:
+            return 0                    # every live row stalled
+        tok, conf, rt.pool.cache = rt.run_mixed(plan.tokens, plan.pos,
+                                                plan.q_len)
+        self.metrics.record_launches(tier, 1)
+        if plan.prefill_rows:
+            self.metrics.record_prefill_tokens(plan.live_prefill_tokens,
+                                               rt.capacity * plan.width)
+        # host state advances on host-known lengths only; device outputs
+        # stay unfetched until something must be emitted
+        for s in plan.prefill_rows:
+            rt.prefill_pos[s] += int(plan.q_len[s])
+        for s in plan.finishing:
             req = rt.slot_req[s]
-            if rt.prefill_pos[s] == req.prompt_tokens:
+            req.start_decode()
+            rt.pos[s] = req.prompt_tokens   # next decode writes here
+        if not plan.finishing and not plan.decode_rows:
+            return 0                    # mid-prompt chunks only: no emits
+        tok, conf = self._fetch(tier, (tok, conf))
+        t_emit = self.clock.now()       # post-compute (see _admit)
+        for s in plan.finishing + plan.decode_rows:
+            req = rt.slot_req[s]
+            req.emit(int(tok[s]), float(conf[s]), t_emit)
+            rt.tok[s] = tok[s]
+        for s in plan.decode_rows:
+            rt.pos[s] += 1
+        return len(plan.decode_rows)
+
+    def _exec_split(self, tier: int, rt: _TierRuntime,
+                    plan: StepPlan) -> int:
+        """Legacy split execution (the ``use_unified_step=False`` escape
+        hatch, and the only backend for dense-arena / recurrent-state
+        tiers): launch the prefill chunk batch, launch the fused decode
+        step — rows whose final chunk completed decode in the same tick,
+        their first token flowing into the decode input through a
+        device-side ``where`` — then pay a single blocking host sync for
+        both result pairs.  Two compiled programs on mixed ticks, which
+        is exactly what the unified backend fuses away."""
+        pf = None
+        if plan.prefill_rows:
+            tok, conf, rt.pool.cache = rt.run_chunk(plan.tokens, plan.pos,
+                                                    plan.q_len)
+            self.metrics.record_launches(tier, 1)
+            self.metrics.record_prefill_tokens(plan.live_prefill_tokens,
+                                               rt.capacity * plan.width)
+            for s in plan.prefill_rows:
+                rt.prefill_pos[s] += int(plan.q_len[s])
+            for s in plan.finishing:
+                req = rt.slot_req[s]
                 req.start_decode()
                 rt.pos[s] = req.prompt_tokens   # next decode writes here
-                finished.append(s)
-        return {"tok": tok, "conf": conf, "finished": finished}
+            pf = {"tok": tok, "conf": conf, "finished": plan.finishing}
+        dc = self._decode_launch(tier, rt, pf)
+        emit_first = pf is not None and pf["finished"]
+        if not emit_first and dc is None:
+            return 0
+        fetched = self._fetch(tier, (
+            (pf["tok"], pf["conf"]) if emit_first else None,
+            (dc["tok"], dc["conf"]) if dc is not None else None))
+        t_emit = self.clock.now()       # post-compute (see _admit)
+        if emit_first:
+            ptok, pconf = fetched[0]
+            for s in pf["finished"]:
+                rt.slot_req[s].emit(int(ptok[s]), float(pconf[s]), t_emit)
+                rt.tok[s] = ptok[s]
+        if dc is None:
+            return 0
+        ntok, nconf = fetched[1]
+        for slot in dc["active"]:
+            req = rt.slot_req[slot]
+            req.emit(int(ntok[slot]), float(nconf[slot]), t_emit)
+            rt.tok[slot] = ntok[slot]
+            rt.pos[slot] += 1
+        return len(dc["active"])
 
-    def _decode_launch(self, tier: int,
+    def _decode_launch(self, tier: int, rt: _TierRuntime,
                        pf: Optional[dict]) -> Optional[dict]:
-        """Launch half of the fused decode step.  Rows whose final
-        prefill chunk completed this tick decode in the same tick; their
-        first token is still on device (in ``pf``), so it is mixed into
-        the decode input with a device-side ``where`` instead of a host
-        round-trip — the decode consumes the prefill output without ever
-        syncing between the two launches."""
-        rt = self.runtimes[tier]
+        """Launch half of the split backend's fused decode step.  Rows
+        whose final prefill chunk completed this tick decode in the same
+        tick; their first token is still on device (in ``pf``), so it is
+        mixed into the decode input with a device-side ``where`` instead
+        of a host round-trip."""
         decoding = rt.decoding()
         if pf is not None and pf["finished"]:
             # rows whose first token is still on device look one emit
@@ -653,40 +913,8 @@ class CascadeEngine:
         # block in the decode step's page-table copy
         nxt, conf, rt.pool.cache = rt.run_step(
             tok_in, mask_rows=rt.prefilling())
+        self.metrics.record_launches(tier, 1)
         return {"active": active, "tok": nxt, "conf": conf}
-
-    def _prefill_decode(self, tier: int, now: float) -> int:
-        """One tier's compute for a tick: launch the prefill chunk batch,
-        launch the fused decode step (consuming the chunk outputs on
-        device), then pay a *single* blocking host sync for both result
-        pairs — a mixed prefill+decode tick costs one ``device_get`` per
-        tier instead of the two the split methods used to issue.  Ticks
-        whose prefill finishes no row and runs no decode skip the fetch
-        entirely (the chunk outputs are dead values)."""
-        rt = self.runtimes[tier]
-        pf = self._prefill_launch(tier)
-        dc = self._decode_launch(tier, pf)
-        emit_first = pf is not None and pf["finished"]
-        if not emit_first and dc is None:
-            return 0
-        fetched = self._fetch((
-            (pf["tok"], pf["conf"]) if emit_first else None,
-            (dc["tok"], dc["conf"]) if dc is not None else None))
-        t_emit = self.clock.now()       # post-compute (see _admit)
-        if emit_first:
-            ptok, pconf = fetched[0]
-            for s in pf["finished"]:
-                rt.slot_req[s].emit(int(ptok[s]), float(pconf[s]), t_emit)
-                rt.tok[s] = ptok[s]
-        if dc is None:
-            return 0
-        ntok, nconf = fetched[1]
-        for slot in dc["active"]:
-            req = rt.slot_req[slot]
-            req.emit(int(ntok[slot]), float(nconf[slot]), t_emit)
-            rt.tok[slot] = ntok[slot]
-            rt.pos[slot] += 1
-        return len(dc["active"])
 
     def _finish(self, tier: int, now: float) -> None:
         rt = self.runtimes[tier]
@@ -714,11 +942,17 @@ class CascadeEngine:
 
     def step(self, now: Optional[float] = None) -> None:
         now = self.clock.now() if now is None else now
-        self._admitted_tokens = [0] * len(self.tiers)
+        # open each tier's token-budget window: unified tiers pre-charge
+        # the tick's carried decode+chunk load (one currency), split
+        # tiers start the legacy prefill-only window at zero
+        self._budget_used = [
+            self._tick_load(rt) if rt.unified else 0
+            for rt in self.runtimes]
+        self._admitted = [0] * len(self.tiers)
         active = []
         for tier in range(len(self.tiers)):
             self._admit(tier, now)
-            active.append(self._prefill_decode(tier, now))
+            active.append(self._tier_step(tier, now))
             self._finish(tier, now)
         # Trailing admission pass: requests escalated this tick enter the
         # next tier's slots immediately (their decode starts next tick),
@@ -782,6 +1016,15 @@ class CascadeEngine:
         resetting the clock so compile time never counts against request
         latency."""
         for rt in self.runtimes:
+            if rt.unified:
+                # both compiled widths of the one-per-tick program: the
+                # mixed token batch (any prefill row live) and the
+                # width-1 decode-only batch
+                for w in dict.fromkeys((rt.chunk, 1)):
+                    z = np.zeros((rt.capacity, w), np.int32)
+                    _, _, rt.pool.cache = rt.run_mixed(
+                        z, z, np.zeros(rt.capacity, np.int32))
+                continue
             if rt.chunked:
                 ztok = np.zeros((rt.capacity, rt.chunk), np.int32)
                 _, _, rt.pool.cache = rt.run_chunk(

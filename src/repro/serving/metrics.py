@@ -62,6 +62,12 @@ class ServingMetrics:
         # prefill keeps the ratio near 1; pad-to-max burns the difference)
         self.prefill_live_tokens = 0
         self.prefill_processed_tokens = 0
+        # launch efficiency: compiled-program dispatches and blocking
+        # device->host fetches, per tier (the unified token-batch path's
+        # win: one launch + one device_get per active tier per tick; the
+        # split path pays two launches on mixed prefill+decode ticks)
+        self.launches_by_tier = [0] * len(tiers)
+        self.host_syncs_by_tier = [0] * len(tiers)
         self.steps = 0
         # throughput window: first arrival -> last completion (makespan),
         # not first->last engine step (zero for single-step runs)
@@ -86,6 +92,15 @@ class ServingMetrics:
         fixed-shape batch of `processed` token slots."""
         self.prefill_live_tokens += int(live)
         self.prefill_processed_tokens += int(processed)
+
+    def record_launches(self, tier: int, n: int = 1) -> None:
+        """`n` compiled-program dispatches (prefill/chunk/decode/mixed
+        launches) for `tier` this tick."""
+        self.launches_by_tier[tier] += n
+
+    def record_host_sync(self, tier: int, n: int = 1) -> None:
+        """One blocking ``device_get`` paid by `tier`."""
+        self.host_syncs_by_tier[tier] += n
 
     def record_completion(self, req: Request) -> None:
         self.latencies.append(req.latency)
@@ -147,6 +162,14 @@ class ServingMetrics:
             "prefill_live_token_ratio": (
                 self.prefill_live_tokens / self.prefill_processed_tokens
                 if self.prefill_processed_tokens else float("nan")),
+            "launches": list(self.launches_by_tier),
+            "launches_per_tick": [
+                n / self.steps if self.steps else float("nan")
+                for n in self.launches_by_tier],
+            "host_syncs": list(self.host_syncs_by_tier),
+            "host_syncs_per_tick": [
+                n / self.steps if self.steps else float("nan")
+                for n in self.host_syncs_by_tier],
             "tier_names": [t.name for t in self.tiers],
             "tier_requests": list(self.tier_requests),
             "tier_utilization": util,

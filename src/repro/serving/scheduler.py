@@ -96,30 +96,45 @@ class CascadeScheduler:
     def admit(self, tier: int, now: float, limit: Optional[int] = None,
               token_budget: Optional[int] = None, budget_used: int = 0,
               shard: Optional[int] = None,
+              token_cost=None, admitted_before: Optional[int] = None,
               ) -> Tuple[List[Request], List[int]]:
         """Pop requests into free slots of `tier` until either runs out.
         Returns the packed (requests, slot_ids) admitted this step.
         ``limit`` caps the number admitted (the engine's block-paged KV
         arena may run out of blocks before the tier runs out of rows).
-        ``token_budget`` caps the total *prompt tokens* admitted in one
-        budget window — the mixed-length admission knob: a tier should
-        not accept more prefill work per tick than its chunked prefill
-        can absorb.  ``budget_used`` carries tokens already admitted in
-        the current window (the engine admits one request per call while
-        binding KV blocks in between, with a per-tick window).  The
-        window's first request is always admitted (a prompt longer than
-        the whole budget must not starve); the rest must fit.
-        ``shard`` pins the admission to one data shard's row range
-        (sharded serving: the engine picks the shard whose KV block pool
-        can hold the request); None lets the allocator balance shards."""
+        ``token_budget`` caps the total *tokens* admitted in one budget
+        window — the admission knob: a tier should not accept more work
+        per tick than its token batch can absorb.  ``budget_used``
+        carries tokens already charged against the current window (the
+        engine admits one request per call while binding KV blocks in
+        between, with a per-tick window; under unified token-batch
+        execution it also pre-charges the tick's carried compute load:
+        one token per decoding row plus each mid-prefill row's next
+        chunk — prefill chunks and decode tokens are one currency).
+        ``token_cost`` maps a request to its budget charge — default its
+        full prompt length (the legacy currency); the unified engine
+        charges only the first chunk, since later chunks bill later
+        ticks' windows.  The window's first *admitted request* is always
+        admitted even when over budget (a prompt longer than the whole
+        budget must not starve): with ``admitted_before`` (requests
+        already admitted in this window) the guard keys on admissions,
+        so a nonzero carried load cannot starve the head; without it the
+        legacy ``budget_used == 0`` rule applies.  ``shard`` pins the
+        admission to one data shard's row range (sharded serving: the
+        engine picks the shard whose KV block pool can hold the
+        request); None lets the allocator balance shards."""
         reqs: List[Request] = []
         slots: List[int] = []
         used = budget_used
         alloc = self.allocators[tier]
         while self.admissible(tier, now) and alloc.free_in(shard) > 0 \
                 and (limit is None or len(reqs) < limit):
-            need = self.queues[tier][0].prompt_tokens
-            if token_budget is not None and used \
+            head = self.queues[tier][0]
+            need = (head.prompt_tokens if token_cost is None
+                    else token_cost(head))
+            first = (used == 0 if admitted_before is None
+                     else admitted_before + len(reqs) == 0)
+            if token_budget is not None and not first \
                     and used + need > token_budget:
                 break
             slot = alloc.alloc(shard)

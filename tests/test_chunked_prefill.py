@@ -276,21 +276,32 @@ def test_mixed_length_submit_validation(tiny_parts):
 
 def test_prefill_token_accounting(tiny_parts):
     """The padding-tax metric: live prompt tokens vs token slots the
-    fixed-shape prefill batches processed."""
+    fixed-shape prefill batches processed.  Unified admission charges
+    first chunks only (3 + 4 = 7 fits the 8-token budget, so both
+    requests enter at tick 0: three chunked ticks of capacity*chunk = 8
+    token slots); the legacy split window charges full prompts (3 + 9
+    exceeds it, delaying the 9-token request to tick 1: four ticks)."""
     cfg, fast_p, exp_p = tiny_parts
-    eng = _mk(cfg, fast_p, exp_p, slots=2, prompt_len=16, prefill_chunk=4,
-              deltas=[-1.0])                    # nothing escalates
     rng = np.random.default_rng(2)
-    for n in (3, 9):
-        eng.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32))
-    s = eng.run(max_steps=200)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 9)]
+
+    def run(**kw):
+        eng = _mk(cfg, fast_p, exp_p, slots=2, prompt_len=16,
+                  prefill_chunk=4, deltas=[-1.0], **kw)  # nothing escalates
+        for p in prompts:
+            eng.submit(p)
+        return eng.run(max_steps=200)
+
+    s = run()
     assert s["prefill_live_tokens"] == 12
-    # the default token budget (slots*chunk = 8) delays the 9-token
-    # request to tick 1; its 3 chunks plus the 3-token request's single
-    # chunk are 4 fixed-shape batches of capacity*chunk = 8 token slots
+    assert s["prefill_processed_tokens"] == 24
+    assert s["prefill_live_token_ratio"] == pytest.approx(12 / 24)
+    assert s["prompt_len_max"] == 9
+    s = run(use_unified_step=False)
+    assert s["prefill_live_tokens"] == 12
     assert s["prefill_processed_tokens"] == 32
     assert s["prefill_live_token_ratio"] == pytest.approx(12 / 32)
-    assert s["prompt_len_max"] == 9
 
 
 def test_length_bucket_labels():

@@ -1,0 +1,531 @@
+"""Unified token-batch execution: the mixed-attention kernel vs its
+oracle, unified-vs-split engine parity (single-device and 8 simulated
+sharded devices), the one-launch/one-sync-per-tier-per-tick guarantee,
+and the scheduler's one-currency admission edges.
+
+The engine parity tests assert **bit-identical token streams and
+escalation decisions** between the unified backend (one compiled mixed
+prefill+decode program per tier per tick, ``use_unified_step=True``) and
+the legacy split backend (``use_unified_step=False``; chunk_fn + step_fn,
+two launches on mixed ticks) across uniform, lognormal, and
+over-subscribed workloads; confidences to 1e-5 (the two paths batch the
+same per-row math at different widths, which cannot reassociate a row's
+reductions but may differ by ulps in vectorized lowering).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.serving import CascadeEngine, CascadeScheduler, TierSpec
+from repro.serving.engine import StepPlan, VirtualClock  # noqa: F401
+from repro.serving.request import Request, RequestState
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def _rand_pool(rng, B, C, KV, G, hd, N, bs, P, quant=False):
+    q = jnp.asarray(rng.standard_normal((B, C, KV, G, hd)), jnp.float32)
+    pt = jnp.asarray(rng.integers(1, N, (B, P)), jnp.int32)
+    if quant:
+        k = jnp.asarray(rng.integers(-127, 128, (N, bs, KV, hd)), jnp.int8)
+        v = jnp.asarray(rng.integers(-127, 128, (N, bs, KV, hd)), jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.01, 0.05, (N, bs, KV)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.01, 0.05, (N, bs, KV)), jnp.float32)
+        return q, k, v, pt, ks, vs
+    k = jnp.asarray(rng.standard_normal((N, bs, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((N, bs, KV, hd)), jnp.float32)
+    return q, k, v, pt, None, None
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_mixed_kernel_matches_oracle(window):
+    """One batch mixing every row kind the engine plans: a full prefill
+    chunk, a final-chunk tail, a decode row (q_len=1 at depth), and a
+    stalled/idle row (q_len=0, exact-zero output)."""
+    rng = np.random.default_rng(0)
+    B, C, KV, G, hd = 4, 8, 2, 2, 16
+    N, bs, P = 11, 4, 6
+    q, k, v, pt, _, _ = _rand_pool(rng, B, C, KV, G, hd, N, bs, P)
+    start = jnp.asarray([0, 5, 13, 9], jnp.int32)
+    qlen = jnp.asarray([8, 3, 1, 0], jnp.int32)     # chunk/tail/decode/stall
+    got = kernel_ops.mixed_attention(
+        q, k, v, pt, start, qlen, window=window, interpret=True)
+    want = ref.mixed_attention_ref(
+        q, k, v, pt, start, qlen, window=window)
+    for b in range(B):
+        n = int(qlen[b])
+        np.testing.assert_allclose(np.asarray(got)[b, :n],
+                                   np.asarray(want)[b, :n],
+                                   rtol=2e-5, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(got)[3], 0.0)
+
+
+def test_mixed_kernel_decode_row_matches_paged_decode_oracle():
+    """A q_len=1 row in the mixed batch IS a paged flash-decode step:
+    its slot-0 output must match the decode kernel's oracle at the same
+    position/page table."""
+    rng = np.random.default_rng(3)
+    B, C, KV, G, hd = 3, 4, 2, 3, 8
+    N, bs, P = 9, 4, 5
+    q, k, v, pt, _, _ = _rand_pool(rng, B, C, KV, G, hd, N, bs, P)
+    pos = jnp.asarray([7, 0, 18], jnp.int32)
+    qlen = jnp.ones(B, jnp.int32)
+    got = kernel_ops.mixed_attention(q, k, v, pt, pos, qlen, interpret=True)
+    want = ref.paged_attention_ref(q[:, 0], k, v, pt, pos)
+    np.testing.assert_allclose(np.asarray(got)[:, 0], np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_mixed_kernel_int8_dequant_matches_oracle():
+    rng = np.random.default_rng(1)
+    B, C, KV, G, hd = 3, 4, 1, 3, 8
+    N, bs, P = 9, 4, 4
+    q, k, v, pt, ks, vs = _rand_pool(rng, B, C, KV, G, hd, N, bs, P,
+                                     quant=True)
+    start = jnp.asarray([2, 9, 5], jnp.int32)
+    qlen = jnp.asarray([4, 1, 2], jnp.int32)        # chunk, decode, tail
+    got = kernel_ops.mixed_attention(
+        q, k, v, pt, start, qlen, k_scale=ks, v_scale=vs, interpret=True)
+    want = ref.mixed_attention_ref(
+        q, k, v, pt, start, qlen, k_scale=ks, v_scale=vs)
+    for b in range(B):
+        n = int(qlen[b])
+        np.testing.assert_allclose(np.asarray(got)[b, :n],
+                                   np.asarray(want)[b, :n],
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_mixed_kernel_sliding_window_decode_row():
+    """Sliding window applies per absolute query position, so a deep
+    decode row (q_len=1) only attends its trailing window through the
+    shared page gather."""
+    rng = np.random.default_rng(2)
+    B, C, KV, G, hd = 2, 4, 2, 2, 8
+    N, bs, P = 9, 4, 5
+    q, k, v, pt, _, _ = _rand_pool(rng, B, C, KV, G, hd, N, bs, P)
+    pos = jnp.asarray([17, 3], jnp.int32)
+    qlen = jnp.asarray([1, 4], jnp.int32)
+    got = kernel_ops.mixed_attention(q, k, v, pt, pos, qlen, window=5,
+                                     interpret=True)
+    want = ref.mixed_attention_ref(q, k, v, pt, pos, qlen, window=5)
+    for b in range(B):
+        n = int(qlen[b])
+        np.testing.assert_allclose(np.asarray(got)[b, :n],
+                                   np.asarray(want)[b, :n],
+                                   rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine: unified vs split parity (single device)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_parts():
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("gemma3-1b", "smoke")
+    fast_p = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    exp_p = init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    return cfg, fast_p, exp_p
+
+
+def _mk(cfg, fast_p, exp_p, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("prompt_len", 16)
+    kw.setdefault("gen_len", 4)
+    kw.setdefault("deltas", [0.5])
+    kw.setdefault("kv_block_size", 4)
+    kw.setdefault("prefill_chunk", 5)
+    kw.setdefault("clock", VirtualClock())
+    return CascadeEngine([TierSpec("fast", cfg, fast_p),
+                          TierSpec("exp", cfg, exp_p)], **kw)
+
+
+def _drain(eng, prompts, arrivals=None):
+    for i, p in enumerate(prompts):
+        t = 0.0 if arrivals is None else float(arrivals[i])
+        eng.submit(p, arrival_time=t)
+    eng.run(max_steps=1000)
+    assert all(r.state is RequestState.DONE for r in eng.requests)
+    return eng
+
+
+def _check_streams(a_eng, b_eng):
+    for a, b in zip(a_eng.requests, b_eng.requests):
+        assert a.tokens == b.tokens, (a.rid, a.tokens, b.tokens)
+        assert a.tier == b.tier
+        np.testing.assert_allclose(a.token_conf, b.token_conf, rtol=1e-5)
+
+
+def test_unified_matches_split_mixed_lengths(tiny_parts):
+    """Acceptance: the unified token-batch engine emits token streams
+    bit-identical to the split-path engine over mixed prompt lengths
+    (incl. 1, chunk boundaries, and max_prompt_len) with staggered
+    arrivals."""
+    cfg, fast_p, exp_p = tiny_parts
+    rng = np.random.default_rng(0)
+    lens = [1, 3, 5, 6, 10, 16]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    # probe pass: a fixed δ at the widest confidence gap, so the gate
+    # genuinely splits traffic across both tiers in the parity runs
+    probe = _drain(_mk(cfg, fast_p, exp_p), prompts)
+    confs = sorted(r.seq_conf_by_tier[0] for r in probe.requests)
+    gaps = [(confs[i + 1] - confs[i], i) for i in range(len(confs) - 1)]
+    _, i = max(gaps)
+    delta = 0.5 * (confs[i] + confs[i + 1])
+    uni = _drain(_mk(cfg, fast_p, exp_p, deltas=[delta]), prompts,
+                 arrivals=[i % 3 for i in range(len(prompts))])
+    assert uni.unified_step and all(rt.unified for rt in uni.runtimes)
+    spl = _drain(_mk(cfg, fast_p, exp_p, deltas=[delta],
+                     use_unified_step=False), prompts,
+                 arrivals=[i % 3 for i in range(len(prompts))])
+    assert not spl.unified_step
+    _check_streams(uni, spl)
+    assert {r.tier for r in uni.requests} == {0, 1}     # gate really splits
+
+
+def test_unified_matches_split_oversubscribed_arena(tiny_parts):
+    """Stalls (block exhaustion) may reorder work under the unified
+    planner but never change tokens or escalation decisions vs the split
+    engine on the same over-subscribed arena."""
+    cfg, fast_p, exp_p = tiny_parts
+    rng = np.random.default_rng(7)
+    lens = [2, 16, 7, 11, 16, 4, 9, 1]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    kw = dict(slots=4, prefill_chunk=4, kv_blocks=[12, None])
+    uni = _drain(_mk(cfg, fast_p, exp_p, **kw), prompts)
+    spl = _drain(_mk(cfg, fast_p, exp_p, use_unified_step=False, **kw),
+                 prompts)
+    _check_streams(uni, spl)
+
+
+def test_unified_gen_len_one_emits_exactly_one_token(tiny_parts):
+    """A row finishing prefill emits its first token from the mixed
+    batch; gen_len=1 requests must end there with exactly one token,
+    identical to the split and uniform one-shot paths."""
+    cfg, fast_p, exp_p = tiny_parts
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 8, 16)]
+    runs = []
+    for kw in ({}, {"use_unified_step": False}):
+        eng = _drain(_mk(cfg, fast_p, exp_p, gen_len=1, **kw), prompts)
+        assert all(len(r.tokens) == 1 for r in eng.requests)
+        runs.append(eng)
+    _check_streams(*runs)
+
+
+def test_unified_step_requires_chunked_prefill(tiny_parts):
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg, fast_p, _ = tiny_parts
+    with pytest.raises(ValueError, match="unified token-batch"):
+        CascadeEngine([TierSpec("t", cfg, fast_p)], slots=2, prompt_len=8,
+                      gen_len=2, deltas=[], use_paged_kv=False,
+                      use_unified_step=True)
+    jcfg = get_config("jamba-v0.1-52b", "smoke")    # mamba: recurrent
+    jp = init_params(jcfg, jax.random.PRNGKey(0), jnp.float32)
+    with pytest.raises(ValueError, match="unified token-batch"):
+        CascadeEngine([TierSpec("t", jcfg, jp)], slots=2, prompt_len=8,
+                      gen_len=2, deltas=[], use_unified_step=True)
+    # auto mode falls back to the split path for recurrent models
+    eng = CascadeEngine([TierSpec("t", jcfg, jp)], slots=2, prompt_len=8,
+                        gen_len=2, deltas=[])
+    assert not eng.unified_step and not eng.runtimes[0].unified
+
+
+# ---------------------------------------------------------------------------
+# one launch + one device_get per active tier per tick
+# ---------------------------------------------------------------------------
+
+
+def _one_tier_engine(**kw):
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("gemma3-1b", "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return CascadeEngine([TierSpec("t", cfg, params)], slots=4,
+                         prompt_len=32, gen_len=4, prefill_chunk=8,
+                         clock=VirtualClock(), **kw)
+
+
+def test_mixed_tick_pays_one_launch_and_one_sync():
+    """Acceptance: a tick advancing prefill chunks AND decoding must
+    execute exactly ONE compiled program and ONE device_get for the
+    tier — the whole point of unified token-batch execution (the split
+    path pays two launches on the same tick)."""
+    eng = _one_tier_engine()
+    eng.warmup()
+    assert eng.host_syncs == 0
+    eng.submit(np.arange(32, dtype=np.int32) % 7)       # 4 chunks
+    eng.step()                          # chunk 1: launch, nothing to emit
+    assert eng.metrics.launches_by_tier == [1]
+    assert eng.host_syncs == 0          # no emits -> fetch skipped
+    eng.submit(np.arange(6, dtype=np.int32) % 5)
+    eng.step()                          # long chunk 2 + short finishes
+    assert eng.metrics.launches_by_tier == [2]
+    assert eng.host_syncs == 1
+    launches, syncs = eng.metrics.launches_by_tier[0], eng.host_syncs
+    eng.step()                          # long chunk 3 + short DECODES:
+    assert eng.metrics.launches_by_tier == [launches + 1]   # one program,
+    assert eng.host_syncs == syncs + 1                      # one fetch
+    eng.run(max_steps=100)
+    assert all(len(r.tokens) == 4 for r in eng.requests)
+    s = eng.metrics.summary()
+    assert s["launches"] == [eng.metrics.launches_by_tier[0]]
+    assert s["host_syncs"] == [eng.host_syncs]
+    assert max(s["launches_per_tick"]) <= 1.0 + 1e-9
+
+
+def test_split_mixed_tick_pays_two_launches():
+    """The A/B baseline the unified path fuses away: the split backend
+    dispatches chunk_fn AND step_fn on a mixed prefill+decode tick."""
+    eng = _one_tier_engine(use_unified_step=False)
+    eng.warmup()
+    eng.submit(np.arange(32, dtype=np.int32) % 7)
+    eng.step()
+    eng.submit(np.arange(6, dtype=np.int32) % 5)
+    eng.step()                          # short finishes + same-tick decode
+    launches = eng.metrics.launches_by_tier[0]
+    eng.step()                          # long chunk + short decode: TWO
+    assert eng.metrics.launches_by_tier == [launches + 2]
+    eng.run(max_steps=100)
+
+
+# ---------------------------------------------------------------------------
+# StepPlan builder
+# ---------------------------------------------------------------------------
+
+
+def test_step_plan_records_per_row_kind_qlen_pos_shard():
+    """The plan is the tick's host-side record: a mid-prefill row carries
+    q_len=chunk at its chunk start, a decode row q_len=1 at its decode
+    position with its own token in slot 0, idle rows q_len=0 — and kind/
+    shard mirror those decisions per row."""
+    from repro.serving.engine import (KIND_DECODE, KIND_IDLE, KIND_PREFILL)
+    eng = _one_tier_engine()                # slots=4, chunk=8, plen<=32
+    eng.warmup()
+    eng.submit(np.arange(6, dtype=np.int32) % 5)        # finishes tick 1
+    eng.step()
+    eng.submit(np.arange(20, dtype=np.int32) % 7)       # 3 chunks
+    eng.step()                              # admit long; short decodes
+    rt = eng.runtimes[0]
+    plan = eng._build_plan(rt)
+    assert plan.width == rt.chunk
+    [dec] = plan.decode_rows
+    [pre] = plan.prefill_rows
+    assert plan.kind[dec] == KIND_DECODE and plan.q_len[dec] == 1
+    assert plan.tokens[dec, 0] == rt.tok[dec]
+    assert plan.pos[dec, 0] == rt.pos[dec]
+    assert plan.kind[pre] == KIND_PREFILL
+    assert plan.q_len[pre] == rt.chunk      # second chunk of the long row
+    assert plan.pos[pre, 0] == rt.prefill_pos[pre] == rt.chunk
+    assert not plan.finishing
+    idle = [s for s in range(rt.capacity) if s not in (dec, pre)]
+    assert all(plan.kind[s] == KIND_IDLE and plan.q_len[s] == 0
+               for s in idle)
+    assert all(plan.shard[s] == rt.pool.shard_of(s)
+               for s in (dec, pre))
+
+
+# ---------------------------------------------------------------------------
+# scheduler admission edges: one token currency
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, plen, arrival=0.0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32), gen_len=2,
+                   arrival_time=arrival)
+
+
+def test_scheduler_token_cost_charges_first_chunk():
+    """token_cost= lets admission bill a request's first chunk instead of
+    its whole prompt (later chunks bill later ticks' windows)."""
+    sched = CascadeScheduler([8], [])
+    for i, plen in enumerate([10, 10, 10]):
+        sched.submit(_req(i, plen))
+    got, _ = sched.admit(0, now=0.0, token_budget=9,
+                         token_cost=lambda r: min(4, r.prompt_tokens),
+                         admitted_before=0)
+    assert [r.rid for r in got] == [0, 1]       # 4+4 fits, +4 would not
+
+
+def test_scheduler_carried_load_shares_the_budget():
+    """budget_used pre-charged with the tick's decode+chunk load throttles
+    admission: prefill chunks and decode tokens are one currency."""
+    sched = CascadeScheduler([8], [])
+    for i in range(3):
+        sched.submit(_req(i, 4))
+    # carried load 6 of a 14-token budget: the first is admitted by the
+    # never-starve guard (6+4=10), the second fits exactly (10+4=14),
+    # the third would overflow (14+4 > 14)
+    got, _ = sched.admit(0, now=0.0, token_budget=14, budget_used=6,
+                         token_cost=lambda r: r.prompt_tokens,
+                         admitted_before=0)
+    assert [r.rid for r in got] == [0, 1]
+
+
+def test_scheduler_first_request_never_starves_under_carried_load():
+    """A prompt longer than the whole budget — or a window whose carried
+    decode load already exceeds it — must still admit the window's first
+    request (admitted_before=0); the legacy budget_used>0 rule would
+    starve it forever."""
+    sched = CascadeScheduler([4], [])
+    sched.submit(_req(0, 100))                  # longer than the budget
+    sched.submit(_req(1, 4))
+    got, _ = sched.admit(0, now=0.0, token_budget=16, budget_used=10,
+                         admitted_before=0)
+    assert [r.rid for r in got] == [0]          # first always admitted
+    got, _ = sched.admit(0, now=0.0, token_budget=16, budget_used=110,
+                         admitted_before=1)
+    assert got == []                            # the rest must fit
+    got, _ = sched.admit(0, now=0.0, token_budget=16, budget_used=3,
+                         admitted_before=1)
+    assert [r.rid for r in got] == [1]
+
+
+def test_scheduler_shard_pinned_admission_with_full_shard():
+    """admit(shard=) must not spill onto other shards: a full shard
+    admits nothing even while the other shard has free rows."""
+    sched = CascadeScheduler([4], [], shards_per_tier=[2])
+    for i in range(4):
+        sched.submit(_req(i, 4))
+    got, slots = sched.admit(0, now=0.0, shard=1)
+    assert [sched.allocators[0].shard_of(s) for s in slots] == [1, 1]
+    assert sched.admit(0, now=0.0, shard=1) == ([], [])     # shard 1 full
+    assert sched.peek(0, now=0.0) is not None   # head still waiting
+    got, slots = sched.admit(0, now=0.0, shard=0)
+    assert [sched.allocators[0].shard_of(s) for s in slots] == [0, 0]
+    assert sched.pending == 0
+
+
+def test_engine_budget_spans_prefill_and_decode(tiny_parts):
+    """Engine-level one-currency acceptance: rows decoding this tick
+    consume the same token budget admission draws from, so a tier
+    admits less while it decodes (the split path's prefill-only window
+    admits more)."""
+    cfg, fast_p, exp_p = tiny_parts
+
+    def occupied_per_tick(**kw):
+        eng = _mk(cfg, fast_p, exp_p, slots=6, prompt_len=8,
+                  prefill_chunk=8, prefill_token_budget=17,
+                  deltas=[-1.0], **kw)          # nothing escalates
+        rng = np.random.default_rng(0)
+        for _ in range(4):
+            eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32))
+        occ = []
+        for t in range(2):
+            eng.step(float(t))
+            eng.clock.step_done()
+            occ.append(len(eng.runtimes[0].occupied()))
+        eng.run(max_steps=200)
+        assert all(r.state is RequestState.DONE for r in eng.requests)
+        return occ
+
+    # unified: tick 0 admits two 8-token prompts (16 <= 17); tick 1
+    # carries 2 decode tokens, so only the never-starve head fits
+    # (2+8=10, +8=18 > 17) -> 3 occupied
+    assert occupied_per_tick() == [2, 3]
+    # split window ignores the decode load: both remaining admitted
+    assert occupied_per_tick(use_unified_step=False) == [2, 4]
+
+
+# ---------------------------------------------------------------------------
+# multi-device parity (subprocess, 8 simulated host devices)
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str, timeout=540):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_unified_parity_vs_split():
+    """Acceptance: on 8 simulated devices with per-tier data meshes, the
+    unified engine's token streams and escalation decisions bit-match
+    the split-path engine (sharded and single-device) for uniform and
+    lognormal prompt lengths and for an over-subscribed arena."""
+    out = _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import CascadeEngine, TierSpec
+    from repro.serving.engine import VirtualClock
+    from repro.launch.mesh import make_tier_meshes
+
+    assert jax.device_count() == 8, jax.device_count()
+    fast = get_config("gemma3-1b", "smoke")
+    exp = get_config("phi4-mini-3.8b", "smoke")
+    fp = init_params(fast, jax.random.PRNGKey(0), jnp.float32)
+    ep = init_params(exp, jax.random.PRNGKey(1), jnp.float32)
+    vocab = min(fast.vocab_size, exp.vocab_size)
+
+    def build(meshes, unified, **kw):
+        m = [None, None] if meshes is None else meshes
+        eng = CascadeEngine(
+            [TierSpec("fast", fast, fp, mesh=m[0]),
+             TierSpec("exp", exp, ep, mesh=m[1])],
+            deltas=[0.5], use_unified_step=unified,
+            clock=VirtualClock(), **kw)
+        eng.warmup()
+        return eng
+
+    def drain(eng, prompts):
+        for p in prompts:
+            eng.submit(np.asarray(p, np.int32), arrival_time=0.0)
+        eng.run(max_steps=3000)
+        return [(r.rid, tuple(r.tokens), r.tier,
+                 tuple(r.seq_conf_by_tier)) for r in eng.requests]
+
+    def check(base, other):
+        assert len(base) == len(other)
+        for a, b in zip(base, other):
+            assert a[1] == b[1], (a, b)         # bit-identical tokens
+            assert a[2] == b[2], (a, b)         # same escalation decisions
+            assert np.allclose(a[3], b[3], atol=1e-5)
+
+    rng = np.random.default_rng(7)
+    PLEN, GLEN, N = 16, 4, 8
+    uniform = [rng.integers(0, vocab, PLEN) for _ in range(N)]
+    lens = np.clip(np.rint(rng.lognormal(np.log(PLEN / 4), 0.8, N)),
+                   1, PLEN).astype(int)
+    mixed = [rng.integers(0, vocab, L) for L in lens]
+    kw = dict(slots=8, prompt_len=PLEN, gen_len=GLEN, prefill_chunk=8)
+    for prompts in (uniform, mixed):
+        meshes = make_tier_meshes([(4, 1), (4, 1)])
+        split_1dev = drain(build(None, False, **kw), prompts)
+        uni_shard = drain(build(meshes, True, **kw), prompts)
+        check(split_1dev, uni_shard)
+
+    # over-subscribed sharded arena (6 blocks/shard = one full request)
+    kw = dict(slots=8, prompt_len=PLEN, gen_len=GLEN, prefill_chunk=8,
+              kv_block_size=4, kv_blocks=24)
+    meshes = make_tier_meshes([(4, 1), (4, 1)])
+    split_1dev = drain(build(None, False, **kw), mixed)
+    uni_shard = drain(build(meshes, True, **kw), mixed)
+    check(split_1dev, uni_shard)
+    print("UNIFIED-PARITY-OK")
+    """)
+    assert "UNIFIED-PARITY-OK" in out
