@@ -11,7 +11,12 @@ prefill token ratio (the padding tax the chunked path removes) and
 per-prompt-length-bucket TTFT.  One sweep point is additionally re-run
 with ``--split-step`` and recorded as a unified-vs-split A/B pair
 (``step_ab`` in the artifact; ``benchmarks/step_launches.py`` is the
-dedicated A/B microbenchmark).
+dedicated A/B microbenchmark), and as a traced-vs-untraced A/B under a
+deterministic virtual clock (``trace_overhead``): the tracer must
+leave steps/launches/host_syncs untouched (hard error otherwise) and
+its host cost — the wall-time delta — stay within noise (<2%).
+Each sweep point also records the streaming per-gate calibration
+telemetry (confidence histograms, reliability bins, ECE).
 
     PYTHONPATH=src python -m benchmarks.serving_throughput
 
@@ -24,6 +29,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 
 REQUESTS = int(os.environ.get("REPRO_SERVE_BENCH_REQUESTS", "48"))
@@ -138,6 +144,10 @@ def main() -> None:
                     sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
                 "kv_dense_equiv_bytes_total":
                     sum(t["dense_equiv_bytes"] for t in s["kv_arena"]),
+                # streaming gate calibration (conf/esc histograms,
+                # reliability bins, ECE against the escalation-outcome
+                # agreement proxy — see docs/serving.md)
+                "gate_calibration": s["gate_calibration"],
                 "wall_s": time.time() - t0,
             })
             print(f"dist={dist} rate={rate}: "
@@ -183,6 +193,44 @@ def main() -> None:
               f"{[round(x, 3) for x in r['host_syncs_per_tick']]}, "
               f"throughput {r['throughput']:.2f} req/s", flush=True)
 
+    # traced-vs-untraced A/B at the same representative point: tracing
+    # must be observational.  Both arms run under a VirtualClock so the
+    # workload is tick-deterministic — identical steps, launches, and
+    # host sync counts are then exact requirements (enforced here and
+    # test-asserted in tests/test_observability.py), and the tracer's
+    # host cost shows up purely as wall-time overhead.
+    from repro.serving.engine import VirtualClock
+
+    trace_overhead = {"length_dist": ab_dist, "rate": RATES[0]}
+    trace_path = os.path.join(tempfile.gettempdir(),
+                              "serving_throughput_trace.json")
+    for arm, extra in (("untraced", []),
+                       ("traced", ["--trace-out", trace_path])):
+        args = serve_async.make_parser().parse_args(
+            base_argv(ab_dist, RATES[0]) + extra)
+        t0 = time.time()
+        s = serve_async.run(args, VirtualClock())
+        rec = dict(launch_stats(s), throughput=s["throughput"],
+                   latency_p50=s["latency_p50"],
+                   wall_s=time.time() - t0)
+        if arm == "traced":
+            rec["trace_events"] = s["trace_events"]
+            rec["trace_dropped"] = s["trace_dropped"]
+        trace_overhead[arm] = rec
+    for key in ("steps", "launches", "host_syncs", "host_syncs_per_tick"):
+        if trace_overhead["traced"][key] != trace_overhead["untraced"][key]:
+            raise RuntimeError(
+                f"tracing changed {key}: "
+                f"{trace_overhead['traced'][key]} traced vs "
+                f"{trace_overhead['untraced'][key]} untraced")
+    w_un = trace_overhead["untraced"]["wall_s"]
+    w_tr = trace_overhead["traced"]["wall_s"]
+    trace_overhead["wall_overhead_pct"] = 100.0 * (w_tr - w_un) / w_un
+    print(f"trace A/B: untraced {w_un:.2f}s, traced {w_tr:.2f}s wall "
+          f"({trace_overhead['wall_overhead_pct']:+.2f}% overhead, "
+          f"{trace_overhead['traced']['trace_events']} events, "
+          f"host syncs/launches/steps identical)", flush=True)
+
     bench = {
         "bench": "serving_throughput",
         "slots": SLOTS,
@@ -193,6 +241,7 @@ def main() -> None:
         "env": environment(),
         "points": points,
         "step_ab": step_ab,
+        "trace_overhead": trace_overhead,
         "flops_saving_vs_always_expensive": [
             1.0 - p["flops_per_request_cascade"]
             / p["flops_per_request_always_expensive"] for p in points],

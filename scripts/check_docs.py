@@ -52,7 +52,9 @@ def find_refs(text: str) -> List[Tuple[int, str, Optional[str]]]:
             # skip URLs (http://host/x.py) and glob patterns (docs/*.md)
             if prefix.rstrip().endswith(("://", "/")) and "://" in prefix:
                 continue
-            if start >= 1 and line[start - 1] in "*$":
+            # skip glob/shell-var prefixes (*$) and absolute paths
+            # (/tmp/trace.json — an output placeholder, not a repo ref)
+            if start >= 1 and line[start - 1] in "*$/":
                 continue
             refs.append((lineno, m.group("path"), m.group("symbol")))
     return refs

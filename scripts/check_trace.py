@@ -1,0 +1,175 @@
+"""Chrome-trace-event schema validator for serving timelines.
+
+``serve_async --trace-out trace.json`` emits a Chrome trace (the JSON
+object format Perfetto loads); a malformed trace fails *silently* — the
+viewer just renders nothing, or drops the broken track.  This script
+checks the invariants the tracer promises, so CI catches a regression
+before a human stares at an empty timeline:
+
+  * top level: object with a ``traceEvents`` list
+  * every event has ``name``/``ph``/``pid``/``tid`` and (except metadata
+    ``M`` events) a numeric ``ts``
+  * ``X`` complete events carry ``dur >= 0`` and nest properly per
+    (pid, tid) track: a span never half-overlaps an enclosing span
+  * ``b``/``e`` async events pair up per (cat, id): every ``e`` closes
+    an open ``b``, no ``b`` left dangling, and each pair's track is
+    consistent
+  * per (pid, tid) track, ``X`` event start times are monotonic
+    (non-decreasing) — the ring buffer must preserve emission order
+  * ``C`` counter events carry numeric sample values in ``args``
+  * ``M`` metadata events are ``process_name``/``thread_name``/
+    ``process_sort_index`` with the matching ``args`` payload
+
+Run it directly::
+
+    python scripts/check_trace.py trace.json [more.json ...]
+
+Exit status 0 when every file validates, 1 otherwise (one line per
+violation, capped per file).  Wired into CI as a smoke on a sharded
+serve_async run (.github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# metadata events Perfetto understands (the tracer only emits the
+# first two; the rest are legal Chrome trace vocabulary)
+META_NAMES = {"process_name", "thread_name", "process_sort_index",
+              "thread_sort_index", "process_labels"}
+MAX_ERRORS_PER_FILE = 20
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def validate_events(events: list) -> List[str]:
+    """All schema violations in a traceEvents list (empty = valid)."""
+    errors: List[str] = []
+    # open X spans per (pid, tid), as a stack of (start, end) intervals
+    x_stacks: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
+    last_x_ts: Dict[Tuple[int, int], float] = {}
+    open_async: Dict[Tuple[str, str], List[dict]] = {}
+
+    for i, ev in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        name = ev.get("name")
+        where = f"event {i} ({ph!r} {name!r})"
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                errors.append(f"{where}: missing {key!r}")
+        if ph == "M":
+            if name not in META_NAMES:
+                errors.append(f"{where}: unknown metadata event")
+            elif name.endswith("_name") \
+                    and not isinstance(ev.get("args", {}).get("name"), str):
+                errors.append(f"{where}: metadata args.name missing")
+            continue
+        ts = ev.get("ts")
+        if not _is_num(ts):
+            errors.append(f"{where}: non-numeric ts {ts!r}")
+            continue
+        track = (ev.get("pid"), ev.get("tid"))
+
+        if ph == "X":
+            dur = ev.get("dur")
+            if not _is_num(dur) or dur < 0:
+                errors.append(f"{where}: X event needs dur >= 0, "
+                              f"got {dur!r}")
+                continue
+            if ts < last_x_ts.get(track, float("-inf")):
+                errors.append(f"{where}: ts {ts} before previous X start "
+                              f"{last_x_ts[track]} on track {track}")
+            last_x_ts[track] = ts
+            # nesting: pop finished spans, then check containment
+            stack = x_stacks.setdefault(track, [])
+            while stack and stack[-1][1] <= ts:
+                stack.pop()
+            if stack and ts + dur > stack[-1][1]:
+                errors.append(
+                    f"{where}: span [{ts}, {ts + dur}] half-overlaps "
+                    f"enclosing span ending {stack[-1][1]} on {track}")
+            stack.append((ts, ts + dur))
+        elif ph in ("b", "e"):
+            if "id" not in ev:
+                errors.append(f"{where}: async event missing id")
+                continue
+            key = (str(ev.get("cat", "")), str(ev["id"]))
+            if ph == "b":
+                open_async.setdefault(key, []).append(ev)
+            else:
+                stack = open_async.get(key)
+                if not stack:
+                    errors.append(f"{where}: 'e' with no open 'b' "
+                                  f"for (cat, id)={key}")
+                else:
+                    stack.pop()
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args \
+                    or not all(_is_num(v) for v in args.values()):
+                errors.append(f"{where}: counter needs numeric args")
+        elif ph == "i":
+            pass  # instant: name/ph/ts/pid/tid already checked
+        else:
+            errors.append(f"{where}: unsupported phase {ph!r}")
+
+    for key, stack in open_async.items():
+        if stack:
+            errors.append(f"(cat, id)={key}: {len(stack)} async 'b' "
+                          f"event(s) never closed by 'e'")
+    return errors
+
+
+def validate_trace(trace: dict) -> List[str]:
+    """Violations in a full trace object (``traceEvents`` + metadata)."""
+    if not isinstance(trace, dict):
+        return ["top level: trace must be a JSON object"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["top level: missing traceEvents list"]
+    errors = validate_events(events)
+    if not events:
+        errors.append("top level: traceEvents is empty")
+    return errors
+
+
+def check_file(path: str) -> List[str]:
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    return validate_trace(trace)
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python scripts/check_trace.py trace.json [...]")
+        return 1
+    bad = 0
+    for path in argv:
+        errors = check_file(path)
+        if errors:
+            bad += 1
+            for e in errors[:MAX_ERRORS_PER_FILE]:
+                print(f"{path}: {e}")
+            if len(errors) > MAX_ERRORS_PER_FILE:
+                print(f"{path}: ... {len(errors) - MAX_ERRORS_PER_FILE} "
+                      f"more violations")
+        else:
+            n = 0
+            with open(path) as f:
+                n = len(json.load(f)["traceEvents"])
+            print(f"{path}: ok ({n} events)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -35,8 +35,18 @@ the single-device engine.
 
 Reports p50/p95 latency, time-to-first-token (overall and per
 prompt-length bucket), throughput, per-tier utilization, escalation
-rate, live-vs-processed prefill token ratio, and Eq 7 FLOPs/request vs
-the always-fast / always-expensive envelopes.
+rate, per-gate streaming calibration (ECE + cheap-vs-expensive
+agreement over escalation outcomes), live-vs-processed prefill token
+ratio, and Eq 7 FLOPs/request vs the always-fast / always-expensive
+envelopes.
+
+Observability: ``--trace-out trace.json`` records every request's
+lifecycle (QUEUED -> PREFILL -> DECODE -> ESCALATED -> DONE) and every
+tick's engine phases (admit / plan / launch / device_get / gate /
+finish) as a Chrome-trace timeline loadable at https://ui.perfetto.dev;
+``--metrics-interval 5`` prints a streaming snapshot line every 5
+engine-clock seconds; ``--jax-profile DIR`` captures a jax.profiler
+trace with named per-tier launch annotations.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -51,8 +61,9 @@ from repro.configs import get_config
 from repro.data import bigram_lm
 from repro.models import init_params
 from repro.launch.mesh import make_tier_meshes
-from repro.serving import CascadeEngine, TierSpec
+from repro.serving import CascadeEngine, TierSpec, Tracer
 from repro.serving.engine import VirtualClock, WallClock
+from repro.serving.observability import profile_window
 
 
 def parse_mesh_shape(s: str):
@@ -75,7 +86,7 @@ def tier_meshes(args, num_tiers: int):
     return make_tier_meshes(shapes)
 
 
-def build_engine(args, clock=None):
+def build_engine(args, clock=None, tracer=None):
     fast_cfg = get_config(args.fast, args.variant)
     exp_cfg = get_config(args.expensive, args.variant)
     fast_params = init_params(fast_cfg, jax.random.PRNGKey(args.seed),
@@ -101,7 +112,10 @@ def build_engine(args, clock=None):
         prefill_token_budget=args.prefill_token_budget,
         use_unified_step=False if getattr(args, "split_step", False)
         else None,
-        clock=clock if clock is not None else WallClock(), **gate_kw)
+        clock=clock if clock is not None else WallClock(),
+        tracer=tracer,
+        profile_annotations=bool(getattr(args, "jax_profile", None)),
+        **gate_kw)
     return engine, min(fast_cfg.vocab_size, exp_cfg.vocab_size)
 
 
@@ -135,8 +149,21 @@ def sample_lengths(dist: str, n: int, max_len: int, min_len: int,
     return np.clip(np.rint(lens), min_len, max_len).astype(np.int64)
 
 
+def snapshot_line(snap: dict) -> str:
+    """One-line periodic progress record (``--metrics-interval``)."""
+    esc = "/".join(f"{r:.2f}" for r in snap["escalation_rates"])
+    ece = "/".join("-" if np.isnan(e) else f"{e:.3f}"
+                   for e in snap["gate_ece"])
+    return (f"[t={snap['t']:.1f}] completed {snap['completed']}"
+            f"/{snap['requests']}  steps {snap['steps']}  "
+            f"esc [{esc}]  gate ece [{ece}]  "
+            f"tick p50 {snap['tick_duration_p50']:.4f}")
+
+
 def run(args, clock=None) -> dict:
-    engine, vocab = build_engine(args, clock)
+    tracer = (Tracer(capacity=args.trace_ring)
+              if getattr(args, "trace_out", None) else None)
+    engine, vocab = build_engine(args, clock, tracer)
     # catches explicit flags AND the engine's auto-fallback to uniform
     # prefill (recurrent-state / frontend tiers, dense arena)
     if args.length_dist != "uniform" and not engine.chunked_prefill:
@@ -156,7 +183,20 @@ def run(args, clock=None) -> dict:
     engine.warmup()
     for p, n, t in zip(prompts, lengths, arrivals):
         engine.submit(p[:int(n)], arrival_time=float(t))
-    summary = engine.run()
+    interval = getattr(args, "metrics_interval", None)
+    on_snap = ((lambda s: print(snapshot_line(s)))
+               if interval is not None else None)
+    profile_dir = getattr(args, "jax_profile", None)
+    with profile_window(profile_dir):
+        summary = engine.run(metrics_interval=interval,
+                             on_snapshot=on_snap)
+    trace_out = getattr(args, "trace_out", None)
+    if trace_out:
+        n_events = tracer.export(trace_out)
+        summary["trace_events"] = n_events
+        summary["trace_dropped"] = tracer.dropped
+        print(f"wrote {n_events} trace events to {trace_out}"
+              + (f" ({tracer.dropped} dropped)" if tracer.dropped else ""))
     summary["rate"] = args.rate
     # realized offered load: completions can never beat this in an
     # open-loop run (makespan >= arrival span), a sanity bound on
@@ -224,6 +264,16 @@ def report(s: dict) -> None:
     target = ("" if s.get("escalation_budget") is None
               else f" (budget target {s['escalation_budget']:.3f})")
     print(f"  escalation rate [{rates}] at δ=[{deltas}]{target}")
+    cal = s.get("gate_calibration") or []
+    if cal:
+        # streaming calibration against the escalation-outcome proxy
+        # (cheap-vs-expensive token agreement on escalated traffic)
+        def _f(x, spec=".3f"):
+            return "-" if x is None or np.isnan(x) else format(x, spec)
+        print("  gate calibration "
+              + "  ".join(f"g{g['gate']}: ece {_f(g['ece'])} "
+                          f"agree {_f(g['agreement_rate'], '.2f')} "
+                          f"({g['outcomes']} outcomes)" for g in cal))
     print(f"  Eq7 FLOPs/request: cascade {s['flops_per_request_cascade']:.3e} "
           f"(always-fast {s['flops_per_request_always_fast']:.3e}, "
           f"always-expensive {s['flops_per_request_always_expensive']:.3e})")
@@ -294,6 +344,23 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="also write the summary dict to this path")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON timeline of "
+                         "the run: per-request lifecycle spans and "
+                         "per-tick engine phases (load at ui.perfetto.dev)")
+    ap.add_argument("--trace-ring", type=int, default=1 << 18,
+                    help="trace ring-buffer capacity in events; oldest "
+                         "events drop first (dropped count is reported)")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="SEC",
+                    help="print a streaming metrics snapshot (completions, "
+                         "escalation, gate ECE, tick p50) every SEC "
+                         "engine-clock seconds")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the serving loop "
+                         "into DIR (adds named run_mixed/run_chunk/"
+                         "run_step annotations; view in TensorBoard or "
+                         "Perfetto)")
     ap.add_argument("--virtual-clock", action="store_true",
                     help="deterministic 1-tick-per-step clock (arrival "
                          "times are then in ticks, not seconds)")

@@ -9,10 +9,15 @@ and escalation queues feeding the expensive members as packed sub-batches.
     fixed-size blocks + per-request page tables)
   * :mod:`repro.serving.scheduler` — continuous batching + escalation queues
   * :mod:`repro.serving.metrics`   — latency/throughput/Eq 7 accounting
+  * :mod:`repro.serving.observability` — request/tick tracer (Perfetto
+    export), streaming gate-calibration telemetry (ECE + reliability),
+    jax-profiler hooks
   * :mod:`repro.serving.engine`    — CascadeEngine tying tiers together
 """
 from repro.serving.engine import CascadeEngine, TierSpec  # noqa: F401
 from repro.serving.metrics import ServingMetrics  # noqa: F401
+from repro.serving.observability import (GateCalibration,  # noqa: F401
+                                         ReliabilityBins, Tracer)
 from repro.serving.request import Request, RequestState  # noqa: F401
 from repro.serving.scheduler import (CascadeScheduler, GateSpec)  # noqa: F401
 from repro.serving.slots import (BlockAllocator, DenseTierSlotPool,  # noqa: F401
@@ -21,5 +26,6 @@ from repro.serving.slots import (BlockAllocator, DenseTierSlotPool,  # noqa: F40
 __all__ = [
     "CascadeEngine", "TierSpec", "ServingMetrics", "Request", "RequestState",
     "CascadeScheduler", "GateSpec", "SlotAllocator", "BlockAllocator",
-    "TierSlotPool", "DenseTierSlotPool",
+    "TierSlotPool", "DenseTierSlotPool", "Tracer", "GateCalibration",
+    "ReliabilityBins",
 ]

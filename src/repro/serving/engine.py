@@ -77,6 +77,7 @@ from repro.models import cache as cache_lib
 from repro.models import params as params_lib
 from repro.models import sharding as sharding_lib
 from repro.models import transformer
+from repro.serving import observability as obs
 from repro.serving.metrics import ServingMetrics, TierCost
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import CascadeScheduler, GateSpec
@@ -407,6 +408,8 @@ class CascadeEngine:
                  prefill_chunk: int = 128,
                  prefill_token_budget: Optional[int] = None,
                  use_unified_step: Optional[bool] = None,
+                 tracer: Optional[obs.Tracer] = None,
+                 profile_annotations: bool = False,
                  clock=None):
         """``use_paged_kv`` selects the block-paged KV arena + Pallas
         paged flash-decode kernel (interpret mode off-TPU); False keeps
@@ -443,7 +446,19 @@ class CascadeEngine:
         already occupies.  ``use_unified_step=False`` is the split-path
         escape hatch (legacy ``chunk_fn`` + ``step_fn``, two launches on
         mixed ticks) — the A/B baseline; token streams are bit-identical
-        between the two."""
+        between the two.
+
+        ``tracer`` attaches a :class:`repro.serving.observability.Tracer`:
+        the engine then records per-request lifecycle spans and per-tick
+        phase events (admit / plan / launch / device_get / finish) into
+        its ring buffer for Chrome-trace export.  ``tracer=None``
+        (default) is zero-cost — every trace call site is guarded, no
+        event objects are built, and no extra host syncs happen either
+        way (events only use values the tick already fetched;
+        test-asserted).  ``profile_annotations`` additionally wraps each
+        tick in ``jax.profiler.StepTraceAnnotation`` (step_num = tick
+        id) and each launch in a named ``TraceAnnotation`` so an opt-in
+        device-profiler window correlates with the host tracer."""
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers = list(tiers)
@@ -502,12 +517,27 @@ class CascadeEngine:
         # data shards; admission targets the shard whose block pool can
         # take the request (validated against slots in _TierRuntime)
         shards_per_tier = [t.data_shards() for t in self.tiers]
-        self.scheduler = CascadeScheduler(slots_per_tier, gates,
-                                          shards_per_tier)
         self.metrics = ServingMetrics(
             [TierCost(t.name, t.flops_per_request(gen_len))
              for t in self.tiers], slots_per_tier)
+        # the scheduler streams every gate decision into the metrics'
+        # calibration telemetry; the engine streams escalation outcomes
+        self.scheduler = CascadeScheduler(
+            slots_per_tier, gates, shards_per_tier,
+            calibration=self.metrics.calibration)
         self.clock = clock if clock is not None else WallClock()
+        self.tracer = tracer
+        self.profile_annotations = bool(profile_annotations)
+        self.tick_id = 0
+        if tracer is not None:
+            tracer.name_process(obs.ENGINE_PID, "engine ticks")
+            # tid layout on the engine pid: one lane per tier, plus a
+            # whole-tick umbrella lane at tid = num_tiers
+            tracer.name_track(obs.ENGINE_PID, len(self.tiers), "tick")
+            for i, t in enumerate(self.tiers):
+                tracer.name_track(obs.ENGINE_PID, i, f"tier{i} {t.name}")
+                tracer.name_process(obs.REQUEST_PID_BASE + i,
+                                    f"requests tier{i} {t.name}")
         max_seq = prompt_len + gen_len
         if use_paged_kv:
             ppr = math.ceil(max_seq / kv_block_size)
@@ -558,6 +588,9 @@ class CascadeEngine:
         self._rid += 1
         self.requests.append(req)
         self.scheduler.submit(req)
+        if self.tracer is not None:
+            self.tracer.request_transition(
+                req.rid, "QUEUED", 0, prompt_tokens=req.prompt_tokens)
         return req
 
     # -- one engine tick ---------------------------------------------------
@@ -565,10 +598,18 @@ class CascadeEngine:
     def _fetch(self, tier: int, tree):
         """The tick's blocking device->host transfer (counted overall and
         per tier: the sync-coalescing tests assert a mixed prefill+decode
-        tick pays exactly one of these per active tier)."""
+        tick pays exactly one of these per active tier).  Traced as the
+        ``device_get`` phase — its duration is where device compute the
+        host must wait for shows up on the timeline."""
         self.host_syncs += 1
         self.metrics.record_host_sync(tier)
-        return jax.device_get(tree)
+        tr = self.tracer
+        if tr is None:
+            return jax.device_get(tree)
+        t0 = tr.now_us()
+        out = jax.device_get(tree)
+        tr.phase("device_get", tier, t0, tick=self.tick_id)
+        return out
 
     def _pick_shard(self, tier: int, rt: _TierRuntime,
                     ntokens: int) -> Optional[int]:
@@ -587,7 +628,25 @@ class CascadeEngine:
                 best, best_free = s, free
         return best
 
+    def _trace_req(self, req: Request, state: str,
+                   tier: int, shard: Optional[int]) -> None:
+        if self.tracer is not None:
+            self.tracer.request_transition(req.rid, state, tier, shard,
+                                           tick=self.tick_id)
+
     def _admit(self, tier: int, now: float) -> None:
+        """Admission, traced as the tick's ``admit`` phase (both the
+        leading and the trailing pass emit one event each)."""
+        tr = self.tracer
+        if tr is None:
+            return self._admit_requests(tier, now)
+        t0 = tr.now_us()
+        before = self.metrics.tier_requests[tier]
+        self._admit_requests(tier, now)
+        tr.phase("admit", tier, t0, tick=self.tick_id,
+                 admitted=self.metrics.tier_requests[tier] - before)
+
+    def _admit_requests(self, tier: int, now: float) -> None:
         rt = self.runtimes[tier]
         if rt.chunked:
             # mixed-length admission: bind rows one at a time, bounded by
@@ -629,6 +688,7 @@ class CascadeEngine:
                              row_tokens=plen + self.gen_len)
                 rt.slot_req[slot] = req
                 rt.prefill_pos[slot] = 0
+                self._trace_req(req, "PREFILL", tier, shard)
                 self._budget_used[tier] += (min(rt.chunk, plen)
                                             if rt.unified else plen)
                 self._admitted[tier] += 1
@@ -663,7 +723,14 @@ class CascadeEngine:
         prompts = np.zeros((rt.capacity, self.prompt_len), np.int32)
         for i, req in enumerate(reqs):
             prompts[i] = req.prompt
-        part_cache, ftok, fconf = rt.run_prefill(prompts)
+        tr = self.tracer
+        t0 = tr.now_us() if tr is not None else 0.0
+        with obs.annotation(f"run_prefill/{rt.spec.name}",
+                            self.profile_annotations):
+            part_cache, ftok, fconf = rt.run_prefill(prompts)
+        if tr is not None:
+            tr.phase("launch", tier, t0, tick=self.tick_id, kind="prefill",
+                     width=self.prompt_len)
         self.metrics.record_launches(tier, 1)
         rt.pool.write_prefill(slot_ids, part_cache)
         # one blocking transfer for both outputs (device_get blocks until
@@ -676,7 +743,10 @@ class CascadeEngine:
         ftok, fconf = self._fetch(tier, (ftok, fconf))
         t_emit = self.clock.now()
         for i, (req, slot) in enumerate(zip(reqs, slot_ids)):
-            req.start_decode()
+            shard = rt.pool.shard_of(slot) if rt.paged else None
+            self._trace_req(req, "PREFILL", tier, shard)
+            req.start_decode(t_emit)
+            self._trace_req(req, "DECODE", tier, shard)
             req.emit(int(ftok[i]), float(fconf[i]), t_emit)
             rt.slot_req[slot] = req
             rt.tok[slot] = ftok[i]
@@ -774,7 +844,18 @@ class CascadeEngine:
         by the unified or split backend.  Returns the number of decode
         tokens emitted (the occupancy metric)."""
         rt = self.runtimes[tier]
-        plan = self._build_plan(rt)
+        tr = self.tracer
+        if tr is None:
+            plan = self._build_plan(rt)
+        else:
+            t0 = tr.now_us()
+            plan = self._build_plan(rt)
+            if plan is not None:
+                tr.phase("plan", tier, t0, tick=self.tick_id,
+                         width=plan.width,
+                         prefill_rows=len(plan.prefill_rows),
+                         decode_rows=len(plan.decode_rows),
+                         stalled=int((plan.kind == KIND_STALL).sum()))
         if plan is None:
             return 0
         if rt.unified:
@@ -794,8 +875,17 @@ class CascadeEngine:
         where every live row stalled skip the launch too."""
         if not plan.prefill_rows and not plan.decode_rows:
             return 0                    # every live row stalled
-        tok, conf, rt.pool.cache = rt.run_mixed(plan.tokens, plan.pos,
-                                                plan.q_len)
+        tr = self.tracer
+        t0 = tr.now_us() if tr is not None else 0.0
+        with obs.annotation(f"run_mixed/{rt.spec.name}",
+                            self.profile_annotations):
+            tok, conf, rt.pool.cache = rt.run_mixed(plan.tokens, plan.pos,
+                                                    plan.q_len)
+        if tr is not None:
+            # async dispatch: this phase is host-side launch cost (incl.
+            # put_rows transfers); device wait shows under device_get
+            tr.phase("launch", tier, t0, tick=self.tick_id, kind="mixed",
+                     width=plan.width)
         self.metrics.record_launches(tier, 1)
         if plan.prefill_rows:
             self.metrics.record_prefill_tokens(plan.live_prefill_tokens,
@@ -804,9 +894,11 @@ class CascadeEngine:
         # stay unfetched until something must be emitted
         for s in plan.prefill_rows:
             rt.prefill_pos[s] += int(plan.q_len[s])
+        t_dec = self.clock.now()
         for s in plan.finishing:
             req = rt.slot_req[s]
-            req.start_decode()
+            req.start_decode(t_dec)
+            self._trace_req(req, "DECODE", tier, int(plan.shard[s]))
             rt.pos[s] = req.prompt_tokens   # next decode writes here
         if not plan.finishing and not plan.decode_rows:
             return 0                    # mid-prompt chunks only: no emits
@@ -831,17 +923,26 @@ class CascadeEngine:
         both result pairs.  Two compiled programs on mixed ticks, which
         is exactly what the unified backend fuses away."""
         pf = None
+        tr = self.tracer
         if plan.prefill_rows:
-            tok, conf, rt.pool.cache = rt.run_chunk(plan.tokens, plan.pos,
-                                                    plan.q_len)
+            t0 = tr.now_us() if tr is not None else 0.0
+            with obs.annotation(f"run_chunk/{rt.spec.name}",
+                                self.profile_annotations):
+                tok, conf, rt.pool.cache = rt.run_chunk(
+                    plan.tokens, plan.pos, plan.q_len)
+            if tr is not None:
+                tr.phase("launch", tier, t0, tick=self.tick_id,
+                         kind="chunk", width=plan.width)
             self.metrics.record_launches(tier, 1)
             self.metrics.record_prefill_tokens(plan.live_prefill_tokens,
                                                rt.capacity * plan.width)
             for s in plan.prefill_rows:
                 rt.prefill_pos[s] += int(plan.q_len[s])
+            t_dec = self.clock.now()
             for s in plan.finishing:
                 req = rt.slot_req[s]
-                req.start_decode()
+                req.start_decode(t_dec)
+                self._trace_req(req, "DECODE", tier, int(plan.shard[s]))
                 rt.pos[s] = req.prompt_tokens   # next decode writes here
             pf = {"tok": tok, "conf": conf, "finished": plan.finishing}
         dc = self._decode_launch(tier, rt, pf)
@@ -911,27 +1012,62 @@ class CascadeEngine:
         # rows mid-prefill share the fused decode batch but must not touch
         # their (bound, partially-filled) pages: mask them to the null
         # block in the decode step's page-table copy
-        nxt, conf, rt.pool.cache = rt.run_step(
-            tok_in, mask_rows=rt.prefilling())
+        tr = self.tracer
+        t0 = tr.now_us() if tr is not None else 0.0
+        with obs.annotation(f"run_step/{rt.spec.name}",
+                            self.profile_annotations):
+            nxt, conf, rt.pool.cache = rt.run_step(
+                tok_in, mask_rows=rt.prefilling())
+        if tr is not None:
+            tr.phase("launch", tier, t0, tick=self.tick_id, kind="decode",
+                     width=1)
         self.metrics.record_launches(tier, 1)
         return {"active": active, "tok": nxt, "conf": conf}
 
     def _finish(self, tier: int, now: float) -> None:
+        """Gate finished rows, traced as the tick's ``finish`` phase;
+        completed *escalated* requests additionally stream their
+        escalation outcomes (did the tiers' answers agree?) into the
+        calibration telemetry."""
+        tr = self.tracer
+        if tr is None:
+            self._finish_requests(tier, now)
+            return
+        t0 = tr.now_us()
+        done, esc = self._finish_requests(tier, now)
+        tr.phase("finish", tier, t0, tick=self.tick_id,
+                 completed=done, escalated=esc)
+
+    def _finish_requests(self, tier: int, now: float):
         rt = self.runtimes[tier]
         last = tier == len(self.tiers) - 1
+        done = esc = 0
         for slot in rt.occupied():
             req = rt.slot_req[slot]
             if not (req.state is RequestState.DECODE and req.decode_finished):
                 continue
             seq_conf = req.gate(self.conf_reduce)
             if not last and self.scheduler.gate_decision(tier, seq_conf):
-                req.escalate()
+                req.escalate(now)
                 self.scheduler.push_escalated(req)
+                # span on the *next* tier's track: queued for escalation
+                self._trace_req(req, "ESCALATED", tier + 1, None)
+                esc += 1
             else:
                 # post-compute time: the final decode step belongs to this
                 # request's latency (`now` was sampled at step start)
                 req.complete(self.clock.now())
                 self.metrics.record_completion(req)
+                if req.tier > 0:
+                    # escalation outcome: the expensive tier's answer is
+                    # in; stream agreement into the reliability bins
+                    self.metrics.record_gate_outcomes(req)
+                if self.tracer is not None:
+                    self.tracer.request_done(
+                        req.rid, tier,
+                        rt.pool.shard_of(slot) if rt.paged else None,
+                        tick=self.tick_id)
+                done += 1
             rt.slot_req[slot] = None
             rt.tok[slot] = 0
             rt.pos[slot] = 0
@@ -939,9 +1075,13 @@ class CascadeEngine:
             if rt.paged:
                 rt.pool.release(slot)
             self.scheduler.release(tier, slot)
+        return done, esc
 
     def step(self, now: Optional[float] = None) -> None:
         now = self.clock.now() if now is None else now
+        self.tick_id += 1
+        tr = self.tracer
+        tick_t0 = tr.now_us() if tr is not None else 0.0
         # open each tier's token-budget window: unified tiers pre-charge
         # the tick's carried decode+chunk load (one currency), split
         # tiers start the legacy prefill-only window at zero
@@ -950,15 +1090,27 @@ class CascadeEngine:
             for rt in self.runtimes]
         self._admitted = [0] * len(self.tiers)
         active = []
-        for tier in range(len(self.tiers)):
-            self._admit(tier, now)
-            active.append(self._tier_step(tier, now))
-            self._finish(tier, now)
-        # Trailing admission pass: requests escalated this tick enter the
-        # next tier's slots immediately (their decode starts next tick),
-        # keeping the invariant `free slot => empty queue` at tick ends.
-        for tier in range(len(self.tiers)):
-            self._admit(tier, now)
+        # StepTraceAnnotation(step_num=tick_id): the join key between an
+        # opt-in jax-profiler device trace and the host tracer's events
+        with obs.step_annotation(self.tick_id, self.profile_annotations):
+            for tier in range(len(self.tiers)):
+                self._admit(tier, now)
+                active.append(self._tier_step(tier, now))
+                self._finish(tier, now)
+            # Trailing admission pass: requests escalated this tick enter
+            # the next tier's slots immediately (their decode starts next
+            # tick), keeping the invariant `free slot => empty queue` at
+            # tick ends.
+            for tier in range(len(self.tiers)):
+                self._admit(tier, now)
+        if tr is not None:
+            for t, rt in enumerate(self.runtimes):
+                tr.counter(f"queue depth/{rt.spec.name}",
+                           len(self.scheduler.queues[t]), tid=t)
+                tr.counter(f"live rows/{rt.spec.name}",
+                           len(rt.occupied()), tid=t)
+            tr.phase("tick", len(self.tiers), tick_t0, tick=self.tick_id,
+                     t_engine=now)
         self.metrics.record_step(active, now)
         self.metrics.sync_gate_stats(self.scheduler.gate_stats)
 
@@ -1039,9 +1191,19 @@ class CascadeEngine:
                     rt.put_rows(zeros), rt.page_table_device())
         self.reset_clock()
 
-    def run(self, max_steps: int = 1_000_000) -> dict:
-        """Drive to completion; returns ``metrics.summary()``."""
+    def run(self, max_steps: int = 1_000_000, *,
+            metrics_interval: Optional[float] = None,
+            on_snapshot=None) -> dict:
+        """Drive to completion; returns ``metrics.summary()``.
+
+        ``metrics_interval`` emits a :meth:`ServingMetrics.snapshot`
+        dict to ``on_snapshot`` every that-many clock units (seconds, or
+        ticks under a VirtualClock) — the streaming view of escalation
+        rate, per-gate ECE, and agreement the ``--metrics-interval``
+        CLI flag prints as one line per window."""
         steps = 0
+        next_snap = (self.clock.now() + metrics_interval
+                     if metrics_interval else None)
         while not self._done():
             now = self.clock.now()
             if not self._any_occupied() and not any(
@@ -1057,6 +1219,10 @@ class CascadeEngine:
             self.step(self.clock.now())
             self.clock.step_done()
             steps += 1
+            if next_snap is not None and self.clock.now() >= next_snap:
+                if on_snapshot is not None:
+                    on_snapshot(self.metrics.snapshot(self.clock.now()))
+                next_snap = self.clock.now() + metrics_interval
             if steps > max_steps:
                 raise RuntimeError("engine did not drain (scheduler stuck?)")
         return self.metrics.summary()

@@ -17,6 +17,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.server import GateStats, ServerStats
+# canonical definition lives in observability (shared with the
+# calibration telemetry); re-exported here for its historical home
+from repro.serving.observability import GateCalibration, length_bucket  # noqa: F401
 from repro.serving.request import Request
 
 
@@ -24,16 +27,6 @@ def percentile(values: Sequence[float], q: float) -> float:
     if not values:
         return float("nan")
     return float(np.percentile(np.asarray(values, np.float64), q))
-
-
-def length_bucket(n: int) -> str:
-    """Power-of-two prompt-length bucket label ("1", "2", "3-4", "5-8",
-    "9-16", ...)."""
-    hi = 1
-    while hi < n:
-        hi *= 2
-    lo = hi // 2 + 1
-    return str(hi) if lo >= hi else f"{lo}-{hi}"
 
 
 @dataclass
@@ -68,6 +61,15 @@ class ServingMetrics:
         # split path pays two launches on mixed prefill+decode ticks)
         self.launches_by_tier = [0] * len(tiers)
         self.host_syncs_by_tier = [0] * len(tiers)
+        # streaming gate-calibration telemetry: per-gate confidence
+        # histograms + reliability bins fed by escalation outcomes
+        # (scheduler records decisions, engine records outcomes)
+        self.calibration = GateCalibration(n_gates)
+        # per-tick wall-time intervals (the engine passes each tick's
+        # clock reading to record_step; consecutive deltas feed the
+        # tick-duration histogram in summary())
+        self.tick_durations: List[float] = []
+        self._last_step_time: Optional[float] = None
         self.steps = 0
         # throughput window: first arrival -> last completion (makespan),
         # not first->last engine step (zero for single-step runs)
@@ -86,6 +88,23 @@ class ServingMetrics:
         self.steps += 1
         for t, n in enumerate(active_per_tier):
             self.busy_slot_steps[t] += n
+        # per-tick wall-time interval (clock domain: seconds, or ticks
+        # under a VirtualClock) — the engine-health histogram a latency
+        # percentile can't show (one slow tick hides inside p95)
+        if self._last_step_time is not None and now >= self._last_step_time:
+            self.tick_durations.append(now - self._last_step_time)
+        self._last_step_time = now
+
+    def record_gate_outcomes(self, req: Request) -> None:
+        """Stream a completed *escalated* request's outcomes into the
+        calibration telemetry: for each gate it crossed, did the next
+        tier's token stream agree with the one the gate rejected?
+        Agreement is the online correctness proxy — observable only for
+        escalated traffic (see docs/serving.md for the caveat)."""
+        for g in range(req.tier):
+            agree = req.tokens_by_tier[g] == req.tokens_by_tier[g + 1]
+            self.calibration.record_outcome(
+                g, req.seq_conf_by_tier[g], agree, req.prompt_tokens)
 
     def record_prefill_tokens(self, live: int, processed: int) -> None:
         """One prefill execution: `live` real prompt tokens inside a
@@ -130,6 +149,37 @@ class ServingMetrics:
             return 0.0
         return self.last_finish - self.first_arrival
 
+    def tick_duration_hist(self) -> Dict[str, int]:
+        """Decade histogram of per-tick wall intervals ("1e-3" counts
+        ticks with 1ms <= dt < 10ms): coarse, but a bimodal tick time —
+        the stall / recompile / host-sync-bubble signature — shows up
+        as two occupied decades no percentile reveals."""
+        hist: Dict[str, int] = {}
+        for d in self.tick_durations:
+            key = "0" if d <= 0 else f"1e{int(np.floor(np.log10(d)))}"
+            hist[key] = hist.get(key, 0) + 1
+        return dict(sorted(hist.items(),
+                           key=lambda kv: float(kv[0])))
+
+    def snapshot(self, now: float) -> dict:
+        """A cheap point-in-time readout for the periodic
+        ``--metrics-interval`` line: progress, escalation, and the
+        streaming calibration state (per-gate ECE + agreement)."""
+        return {
+            "t": now,
+            "requests": self.stats.requests,
+            "completed": len(self.latencies),
+            "steps": self.steps,
+            "escalation_rates": [g.escalation_rate
+                                 for g in self.stats.gates],
+            "gate_ece": [self.calibration.ece(g)
+                         for g in range(self.calibration.n_gates)],
+            "gate_agreement": [self.calibration.agreement_rate(g)
+                               for g in range(self.calibration.n_gates)],
+            "gate_outcomes": list(self.calibration.outcomes),
+            "tick_duration_p50": percentile(self.tick_durations, 50),
+        }
+
     def summary(self) -> dict:
         n = max(self.stats.requests, 1)
         elapsed = self.elapsed
@@ -170,11 +220,20 @@ class ServingMetrics:
             "host_syncs_per_tick": [
                 n / self.steps if self.steps else float("nan")
                 for n in self.host_syncs_by_tier],
+            "tick_duration_p50": percentile(self.tick_durations, 50),
+            "tick_duration_p95": percentile(self.tick_durations, 95),
+            "tick_duration_max": (max(self.tick_durations)
+                                  if self.tick_durations else float("nan")),
+            "tick_duration_hist": self.tick_duration_hist(),
             "tier_names": [t.name for t in self.tiers],
             "tier_requests": list(self.tier_requests),
             "tier_utilization": util,
             "escalation_rates": [g.escalation_rate
                                  for g in self.stats.gates],
+            # streaming gate calibration: per-gate confidence histogram,
+            # reliability diagram + ECE from escalation outcomes
+            # (overall and per prompt-length bucket)
+            "gate_calibration": self.calibration.summary(),
             "flops_per_request_cascade": flops_cascade,
             "flops_per_request_always_fast":
                 self.tiers[0].flops_per_request,

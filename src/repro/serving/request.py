@@ -55,9 +55,18 @@ class Request:
     tokens: List[int] = field(default_factory=list)       # current tier
     token_conf: List[float] = field(default_factory=list)
     seq_conf_by_tier: List[float] = field(default_factory=list)
+    # per-tier token-stream snapshots (taken at gate time): tier t's
+    # stream vs tier t+1's is the escalation-outcome agreement proxy
+    # feeding the streaming calibration telemetry
+    tokens_by_tier: List[List[int]] = field(default_factory=list)
     admit_times: List[float] = field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # lifecycle span log [(state, t), ...] in the engine's clock domain
+    # (timestamps are None for transitions the caller didn't stamp);
+    # the tracer keeps its own wall-clock spans — this is the
+    # metrics-facing record
+    span_log: List[tuple] = field(default_factory=list)
 
     def _to(self, state: RequestState) -> None:
         if state not in _ALLOWED[self.state]:
@@ -70,15 +79,20 @@ class Request:
 
     def admit(self, tier: int, slot: int, now: float) -> None:
         """QUEUED/ESCALATED -> PREFILL in `tier` occupying `slot`."""
+        if not self.span_log:
+            self.span_log.append((RequestState.QUEUED.value,
+                                  self.arrival_time))
         self._to(RequestState.PREFILL)
         self.tier = tier
         self.slot = slot
         self.tokens = []
         self.token_conf = []
         self.admit_times.append(now)
+        self.span_log.append((RequestState.PREFILL.value, now))
 
-    def start_decode(self) -> None:
+    def start_decode(self, now: Optional[float] = None) -> None:
         self._to(RequestState.DECODE)
+        self.span_log.append((RequestState.DECODE.value, now))
 
     def emit(self, token: int, conf: float, now: float) -> None:
         """Record one generated token + its gate confidence."""
@@ -103,17 +117,20 @@ class Request:
         self._to(RequestState.GATED)
         conf = sequence_confidence(self.token_conf, reduce)
         self.seq_conf_by_tier.append(conf)
+        self.tokens_by_tier.append(list(self.tokens))
         return conf
 
-    def escalate(self) -> None:
+    def escalate(self, now: Optional[float] = None) -> None:
         """GATED -> ESCALATED (will queue for tier+1)."""
         self._to(RequestState.ESCALATED)
         self.slot = None
+        self.span_log.append((RequestState.ESCALATED.value, now))
 
     def complete(self, now: float) -> None:
         self._to(RequestState.DONE)
         self.slot = None
         self.finish_time = now
+        self.span_log.append((RequestState.DONE.value, now))
 
     # -- derived metrics ---------------------------------------------------
 

@@ -48,7 +48,8 @@ class CascadeScheduler:
 
     def __init__(self, slots_per_tier: Sequence[int],
                  gates: Sequence[GateSpec],
-                 shards_per_tier: Optional[Sequence[int]] = None):
+                 shards_per_tier: Optional[Sequence[int]] = None,
+                 calibration=None):
         num_tiers = len(slots_per_tier)
         if len(gates) != num_tiers - 1:
             raise ValueError("one gate per non-final tier")
@@ -63,6 +64,11 @@ class CascadeScheduler:
                            for c, d in zip(slots_per_tier, shards)]
         self.gates = list(gates)
         self.gate_stats = [GateStats() for _ in gates]
+        # streaming calibration telemetry sink (observability.
+        # GateCalibration, usually ServingMetrics.calibration): every
+        # gate decision streams (confidence, escalated) into it; the
+        # engine streams escalation *outcomes* separately.  None: off.
+        self.calibration = calibration
         self._conf_windows: List[Deque[float]] = [
             deque(maxlen=g.window) for g in gates]
         # queue[0] = arrivals; queue[m>0] = escalations from gate m-1
@@ -168,6 +174,8 @@ class CascadeScheduler:
         escalate = seq_conf <= delta
         if escalate:
             st.escalated += 1
+        if self.calibration is not None:
+            self.calibration.record_gate(gate, seq_conf, escalate)
         return escalate
 
     # -- introspection -----------------------------------------------------

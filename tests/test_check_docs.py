@@ -48,6 +48,15 @@ def test_urls_and_globs_are_ignored():
         ROOT) == []
 
 
+def test_absolute_output_paths_are_ignored():
+    # output placeholders like `--trace-out /tmp/trace.json` are not
+    # repo references; relative ones still fail
+    assert check_docs.check_text(
+        "run with `--trace-out /tmp/trace.json`", ROOT) == []
+    assert check_docs.check_text(
+        "run with `--trace-out trace.json`", ROOT)
+
+
 def test_root_and_src_relative_paths_resolve():
     text = ("`README.md` `benchmarks/serving_throughput.py` "
             "`repro/serving/engine.py` `kernels/prefill_attention.py`")
