@@ -16,7 +16,12 @@ deterministic virtual clock (``trace_overhead``): the tracer must
 leave steps/launches/host_syncs untouched (hard error otherwise) and
 its host cost — the wall-time delta — stay within noise (<2%).
 Each sweep point also records the streaming per-gate calibration
-telemetry (confidence histograms, reliability bins, ECE).
+telemetry (confidence histograms, reliability bins, ECE).  A final
+stall-vs-preempt A/B (``preempt_ab``) re-runs one point on an
+over-subscribed KV arena under a deterministic virtual clock with
+``--preemption none`` vs ``youngest``: evict-and-replay should improve
+tail TTFT over stalling at equal completed work (conservation is a
+hard error in both arms).
 
     PYTHONPATH=src python -m benchmarks.serving_throughput
 
@@ -231,6 +236,50 @@ def main() -> None:
           f"{trace_overhead['traced']['trace_events']} events, "
           f"host syncs/launches/steps identical)", flush=True)
 
+    # stall-vs-preempt A/B on an over-subscribed KV arena: same
+    # deterministic workload (VirtualClock, fixed seed), arena sized so
+    # rows contend for blocks.  `none` absorbs exhaustion by stalling
+    # rows in place; `youngest` evicts-and-replays a victim, freeing its
+    # blocks for the rows ahead of it — the tail TTFT (a stalled
+    # admission queue) is where the policy should pay off, at equal
+    # completed work (token streams are bit-identical either way).
+    over_blocks = max(
+        2 * ((PROMPT_LEN + GEN_LEN + 15) // 16) + SLOTS // 2, 8)
+    preempt_ab = {"length_dist": ab_dist, "rate": RATES[1],
+                  "kv_blocks": over_blocks}
+    for arm in ("none", "youngest"):
+        args = serve_async.make_parser().parse_args(
+            base_argv(ab_dist, RATES[1])
+            + ["--kv-blocks", str(over_blocks), "--preemption", arm])
+        t0 = time.time()
+        s = serve_async.run(args, VirtualClock())
+        preempt_ab[arm] = {
+            "completed": s["completed"],
+            "throughput": s["throughput"],
+            "ttft_p50": s["ttft_p50"],
+            "ttft_p95": s["ttft_p95"],
+            "latency_p95": s["latency_p95"],
+            "preemptions": s["preemptions"],
+            "replayed_tokens": s["replayed_tokens"],
+            "conservation_ok": s["conservation"]["ok"],
+            "wall_s": time.time() - t0,
+        }
+        if not s["conservation"]["ok"]:
+            raise RuntimeError(
+                f"preempt A/B [{arm}]: conservation violated "
+                f"{s['conservation']}")
+        print(f"preempt A/B [{arm}]: ttft p95 {s['ttft_p95']:.2f}, "
+              f"latency p95 {s['latency_p95']:.2f}, "
+              f"throughput {s['throughput']:.2f} req/tick, "
+              f"preempted {s['preemptions']} "
+              f"(replayed {s['replayed_tokens']} tok)", flush=True)
+    preempt_ab["ttft_p95_improvement_pct"] = 100.0 * (
+        preempt_ab["none"]["ttft_p95"] - preempt_ab["youngest"]["ttft_p95"]
+    ) / preempt_ab["none"]["ttft_p95"]
+    print(f"preempt A/B: p95 TTFT "
+          f"{preempt_ab['ttft_p95_improvement_pct']:+.1f}% vs stalls",
+          flush=True)
+
     bench = {
         "bench": "serving_throughput",
         "slots": SLOTS,
@@ -242,6 +291,7 @@ def main() -> None:
         "points": points,
         "step_ab": step_ab,
         "trace_overhead": trace_overhead,
+        "preempt_ab": preempt_ab,
         "flops_saving_vs_always_expensive": [
             1.0 - p["flops_per_request_cascade"]
             / p["flops_per_request_always_expensive"] for p in points],

@@ -40,6 +40,18 @@ agreement over escalation outcomes), live-vs-processed prefill token
 ratio, and Eq 7 FLOPs/request vs the always-fast / always-expensive
 envelopes.
 
+Overload and failure (docs/serving.md "Overload and failure semantics"):
+``--preemption {none,youngest,fewest-tokens}`` evicts-and-replays a
+victim row instead of stalling when an over-subscribed KV arena
+(``--kv-blocks``) runs dry; ``--deadline SEC`` gives every request an
+arrival-relative completion deadline and turns on load shedding;
+``--launch-retries`` / ``--retry-backoff`` bound the transient-failure
+retry wrapper; ``--inject-faults SPEC`` attaches a deterministic
+:class:`repro.serving.faults.FaultPlan` (pool shrinkage, escalation
+storms, launch failures, slow ticks — see that module for the grammar).
+Ctrl-C prints the partial metrics summary and still flushes
+``--trace-out``.
+
 Observability: ``--trace-out trace.json`` records every request's
 lifecycle (QUEUED -> PREFILL -> DECODE -> ESCALATED -> DONE) and every
 tick's engine phases (admit / plan / launch / device_get / gate /
@@ -61,7 +73,7 @@ from repro.configs import get_config
 from repro.data import bigram_lm
 from repro.models import init_params
 from repro.launch.mesh import make_tier_meshes
-from repro.serving import CascadeEngine, TierSpec, Tracer
+from repro.serving import CascadeEngine, FaultPlan, TierSpec, Tracer
 from repro.serving.engine import VirtualClock, WallClock
 from repro.serving.observability import profile_window
 
@@ -115,6 +127,11 @@ def build_engine(args, clock=None, tracer=None):
         clock=clock if clock is not None else WallClock(),
         tracer=tracer,
         profile_annotations=bool(getattr(args, "jax_profile", None)),
+        preemption_policy=getattr(args, "preemption", "none"),
+        launch_retries=getattr(args, "launch_retries", 2),
+        retry_backoff=getattr(args, "retry_backoff", 0.02),
+        faults=(FaultPlan.parse(args.inject_faults)
+                if getattr(args, "inject_faults", None) else None),
         **gate_kw)
     return engine, min(fast_cfg.vocab_size, exp_cfg.vocab_size)
 
@@ -181,15 +198,28 @@ def run(args, clock=None) -> dict:
     # warmup compiles every tier and then resets the clock, so arrival
     # timestamps are relative to the start of serving, not construction
     engine.warmup()
+    ddl = getattr(args, "deadline", None)
     for p, n, t in zip(prompts, lengths, arrivals):
-        engine.submit(p[:int(n)], arrival_time=float(t))
+        engine.submit(p[:int(n)], arrival_time=float(t),
+                      deadline=None if ddl is None else float(t) + ddl)
     interval = getattr(args, "metrics_interval", None)
     on_snap = ((lambda s: print(snapshot_line(s)))
                if interval is not None else None)
     profile_dir = getattr(args, "jax_profile", None)
+    interrupted = False
     with profile_window(profile_dir):
-        summary = engine.run(metrics_interval=interval,
-                             on_snapshot=on_snap)
+        try:
+            summary = engine.run(metrics_interval=interval,
+                                 on_snapshot=on_snap)
+        except KeyboardInterrupt:
+            # graceful stop: report what completed and still flush the
+            # trace below, instead of dying with a bare traceback
+            interrupted = True
+            summary = engine.metrics.summary()
+            print(f"\ninterrupted at t={engine.clock.now():.2f} — partial "
+                  f"summary ({summary['completed']}/{summary['requests']} "
+                  "completed)")
+    summary["interrupted"] = interrupted
     trace_out = getattr(args, "trace_out", None)
     if trace_out:
         n_events = tracer.export(trace_out)
@@ -220,6 +250,12 @@ def run(args, clock=None) -> dict:
     # block-paged KV arena accounting (high-water = blocks actually
     # mapped at peak, the number the paged arena saves vs dense; sharded
     # pools additionally report per-data-shard high-water)
+    # overload & failure knobs, for the BENCH json and the report line
+    summary["preemption_policy"] = engine.preemption_policy
+    summary["deadline"] = ddl
+    if engine.faults is not None:
+        summary["faults"] = engine.faults.describe()
+        summary["fault_events"] = len(engine.faults.log)
     summary["kv_arena"] = engine.memory_stats()
     # sharded serving: per-tier mesh layout (None entries: single-device)
     summary["tier_meshes"] = engine.mesh_topology()
@@ -259,6 +295,23 @@ def report(s: dict) -> None:
           + "   host-syncs/tick "
           + "  ".join(f"{n}={h:.2f}" for n, h in
                       zip(s["tier_names"], s["host_syncs_per_tick"])))
+    overloaded = (s.get("shed") or s.get("failed") or s.get("preemptions")
+                  or s.get("launch_retries")
+                  or s.get("preemption_policy", "none") != "none"
+                  or s.get("interrupted"))
+    if overloaded:
+        cons = s.get("conservation", {})
+        print(f"  overload [{s.get('preemption_policy', 'none')}]  "
+              f"shed {s.get('shed', 0)} "
+              f"(rate {s.get('shed_rate', 0.0):.3f})  "
+              f"preempted {s.get('preemptions', 0)} "
+              f"(replayed {s.get('replayed_tokens', 0)} tok)  "
+              f"failed {s.get('failed', 0)}  "
+              f"launch retries {s.get('launch_retries', 0)}  "
+              "conservation "
+              + ("ok" if cons.get("ok")
+                 else ("interrupted" if s.get("interrupted")
+                       else f"VIOLATED ({cons})")))
     rates = ", ".join(f"{r:.3f}" for r in s["escalation_rates"])
     deltas = ", ".join(f"{d:.4f}" for d in s["delta"])
     target = ("" if s.get("escalation_budget") is None
@@ -341,6 +394,29 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--shard-params", action="store_true",
                     help="tensor-shard tier params over the mesh 'model' "
                          "axis (default: replicate params per tier)")
+    ap.add_argument("--preemption", default="none",
+                    choices=("none", "youngest", "fewest-tokens"),
+                    help="evict-and-replay policy when an over-subscribed "
+                         "KV arena (--kv-blocks) runs dry: youngest evicts "
+                         "the newest row on a stalled shard, fewest-tokens "
+                         "the least-progressed; none keeps the stall "
+                         "behaviour.  Replayed streams are bit-identical "
+                         "(greedy decode)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="per-request completion deadline, relative to "
+                         "arrival (engine-clock units); queued requests "
+                         "past — or provably unable to meet — it are shed")
+    ap.add_argument("--launch-retries", type=int, default=2,
+                    help="bounded retries per launch/transfer on transient "
+                         "errors before sacrificing one request")
+    ap.add_argument("--retry-backoff", type=float, default=0.02,
+                    metavar="SEC", help="initial retry backoff (doubles "
+                         "per attempt)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic fault plan, e.g. "
+                         "'seed=7,shrink=5:0:8:40,storm=10-14:0,"
+                         "launch=0.05' (see repro/serving/faults.py for "
+                         "the grammar)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="also write the summary dict to this path")

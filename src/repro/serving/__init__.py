@@ -12,9 +12,13 @@ and escalation queues feeding the expensive members as packed sub-batches.
   * :mod:`repro.serving.observability` — request/tick tracer (Perfetto
     export), streaming gate-calibration telemetry (ECE + reliability),
     jax-profiler hooks
+  * :mod:`repro.serving.faults`    — deterministic fault injection
+    (pool shrinkage, escalation storms, transient launch failures, slow
+    ticks) behind zero-cost-when-None engine hooks
   * :mod:`repro.serving.engine`    — CascadeEngine tying tiers together
 """
 from repro.serving.engine import CascadeEngine, TierSpec  # noqa: F401
+from repro.serving.faults import FaultPlan, TransientError  # noqa: F401
 from repro.serving.metrics import ServingMetrics  # noqa: F401
 from repro.serving.observability import (GateCalibration,  # noqa: F401
                                          ReliabilityBins, Tracer)
@@ -27,5 +31,5 @@ __all__ = [
     "CascadeEngine", "TierSpec", "ServingMetrics", "Request", "RequestState",
     "CascadeScheduler", "GateSpec", "SlotAllocator", "BlockAllocator",
     "TierSlotPool", "DenseTierSlotPool", "Tracer", "GateCalibration",
-    "ReliabilityBins",
+    "ReliabilityBins", "FaultPlan", "TransientError",
 ]

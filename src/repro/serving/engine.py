@@ -54,6 +54,20 @@ re-packed on the host and ``device_put`` under the *target* tier's
 sharding.  Token streams are bit-identical to the single-device engine
 (multi-device parity suite: ``tests/test_sharded_serving.py``).
 
+**Overload and failure** (docs/serving.md "Overload and failure
+semantics"): when the KV block pool runs dry a ``preemption_policy``
+(``youngest`` / ``fewest-tokens``) evicts a victim row instead of
+stalling it — the victim re-queues as ``PREEMPTED`` and replays
+prefill+decode from scratch through the idempotent chunk machinery
+(greedy decode is deterministic, so the replayed stream is
+bit-identical).  ``submit(deadline=)`` plus a per-tick shedding pass
+reject queued requests that cannot meet their deadline (``SHED``).
+Every launch and ``device_get`` runs under bounded retry-with-backoff;
+when retries exhaust the engine fails a single victim request
+(``FAILED``), never the run.  A :class:`repro.serving.faults.FaultPlan`
+injects all of these conditions deterministically behind
+zero-cost-when-None hooks.
+
 The clock is injectable: ``WallClock`` for real Poisson traffic,
 ``VirtualClock`` for deterministic tests (one tick per step).
 """
@@ -77,6 +91,7 @@ from repro.models import cache as cache_lib
 from repro.models import params as params_lib
 from repro.models import sharding as sharding_lib
 from repro.models import transformer
+from repro.serving import faults as faults_lib
 from repro.serving import observability as obs
 from repro.serving.metrics import ServingMetrics, TierCost
 from repro.serving.request import Request, RequestState
@@ -391,6 +406,29 @@ class _TierRuntime:
                 if r is not None and r.state is RequestState.PREFILL]
 
 
+class _RetryExhausted(RuntimeError):
+    """Internal: a launch's bounded retry budget ran out on persistent
+    transient errors.  The engine catches this at each launch site and
+    sacrifices a single victim request — never the run."""
+
+    def __init__(self, kind: str, cause: BaseException):
+        super().__init__(f"launch retries exhausted in {kind}: {cause}")
+        self.kind = kind
+        self.cause = cause
+
+
+def _transient_error_types() -> tuple:
+    """Exception classes the retry wrapper treats as transient: injected
+    :class:`repro.serving.faults.TransientError` always, plus the running
+    jax's runtime-error class (transfer hiccups, collective timeouts)
+    when it exposes one."""
+    types = [faults_lib.TransientError]
+    jax_err = getattr(getattr(jax, "errors", None), "JaxRuntimeError", None)
+    if jax_err is not None:
+        types.append(jax_err)
+    return tuple(types)
+
+
 class CascadeEngine:
     """M-tier cascade with continuous batching and per-request gating."""
 
@@ -410,7 +448,11 @@ class CascadeEngine:
                  use_unified_step: Optional[bool] = None,
                  tracer: Optional[obs.Tracer] = None,
                  profile_annotations: bool = False,
-                 clock=None):
+                 clock=None,
+                 preemption_policy: str = "none",
+                 launch_retries: int = 2,
+                 retry_backoff: float = 0.02,
+                 faults: Optional[faults_lib.FaultPlan] = None):
         """``use_paged_kv`` selects the block-paged KV arena + Pallas
         paged flash-decode kernel (interpret mode off-TPU); False keeps
         the PR 1 dense one-page-per-request arena (the reference path).
@@ -458,7 +500,22 @@ class CascadeEngine:
         test-asserted).  ``profile_annotations`` additionally wraps each
         tick in ``jax.profiler.StepTraceAnnotation`` (step_num = tick
         id) and each launch in a named ``TraceAnnotation`` so an opt-in
-        device-profiler window correlates with the host tracer."""
+        device-profiler window correlates with the host tracer.
+
+        ``preemption_policy`` trades stalls for evictions when the KV
+        block pool runs dry (docs/serving.md "Overload and failure
+        semantics"): ``youngest`` evicts the most recently bound row on
+        a stalled shard, ``fewest-tokens`` the least-progressed one; the
+        victim re-queues at the head of its tier's queue and replays
+        prefill+decode from scratch (bit-identical — greedy decode is
+        deterministic).  Requires the chunked block-paged path; a
+        shard's oldest bound row is never evicted, so the oldest-first
+        termination argument survives.  ``launch_retries`` bounds the
+        retry-with-backoff wrapper around every launch and ``device_get``
+        (``retry_backoff`` seconds, doubling); when retries exhaust the
+        engine fails one victim request, never the run.  ``faults``
+        attaches a :class:`repro.serving.faults.FaultPlan` — zero-cost
+        when None, like the tracer."""
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers = list(tiers)
@@ -568,10 +625,36 @@ class CascadeEngine:
         self._budget_used = [0] * m
         self._admitted = [0] * m
         self.host_syncs = 0                 # blocking device->host fetches
+        # -- overload & failure layer (module docstring) -------------------
+        if preemption_policy not in ("none", "youngest", "fewest-tokens"):
+            raise ValueError(
+                f"unknown preemption_policy {preemption_policy!r} "
+                "(choose none / youngest / fewest-tokens)")
+        if preemption_policy != "none" and not use_chunked_prefill:
+            raise ValueError(
+                "preemption requires the block-paged arena with chunked "
+                "prefill: the replay path re-runs the victim's prefill "
+                "through the idempotent chunk machinery")
+        self.preemption_policy = preemption_policy
+        if launch_retries < 0:
+            raise ValueError("launch_retries must be >= 0")
+        self.launch_retries = int(launch_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.faults = faults
+        self._transient = _transient_error_types()
+        self._has_deadlines = False         # any submit carried a deadline
+        self._min_tick_dt: Optional[float] = None   # shedding floor unit
+        self._last_tick_t: Optional[float] = None
+        self._last_stalls = [0] * m         # per tier, for drain diagnostics
 
     # -- submission --------------------------------------------------------
 
-    def submit(self, prompt, arrival_time: float = 0.0) -> Request:
+    def submit(self, prompt, arrival_time: float = 0.0,
+               deadline: Optional[float] = None) -> Request:
+        """Queue one request.  ``deadline`` (absolute, in the engine's
+        clock domain) opts it into load shedding: the per-tick shedding
+        pass rejects it (terminal ``SHED``) once the deadline has passed
+        or provably cannot be met (see :meth:`_service_floor`)."""
         prompt = np.asarray(prompt, np.int32)
         if self.chunked_prefill:
             if prompt.ndim != 1 or not 1 <= prompt.shape[0] <= self.prompt_len:
@@ -584,10 +667,14 @@ class CascadeEngine:
                 "(the uniform packed prefill batches one prompt length; "
                 "use chunked prefill for mixed lengths)")
         req = Request(rid=self._rid, prompt=prompt, gen_len=self.gen_len,
-                      arrival_time=float(arrival_time))
+                      arrival_time=float(arrival_time),
+                      deadline=None if deadline is None else float(deadline))
         self._rid += 1
         self.requests.append(req)
         self.scheduler.submit(req)
+        self.metrics.record_submitted()
+        if deadline is not None:
+            self._has_deadlines = True
         if self.tracer is not None:
             self.tracer.request_transition(
                 req.rid, "QUEUED", 0, prompt_tokens=req.prompt_tokens)
@@ -600,16 +687,50 @@ class CascadeEngine:
         per tier: the sync-coalescing tests assert a mixed prefill+decode
         tick pays exactly one of these per active tier).  Traced as the
         ``device_get`` phase — its duration is where device compute the
-        host must wait for shows up on the timeline."""
+        host must wait for shows up on the timeline.  Runs under the
+        retry wrapper (side-effect-free: re-fetching re-reads the same
+        device buffers); exhaustion here is engine-fatal — the tick's
+        results are unrecoverable without the transfer."""
         self.host_syncs += 1
         self.metrics.record_host_sync(tier)
         tr = self.tracer
         if tr is None:
-            return jax.device_get(tree)
+            return self._launch(tier, "device_get",
+                                lambda: jax.device_get(tree))
         t0 = tr.now_us()
-        out = jax.device_get(tree)
+        out = self._launch(tier, "device_get", lambda: jax.device_get(tree))
         tr.phase("device_get", tier, t0, tick=self.tick_id)
         return out
+
+    def _launch(self, tier: int, kind: str, thunk):
+        """Run one launch/transfer under bounded retry-with-backoff.
+        Transient failures (an injected
+        :class:`repro.serving.faults.TransientError`, or jax's runtime
+        error class) retry up to ``launch_retries`` times with doubling
+        ``retry_backoff``; relaunching is safe because the tick's plan is
+        pure host data built *before* any host state advances — replaying
+        it rewrites the same KV pages idempotently.  Exhaustion raises
+        :class:`_RetryExhausted` for the call site to sacrifice a single
+        victim request (see :meth:`_fail_one`)."""
+        delay = self.retry_backoff
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.pre_launch(self.tick_id, tier, kind, attempt)
+                return thunk()
+            except self._transient as e:
+                if self.tracer is not None:
+                    self.tracer.instant("launch_retry", tier,
+                                        tick=self.tick_id, kind=kind,
+                                        attempt=attempt, error=str(e))
+                if attempt >= self.launch_retries:
+                    raise _RetryExhausted(kind, e) from e
+                self.metrics.record_retry(tier)
+                attempt += 1
+                if delay > 0:
+                    time.sleep(delay)
+                    delay *= 2
 
     def _pick_shard(self, tier: int, rt: _TierRuntime,
                     ntokens: int) -> Optional[int]:
@@ -663,7 +784,7 @@ class CascadeEngine:
             # occupy later ticks' windows.  Legacy split tiers keep the
             # old accounting (full prompt length, prefill-only window).
             # No compute here — the token batch runs in _tier_step.
-            admitted = 0
+            fresh = 0
             cost = ((lambda r: min(rt.chunk, r.prompt_tokens))
                     if rt.unified else None)
             while True:
@@ -671,6 +792,11 @@ class CascadeEngine:
                 if head is None:
                     break
                 plen = head.prompt_tokens
+                # a preempted request being re-admitted replays work the
+                # metrics already counted: don't re-record the admission
+                # (Eq 7 cost and stats.requests stay per-request); the
+                # replayed compute is visible as replayed_tokens instead
+                replay = head.state is RequestState.PREEMPTED
                 shard = self._pick_shard(tier, rt, min(rt.chunk, plen))
                 if shard is None:
                     break
@@ -692,9 +818,9 @@ class CascadeEngine:
                 self._budget_used[tier] += (min(rt.chunk, plen)
                                             if rt.unified else plen)
                 self._admitted[tier] += 1
-                admitted += 1
-            if admitted:
-                self.metrics.record_admission(tier, admitted)
+                fresh += 0 if replay else 1
+            if fresh:
+                self.metrics.record_admission(tier, fresh)
             return
         if rt.paged:
             # block-aware admission: one request at a time, binding its
@@ -720,14 +846,34 @@ class CascadeEngine:
         self.metrics.record_admission(tier, len(reqs))
         self.metrics.record_prefill_tokens(
             len(reqs) * self.prompt_len, rt.capacity * self.prompt_len)
-        prompts = np.zeros((rt.capacity, self.prompt_len), np.int32)
-        for i, req in enumerate(reqs):
-            prompts[i] = req.prompt
         tr = self.tracer
         t0 = tr.now_us() if tr is not None else 0.0
-        with obs.annotation(f"run_prefill/{rt.spec.name}",
-                            self.profile_annotations):
-            part_cache, ftok, fconf = rt.run_prefill(prompts)
+        while True:
+            prompts = np.zeros((rt.capacity, self.prompt_len), np.int32)
+            for i, req in enumerate(reqs):
+                prompts[i] = req.prompt
+            try:
+                with obs.annotation(f"run_prefill/{rt.spec.name}",
+                                    self.profile_annotations):
+                    part_cache, ftok, fconf = self._launch(
+                        tier, "run_prefill",
+                        lambda p=prompts: rt.run_prefill(p))
+                break
+            except _RetryExhausted as e:
+                # rows aren't populated yet (slot_req assigns below), so
+                # the sacrifice is simple: drop the youngest admission
+                # and relaunch the remaining prompts
+                req, slot = reqs.pop(), slot_ids.pop()
+                req.fail(now)
+                if rt.paged:
+                    rt.pool.release(slot)
+                self.scheduler.release(tier, slot)
+                self.metrics.record_failed(tier)
+                if tr is not None:
+                    tr.request_done(req.rid, tier, None, state="FAILED",
+                                    tick=self.tick_id, error=str(e))
+                if not reqs:
+                    return
         if tr is not None:
             tr.phase("launch", tier, t0, tick=self.tick_id, kind="prefill",
                      width=self.prompt_len)
@@ -839,31 +985,185 @@ class CascadeEngine:
                         q_len=qlen, shard=shard, prefill_rows=prefill_rows,
                         decode_rows=decode_rows, finishing=finishing)
 
+    # -- overload: preemption, load shedding, single-request failure --------
+
+    def _pick_victim(self, rt: _TierRuntime, shard: int) -> Optional[int]:
+        """The row ``preemption_policy`` evicts on `shard` when the plan
+        stalled there.  Never the shard's *oldest* bound row (the
+        oldest-first reserve discipline guarantees its progress — that
+        guarantee is the termination argument, and it is also why the
+        preempt-and-replan loop cannot livelock) and never a row whose
+        decode already finished (its work is complete; this tick's gate
+        frees it for nothing).  None when no candidate remains."""
+        rows = [s for s in rt.pool.bound_rows()
+                if rt.pool.shard_of(s) == shard]
+        cands = [s for s in rows[1:]
+                 if rt.slot_req[s] is not None
+                 and not rt.slot_req[s].decode_finished]
+        if not cands:
+            return None
+        if self.preemption_policy == "youngest":
+            return cands[-1]
+        # fewest-tokens: least total progress (prefilled + decoded);
+        # the reverse scan breaks ties toward the youngest binding
+        return min(reversed(cands),
+                   key=lambda s: int(rt.prefill_pos[s])
+                   + len(rt.slot_req[s].tokens))
+
+    def _preempt(self, tier: int, rt: _TierRuntime, slot: int,
+                 now: float) -> None:
+        """Evict `slot`'s request: discard its partial tier work, free
+        its blocks and row, and re-queue it at the *head* of the tier's
+        queue.  Re-admission replays prefill and decode from scratch
+        through the idempotent chunk machinery; greedy decode is
+        deterministic, so the replayed stream is bit-identical (the
+        emit-side first_token_time guard keeps TTFT at the original
+        emission, matching what a streaming client observed)."""
+        req = rt.slot_req[slot]
+        shard = rt.pool.shard_of(slot)
+        replayed = int(rt.prefill_pos[slot]) + len(req.tokens)
+        req.preempt(now)
+        rt.slot_req[slot] = None
+        rt.tok[slot] = 0
+        rt.pos[slot] = 0
+        rt.prefill_pos[slot] = 0
+        rt.pool.release(slot)
+        self.scheduler.release(tier, slot)
+        self.scheduler.requeue(req, tier)
+        self.metrics.record_preemption(tier, replayed)
+        self._trace_req(req, "PREEMPTED", tier, shard)
+
+    def _preempt_stalled(self, tier: int, rt: _TierRuntime,
+                         plan: Optional[StepPlan],
+                         now: float) -> Optional[StepPlan]:
+        """Trade stalls for evictions: while the plan has stalled rows
+        and a stalled shard holds a victim, preempt one row and re-plan.
+        Terminates — every pass unbinds a row, and re-planning only ever
+        *frees* blocks — and cannot starve the tier, since the shard's
+        oldest row is exempt and therefore always progresses."""
+        while plan is not None:
+            stalled = [s for s in range(rt.capacity)
+                       if plan.kind[s] == KIND_STALL]
+            if not stalled:
+                return plan
+            victim = None
+            for shard in sorted({int(plan.shard[s]) for s in stalled}):
+                victim = self._pick_victim(rt, shard)
+                if victim is not None:
+                    break
+            if victim is None:
+                return plan             # nothing evictable: stalls stand
+            self._preempt(tier, rt, victim, now)
+            plan = self._build_plan(rt)
+        return plan
+
+    def _fail_one(self, tier: int, rt: _TierRuntime, rows: Sequence[int],
+                  now: float, err: Exception) -> int:
+        """Retry exhaustion sacrifices ONE request so the run survives:
+        the youngest-bound row among `rows` (highest row on a dense
+        arena, whose binding order isn't tracked) fails terminally and
+        frees its row and blocks; the caller re-plans and relaunches for
+        the survivors.  Returns the victim row."""
+        if rt.paged:
+            order = {s: i for i, s in enumerate(rt.pool.bound_rows())}
+            victim = max(rows, key=lambda s: order.get(s, -1))
+        else:
+            victim = max(rows)
+        req = rt.slot_req[victim]
+        shard = rt.pool.shard_of(victim) if rt.paged else None
+        req.fail(now)
+        rt.slot_req[victim] = None
+        rt.tok[victim] = 0
+        rt.pos[victim] = 0
+        rt.prefill_pos[victim] = 0
+        if rt.paged:
+            rt.pool.release(victim)
+        self.scheduler.release(tier, victim)
+        self.metrics.record_failed(tier)
+        if self.tracer is not None:
+            self.tracer.request_done(req.rid, tier, shard, state="FAILED",
+                                     tick=self.tick_id, error=str(err))
+        return victim
+
+    def _shed(self, tier: int, now: float) -> None:
+        """The load-shedding pass (zero-cost when no submitted request
+        carries a deadline): reject queued requests of `tier` whose
+        deadline has passed or provably cannot be met."""
+        if not self._has_deadlines:
+            return
+        for req in self.scheduler.shed(tier, now, self._service_floor(tier)):
+            req.shed(now)
+            self.metrics.record_shed(tier)
+            if self.tracer is not None:
+                self.tracer.request_done(req.rid, tier, None, state="SHED",
+                                         tick=self.tick_id)
+
+    def _service_floor(self, tier: int):
+        """A per-request lower bound on remaining service time at `tier`
+        (None until a tick duration has been observed, so only
+        already-expired deadlines shed): minimum ticks to finish —
+        ``ceil(prompt/chunk)`` prefill ticks plus ``gen_len - 1`` decode
+        ticks, minus one because the final chunk emits the first token in
+        its own tick — times the *minimum* observed tick duration.  A
+        true lower bound: queue wait, stalls, preemption replays, and
+        escalation only add to it."""
+        dt = self._min_tick_dt
+        if dt is None or dt <= 0:
+            return None
+        rt = self.runtimes[tier]
+        if rt.chunked:
+            return lambda r: max(
+                math.ceil(r.prompt_tokens / rt.chunk)
+                + self.gen_len - 2, 0) * dt
+        return lambda r: (self.gen_len - 1) * dt
+
+    def _drain_diagnostics(self) -> str:
+        """Per-tier state for the did-not-drain RuntimeError: queue
+        depth, live rows, the last plan's stalled rows, and per-shard
+        free blocks — enough to tell block starvation from a scheduling
+        bug without attaching a debugger."""
+        lines = []
+        for t, rt in enumerate(self.runtimes):
+            line = (f"tier {t} ({rt.spec.name}): "
+                    f"queued={len(self.scheduler.queues[t])} "
+                    f"live_rows={len(rt.occupied())} "
+                    f"stalled_rows={self._last_stalls[t]}")
+            if rt.paged:
+                shards = range(rt.pool.data_shards)
+                line += (" free_blocks_by_shard="
+                         f"{[rt.pool.blocks.free_in(s) for s in shards]}")
+                held = [rt.pool.blocks.reserved_in(s) for s in shards]
+                if any(held):
+                    line += f" withheld_by_shard={held}"
+            lines.append(line)
+        return "; ".join(lines)
+
     def _tier_step(self, tier: int, now: float) -> int:
         """One tier's compute for a tick, planned host-side then executed
         by the unified or split backend.  Returns the number of decode
         tokens emitted (the occupancy metric)."""
         rt = self.runtimes[tier]
         tr = self.tracer
-        if tr is None:
-            plan = self._build_plan(rt)
-        else:
-            t0 = tr.now_us()
-            plan = self._build_plan(rt)
-            if plan is not None:
-                tr.phase("plan", tier, t0, tick=self.tick_id,
-                         width=plan.width,
-                         prefill_rows=len(plan.prefill_rows),
-                         decode_rows=len(plan.decode_rows),
-                         stalled=int((plan.kind == KIND_STALL).sum()))
+        t0 = tr.now_us() if tr is not None else 0.0
+        plan = self._build_plan(rt)
+        if self.preemption_policy != "none" and rt.chunked:
+            plan = self._preempt_stalled(tier, rt, plan, now)
+        self._last_stalls[tier] = (
+            0 if plan is None else int((plan.kind == KIND_STALL).sum()))
+        if plan is not None and tr is not None:
+            tr.phase("plan", tier, t0, tick=self.tick_id,
+                     width=plan.width,
+                     prefill_rows=len(plan.prefill_rows),
+                     decode_rows=len(plan.decode_rows),
+                     stalled=self._last_stalls[tier])
         if plan is None:
             return 0
         if rt.unified:
-            return self._exec_unified(tier, rt, plan)
-        return self._exec_split(tier, rt, plan)
+            return self._exec_unified(tier, rt, plan, now)
+        return self._exec_split(tier, rt, plan, now)
 
     def _exec_unified(self, tier: int, rt: _TierRuntime,
-                      plan: StepPlan) -> int:
+                      plan: StepPlan, now: float) -> int:
         """Unified token-batch execution: ONE compiled program per tier
         per tick serves every live row — each contributes its next
         prefill chunk or its single decode token (``q_len`` 0/1/chunk
@@ -872,15 +1172,32 @@ class CascadeEngine:
         A row finishing prefill this tick emits its first token from the
         batch's last-position logits and starts decoding next tick.
         Mid-prompt-only ticks (nothing to emit) skip the fetch; ticks
-        where every live row stalled skip the launch too."""
-        if not plan.prefill_rows and not plan.decode_rows:
-            return 0                    # every live row stalled
+        where every live row stalled skip the launch too.  The launch
+        sits under the retry wrapper *before* any host state advances:
+        replaying it rewrites the same KV pages idempotently, and retry
+        exhaustion fails one victim, re-plans, and relaunches for the
+        survivors."""
         tr = self.tracer
-        t0 = tr.now_us() if tr is not None else 0.0
-        with obs.annotation(f"run_mixed/{rt.spec.name}",
-                            self.profile_annotations):
-            tok, conf, rt.pool.cache = rt.run_mixed(plan.tokens, plan.pos,
-                                                    plan.q_len)
+        while True:
+            if not plan.prefill_rows and not plan.decode_rows:
+                return 0                # every live row stalled
+            t0 = tr.now_us() if tr is not None else 0.0
+            try:
+                with obs.annotation(f"run_mixed/{rt.spec.name}",
+                                    self.profile_annotations):
+                    tok, conf, cache = self._launch(
+                        tier, "run_mixed",
+                        lambda p=plan: rt.run_mixed(p.tokens, p.pos,
+                                                    p.q_len))
+            except _RetryExhausted as e:
+                self._fail_one(tier, rt,
+                               plan.prefill_rows + plan.decode_rows, now, e)
+                plan = self._build_plan(rt)
+                if plan is None:
+                    return 0
+                continue
+            rt.pool.cache = cache
+            break
         if tr is not None:
             # async dispatch: this phase is host-side launch cost (incl.
             # put_rows transfers); device wait shows under device_get
@@ -913,7 +1230,7 @@ class CascadeEngine:
         return len(plan.decode_rows)
 
     def _exec_split(self, tier: int, rt: _TierRuntime,
-                    plan: StepPlan) -> int:
+                    plan: StepPlan, now: float) -> int:
         """Legacy split execution (the ``use_unified_step=False`` escape
         hatch, and the only backend for dense-arena / recurrent-state
         tiers): launch the prefill chunk batch, launch the fused decode
@@ -926,10 +1243,23 @@ class CascadeEngine:
         tr = self.tracer
         if plan.prefill_rows:
             t0 = tr.now_us() if tr is not None else 0.0
-            with obs.annotation(f"run_chunk/{rt.spec.name}",
-                                self.profile_annotations):
-                tok, conf, rt.pool.cache = rt.run_chunk(
-                    plan.tokens, plan.pos, plan.q_len)
+            try:
+                with obs.annotation(f"run_chunk/{rt.spec.name}",
+                                    self.profile_annotations):
+                    tok, conf, cache = self._launch(
+                        tier, "run_chunk",
+                        lambda: rt.run_chunk(plan.tokens, plan.pos,
+                                             plan.q_len))
+            except _RetryExhausted as e:
+                # fail one victim, re-plan, and restart the tick for the
+                # survivors (the failed launch advanced no host state)
+                self._fail_one(tier, rt,
+                               plan.prefill_rows + plan.decode_rows, now, e)
+                plan = self._build_plan(rt)
+                if plan is None:
+                    return 0
+                return self._exec_split(tier, rt, plan, now)
+            rt.pool.cache = cache
             if tr is not None:
                 tr.phase("launch", tier, t0, tick=self.tick_id,
                          kind="chunk", width=plan.width)
@@ -945,7 +1275,7 @@ class CascadeEngine:
                 self._trace_req(req, "DECODE", tier, int(plan.shard[s]))
                 rt.pos[s] = req.prompt_tokens   # next decode writes here
             pf = {"tok": tok, "conf": conf, "finished": plan.finishing}
-        dc = self._decode_launch(tier, rt, pf)
+        dc = self._decode_launch(tier, rt, pf, now)
         emit_first = pf is not None and pf["finished"]
         if not emit_first and dc is None:
             return 0
@@ -956,7 +1286,10 @@ class CascadeEngine:
         if emit_first:
             ptok, pconf = fetched[0]
             for s in pf["finished"]:
-                rt.slot_req[s].emit(int(ptok[s]), float(pconf[s]), t_emit)
+                req = rt.slot_req[s]
+                if req is None:
+                    continue    # failed mid-tick (decode retry exhaustion)
+                req.emit(int(ptok[s]), float(pconf[s]), t_emit)
                 rt.tok[s] = ptok[s]
         if dc is None:
             return 0
@@ -969,7 +1302,7 @@ class CascadeEngine:
         return len(dc["active"])
 
     def _decode_launch(self, tier: int, rt: _TierRuntime,
-                       pf: Optional[dict]) -> Optional[dict]:
+                       pf: Optional[dict], now: float) -> Optional[dict]:
         """Launch half of the split backend's fused decode step.  Rows
         whose final prefill chunk completed this tick decode in the same
         tick; their first token is still on device (in ``pf``), so it is
@@ -1013,11 +1346,26 @@ class CascadeEngine:
         # their (bound, partially-filled) pages: mask them to the null
         # block in the decode step's page-table copy
         tr = self.tracer
-        t0 = tr.now_us() if tr is not None else 0.0
-        with obs.annotation(f"run_step/{rt.spec.name}",
-                            self.profile_annotations):
-            nxt, conf, rt.pool.cache = rt.run_step(
-                tok_in, mask_rows=rt.prefilling())
+        while True:
+            t0 = tr.now_us() if tr is not None else 0.0
+            try:
+                with obs.annotation(f"run_step/{rt.spec.name}",
+                                    self.profile_annotations):
+                    nxt, conf, cache = self._launch(
+                        tier, "run_step",
+                        lambda: rt.run_step(tok_in,
+                                            mask_rows=rt.prefilling()))
+            except _RetryExhausted as e:
+                # fail one active row and relaunch for the rest: the
+                # victim's page-table row is already unmapped, so its
+                # residual token in tok_in scatters to the null block
+                victim = self._fail_one(tier, rt, active, now, e)
+                active = [s for s in active if s != victim]
+                if not active:
+                    return None
+                continue
+            rt.pool.cache = cache
+            break
         if tr is not None:
             tr.phase("launch", tier, t0, tick=self.tick_id, kind="decode",
                      width=1)
@@ -1041,13 +1389,19 @@ class CascadeEngine:
     def _finish_requests(self, tier: int, now: float):
         rt = self.runtimes[tier]
         last = tier == len(self.tiers) - 1
+        # fault injection: an escalation storm overrides this gate's
+        # decisions for the tick (forced decisions still stream into the
+        # gate stats and calibration telemetry like real ones)
+        forced = (None if last or self.faults is None
+                  else self.faults.force_escalation(self.tick_id, tier))
         done = esc = 0
         for slot in rt.occupied():
             req = rt.slot_req[slot]
             if not (req.state is RequestState.DECODE and req.decode_finished):
                 continue
             seq_conf = req.gate(self.conf_reduce)
-            if not last and self.scheduler.gate_decision(tier, seq_conf):
+            if not last and self.scheduler.gate_decision(tier, seq_conf,
+                                                         force=forced):
                 req.escalate(now)
                 self.scheduler.push_escalated(req)
                 # span on the *next* tier's track: queued for escalation
@@ -1080,6 +1434,17 @@ class CascadeEngine:
     def step(self, now: Optional[float] = None) -> None:
         now = self.clock.now() if now is None else now
         self.tick_id += 1
+        if self.faults is not None:
+            self.faults.begin_tick(self.tick_id, self)
+        # minimum observed tick duration: the unit of the shedding pass's
+        # min-ticks service-time lower bound (constant dt under a
+        # VirtualClock, so the floor is exact there)
+        if self._last_tick_t is not None:
+            d = now - self._last_tick_t
+            if d > 0 and (self._min_tick_dt is None
+                          or d < self._min_tick_dt):
+                self._min_tick_dt = d
+        self._last_tick_t = now
         tr = self.tracer
         tick_t0 = tr.now_us() if tr is not None else 0.0
         # open each tier's token-budget window: unified tiers pre-charge
@@ -1094,6 +1459,7 @@ class CascadeEngine:
         # opt-in jax-profiler device trace and the host tracer's events
         with obs.step_annotation(self.tick_id, self.profile_annotations):
             for tier in range(len(self.tiers)):
+                self._shed(tier, now)
                 self._admit(tier, now)
                 active.append(self._tier_step(tier, now))
                 self._finish(tier, now)
@@ -1224,5 +1590,7 @@ class CascadeEngine:
                     on_snapshot(self.metrics.snapshot(self.clock.now()))
                 next_snap = self.clock.now() + metrics_interval
             if steps > max_steps:
-                raise RuntimeError("engine did not drain (scheduler stuck?)")
+                raise RuntimeError(
+                    f"engine did not drain after {steps} steps (scheduler "
+                    "stuck?): " + self._drain_diagnostics())
         return self.metrics.summary()

@@ -65,6 +65,17 @@ class ServingMetrics:
         # histograms + reliability bins fed by escalation outcomes
         # (scheduler records decisions, engine records outcomes)
         self.calibration = GateCalibration(n_gates)
+        # overload-and-failure accounting: submissions (conservation
+        # denominator), deadline-shed and retry-failed requests per tier
+        # they were queued for / running on, preemptions with the tokens
+        # they discarded (prefilled prompt + generated tokens, all
+        # recomputed at replay), and transient launch-attempt retries
+        self.submitted = 0
+        self.shed_by_tier = [0] * len(tiers)
+        self.failed_by_tier = [0] * len(tiers)
+        self.preemptions_by_tier = [0] * len(tiers)
+        self.replayed_tokens_by_tier = [0] * len(tiers)
+        self.retries_by_tier = [0] * len(tiers)
         # per-tick wall-time intervals (the engine passes each tick's
         # clock reading to record_step; consecutive deltas feed the
         # tick-duration histogram in summary())
@@ -83,6 +94,31 @@ class ServingMetrics:
         self.stats.cost += self.tiers[tier].flops_per_request * n
         if tier == 0:
             self.stats.requests += n
+
+    def record_submitted(self, n: int = 1) -> None:
+        """A request entered the system (the conservation denominator:
+        at drain, submitted == completed + shed + failed)."""
+        self.submitted += n
+
+    def record_shed(self, tier: int, n: int = 1) -> None:
+        """`n` queued requests rejected by the load-shedding pass."""
+        self.shed_by_tier[tier] += n
+
+    def record_failed(self, tier: int, n: int = 1) -> None:
+        """`n` live requests sacrificed to exhausted launch retries."""
+        self.failed_by_tier[tier] += n
+
+    def record_preemption(self, tier: int, replayed_tokens: int) -> None:
+        """One row evicted by the preemption policy; `replayed_tokens`
+        counts the discarded work (prefilled prompt tokens + generated
+        tokens) the replay will recompute."""
+        self.preemptions_by_tier[tier] += 1
+        self.replayed_tokens_by_tier[tier] += int(replayed_tokens)
+
+    def record_retry(self, tier: int, n: int = 1) -> None:
+        """`n` transient launch-attempt failures absorbed by the
+        engine's bounded retry-with-backoff path."""
+        self.retries_by_tier[tier] += n
 
     def record_step(self, active_per_tier: Sequence[int], now: float) -> None:
         self.steps += 1
@@ -142,6 +178,18 @@ class ServingMetrics:
 
     # -- summary -----------------------------------------------------------
 
+    def conservation(self) -> dict:
+        """Request conservation: every submitted request must end DONE,
+        SHED, or FAILED (``in_flight`` is the residue — nonzero only
+        mid-run; at drain ``ok`` must hold)."""
+        done = len(self.latencies)
+        shed = sum(self.shed_by_tier)
+        failed = sum(self.failed_by_tier)
+        in_flight = self.submitted - done - shed - failed
+        return {"submitted": self.submitted, "completed": done,
+                "shed": shed, "failed": failed, "in_flight": in_flight,
+                "ok": in_flight == 0}
+
     @property
     def elapsed(self) -> float:
         """First arrival -> last completion (makespan)."""
@@ -178,6 +226,9 @@ class ServingMetrics:
                                for g in range(self.calibration.n_gates)],
             "gate_outcomes": list(self.calibration.outcomes),
             "tick_duration_p50": percentile(self.tick_durations, 50),
+            "shed": sum(self.shed_by_tier),
+            "preemptions": sum(self.preemptions_by_tier),
+            "failed": sum(self.failed_by_tier),
         }
 
     def summary(self) -> dict:
@@ -228,6 +279,22 @@ class ServingMetrics:
             "tier_names": [t.name for t in self.tiers],
             "tier_requests": list(self.tier_requests),
             "tier_utilization": util,
+            # overload-and-failure surface: shed rate is over submissions
+            # (a request shed before admission never counts as a request)
+            "submitted": self.submitted,
+            "shed": sum(self.shed_by_tier),
+            "shed_by_tier": list(self.shed_by_tier),
+            "shed_rate": (sum(self.shed_by_tier) / self.submitted
+                          if self.submitted else 0.0),
+            "failed": sum(self.failed_by_tier),
+            "failed_by_tier": list(self.failed_by_tier),
+            "preemptions": sum(self.preemptions_by_tier),
+            "preemptions_by_tier": list(self.preemptions_by_tier),
+            "replayed_tokens": sum(self.replayed_tokens_by_tier),
+            "replayed_tokens_by_tier": list(self.replayed_tokens_by_tier),
+            "launch_retries": sum(self.retries_by_tier),
+            "launch_retries_by_tier": list(self.retries_by_tier),
+            "conservation": self.conservation(),
             "escalation_rates": [g.escalation_rate
                                  for g in self.stats.gates],
             # streaming gate calibration: per-gate confidence histogram,

@@ -160,11 +160,14 @@ class Tracer:
         self._open_req[rid] = ev
 
     def request_done(self, rid: int, tier: int,
-                     shard: Optional[int] = None, **args) -> None:
-        """Terminal transition: close the open span and mark DONE."""
+                     shard: Optional[int] = None,
+                     state: str = "DONE", **args) -> None:
+        """Terminal transition: close the open span and mark the
+        terminal `state` (DONE, or the overload terminals SHED/FAILED)
+        as an instant on the tier's request track."""
         now = self.now_us()
         self._close_req(rid, now)
-        self._append({"name": "DONE", "ph": "i", "ts": now,
+        self._append({"name": state, "ph": "i", "ts": now,
                       "pid": REQUEST_PID_BASE + tier,
                       "tid": int(shard or 0), "s": "t",
                       "args": dict(rid=rid, **args)})

@@ -11,6 +11,21 @@ escalation queue and are re-prefilled there (the expensive member decodes
 from scratch, as in the paper's cascade — its quality, not the fast
 model's draft, is what the gate bought).
 
+Overload and failure add three more states (see docs/serving.md
+"Overload and failure semantics"):
+
+  * ``PREEMPTED`` — a live row evicted by the engine's preemption policy
+    when the KV block pool runs dry.  The tier's partial work is
+    discarded and the request re-queues at the head of its tier's queue;
+    re-admission replays prefill (and, deterministically, the same
+    decode) from scratch through the idempotent chunk machinery, so the
+    replayed token stream is bit-identical to an uninterrupted run.
+  * ``SHED`` (terminal) — a *queued* request rejected by the load-shedding
+    pass because its deadline has passed or provably cannot be met.
+  * ``FAILED`` (terminal) — a live request sacrificed when a launch's
+    bounded retry budget exhausts on persistent transient errors (the
+    engine fails one request, never the whole run).
+
 Timestamps are recorded in the engine's clock domain (wall seconds or
 virtual ticks): arrival, admission per tier, first token, finish.
 """
@@ -29,17 +44,30 @@ class RequestState(enum.Enum):
     DECODE = "decode"
     GATED = "gated"
     ESCALATED = "escalated"
+    PREEMPTED = "preempted"   # evicted from a row; re-queued for replay
+    SHED = "shed"             # terminal: deadline-rejected while queued
+    FAILED = "failed"         # terminal: launch retries exhausted
     DONE = "done"
 
 
 _ALLOWED = {
-    RequestState.QUEUED: {RequestState.PREFILL},
-    RequestState.PREFILL: {RequestState.DECODE},
-    RequestState.DECODE: {RequestState.DECODE, RequestState.GATED},
+    RequestState.QUEUED: {RequestState.PREFILL, RequestState.SHED},
+    RequestState.PREFILL: {RequestState.DECODE, RequestState.PREEMPTED,
+                           RequestState.FAILED},
+    RequestState.DECODE: {RequestState.DECODE, RequestState.GATED,
+                          RequestState.PREEMPTED, RequestState.FAILED},
     RequestState.GATED: {RequestState.ESCALATED, RequestState.DONE},
-    RequestState.ESCALATED: {RequestState.PREFILL},
+    RequestState.ESCALATED: {RequestState.PREFILL, RequestState.SHED},
+    RequestState.PREEMPTED: {RequestState.PREFILL, RequestState.SHED},
+    RequestState.SHED: set(),
+    RequestState.FAILED: set(),
     RequestState.DONE: set(),
 }
+
+#: states a request can never leave (conservation: every submitted
+#: request ends in exactly one of these)
+TERMINAL_STATES = frozenset({RequestState.DONE, RequestState.SHED,
+                             RequestState.FAILED})
 
 
 @dataclass
@@ -48,9 +76,14 @@ class Request:
     prompt: np.ndarray                    # [P] int32
     gen_len: int
     arrival_time: float
+    # absolute completion deadline in the engine's clock domain; None =
+    # no deadline.  The scheduler's shedding pass rejects queued requests
+    # past (or provably unable to meet) it into the SHED terminal state.
+    deadline: Optional[float] = None
     state: RequestState = RequestState.QUEUED
     tier: int = 0                         # current cascade member index
     slot: Optional[int] = None            # KV slot in the current tier pool
+    preemptions: int = 0                  # times evicted and replayed
 
     tokens: List[int] = field(default_factory=list)       # current tier
     token_conf: List[float] = field(default_factory=list)
@@ -78,7 +111,11 @@ class Request:
     # -- lifecycle ---------------------------------------------------------
 
     def admit(self, tier: int, slot: int, now: float) -> None:
-        """QUEUED/ESCALATED -> PREFILL in `tier` occupying `slot`."""
+        """QUEUED/ESCALATED/PREEMPTED -> PREFILL in `tier` occupying
+        `slot`.  Re-admission after preemption resets the tier's partial
+        work (tokens/confidences) exactly like escalation does — greedy
+        decode is deterministic, so the replay regenerates the identical
+        stream."""
         if not self.span_log:
             self.span_log.append((RequestState.QUEUED.value,
                                   self.arrival_time))
@@ -125,6 +162,28 @@ class Request:
         self._to(RequestState.ESCALATED)
         self.slot = None
         self.span_log.append((RequestState.ESCALATED.value, now))
+
+    def preempt(self, now: Optional[float] = None) -> None:
+        """PREFILL/DECODE -> PREEMPTED: evicted from its row, partial
+        tier work discarded; the engine re-queues it for replay."""
+        self._to(RequestState.PREEMPTED)
+        self.slot = None
+        self.preemptions += 1
+        self.span_log.append((RequestState.PREEMPTED.value, now))
+
+    def shed(self, now: Optional[float] = None) -> None:
+        """QUEUED/ESCALATED/PREEMPTED -> SHED (terminal): load-shedding
+        rejected this request (deadline passed or provably unmeetable)."""
+        self._to(RequestState.SHED)
+        self.finish_time = None
+        self.span_log.append((RequestState.SHED.value, now))
+
+    def fail(self, now: Optional[float] = None) -> None:
+        """PREFILL/DECODE -> FAILED (terminal): launch retries exhausted
+        with this request chosen as the sacrifice."""
+        self._to(RequestState.FAILED)
+        self.slot = None
+        self.span_log.append((RequestState.FAILED.value, now))
 
     def complete(self, now: float) -> None:
         self._to(RequestState.DONE)

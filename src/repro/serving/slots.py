@@ -94,8 +94,12 @@ class SlotAllocator:
         return slot
 
     def free(self, slot: int) -> None:
+        # double-free guard: a slot id outside the used set (already
+        # freed, or never allocated) must raise — silently re-appending
+        # it would hand the same row to two requests
         if slot not in self._used:
-            raise ValueError(f"slot {slot} is not allocated")
+            raise ValueError(
+                f"slot {slot} is not allocated (double free?)")
         self._used.remove(slot)
         self._free[self.shard_of(slot)].append(slot)
 
@@ -145,6 +149,9 @@ class BlockAllocator:
             for s in range(shards)]
         self._used = set()
         self._used_by_shard = [0] * shards
+        # blocks withheld from the free lists by fault injection
+        # (reserve()/restore()) — never allocated, never in _used
+        self._reserved: List[List[int]] = [[] for _ in range(shards)]
         self.high_water = 0
         self.high_water_by_shard = [0] * shards
 
@@ -163,12 +170,41 @@ class BlockAllocator:
         return b
 
     def free(self, block: int) -> None:
+        # double-free guard: a block id outside the used set (already
+        # freed, reserved, the null block, or never allocated) must
+        # raise — silently re-appending it would map one KV block into
+        # two rows' page tables
         if block not in self._used:
-            raise ValueError(f"block {block} is not allocated")
+            raise ValueError(
+                f"block {block} is not allocated (double free?)")
         self._used.remove(block)
         shard = self.shard_of(block)
         self._used_by_shard[shard] -= 1
         self._free[shard].append(block)
+
+    def reserve(self, n: int, shard: int = 0) -> int:
+        """Withhold up to `n` free blocks on `shard` (fault injection:
+        mid-run pool shrinkage).  Withheld blocks leave the free list but
+        are not marked used; :meth:`restore` returns them.  Returns the
+        number actually withheld."""
+        take = min(int(n), len(self._free[shard]))
+        for _ in range(take):
+            self._reserved[shard].append(self._free[shard].pop())
+        return take
+
+    def restore(self, shard: Optional[int] = None) -> int:
+        """Return withheld blocks to their free lists (all shards by
+        default).  Returns the number restored."""
+        shards = range(self.shards) if shard is None else (shard,)
+        restored = 0
+        for s in shards:
+            restored += len(self._reserved[s])
+            self._free[s].extend(self._reserved[s])
+            self._reserved[s] = []
+        return restored
+
+    def reserved_in(self, shard: int) -> int:
+        return len(self._reserved[shard])
 
     def free_in(self, shard: int) -> int:
         return len(self._free[shard])
@@ -392,13 +428,48 @@ class TierSlotPool:
         """Return `slot`'s blocks to the free list and unmap its pages.
         Stale device memory is never attended: the pages are unreachable
         once the table row is zeroed, and the next occupant overwrites a
-        reused block before its positions pass the per-row mask."""
+        reused block before its positions pass the per-row mask.
+        Releasing an unbound slot raises (double-release guard: the
+        engine's finish, preemption, and failure paths must each release
+        a row exactly once)."""
+        if slot not in self._order:
+            raise ValueError(f"slot {slot} is not bound (double release?)")
         for b in self._row_blocks[slot]:
             self.blocks.free(b)
         self._row_blocks[slot] = []
         self._row_demand[slot] = self.pages_per_row
         self.page_table[slot] = NULL_BLOCK
         self._order.remove(slot)
+
+    # -- fault injection: mid-run arena shrinkage ---------------------------
+
+    def shrink(self, nblocks: int) -> int:
+        """Withhold up to `nblocks` free blocks from the arena (fault
+        injection: a mid-run capacity loss).  Two caps keep the run
+        deadlock-free: each shard keeps at least ``pages_per_row`` usable
+        blocks (the construction-time floor — one full request can always
+        be served), and each shard's free list keeps the oldest bound
+        row's worst-case remaining demand (the reserve invariant the
+        oldest-first discipline maintains).  Returns the number actually
+        withheld; :meth:`unshrink` restores them."""
+        remaining = int(nblocks)
+        took = 0
+        for s in range(self.data_shards):
+            if remaining <= 0:
+                break
+            usable = self.blocks._span - (1 if s == 0 else 0)
+            floor_cap = (usable - self.pages_per_row
+                         - self.blocks.reserved_in(s))
+            reserve_cap = self.blocks.free_in(s) - self._oldest_worst(s)
+            take = min(remaining, max(min(floor_cap, reserve_cap), 0))
+            got = self.blocks.reserve(take, s)
+            took += got
+            remaining -= got
+        return took
+
+    def unshrink(self) -> int:
+        """Restore every block withheld by :meth:`shrink`."""
+        return self.blocks.restore()
 
     # -- device-side writes ------------------------------------------------
 

@@ -323,6 +323,36 @@ def test_sharded_parity_oversubscribed_arena():
     assert "PARITY-OK" in out
 
 
+def test_sharded_preemption_replays_bit_identical():
+    """Over-subscribed sharded arena WITH a preemption policy: rows
+    evicted and replayed on an 8-device run must still produce token
+    streams bit-identical to the single-device stall-based run (greedy
+    decode replays deterministically), with the same escalation
+    decisions — and the overload path must actually fire."""
+    out = _run(_PARITY_PRELUDE + """
+    rng = np.random.default_rng(11)
+    PLEN, GLEN, N = 16, 4, 12
+    lens = np.clip(np.rint(rng.lognormal(np.log(PLEN / 4), 0.8, N)),
+                   1, PLEN).astype(int)
+    prompts = [rng.integers(0, vocab, L) for L in lens]
+    # same over-subscribed geometry as the stall parity test: 5
+    # pages/row, 24 blocks (6 per shard = one full request + null)
+    kw = dict(slots=8, prompt_len=PLEN, gen_len=GLEN, prefill_chunk=8,
+              kv_block_size=4, kv_blocks=24)
+    base = drain(build(None, 0.5, **kw), prompts)   # stalls, 1 device
+    meshes = make_tier_meshes([(4, 1), (4, 1)])
+    eng = build(meshes, 0.5, preemption_policy="youngest", **kw)
+    shard = drain(eng, prompts)
+    check_parity(base, shard)
+    s = eng.metrics.summary()
+    assert s["preemptions"] > 0, s["preemptions"]
+    assert s["replayed_tokens"] > 0
+    assert s["completed"] == N and s["conservation"]["ok"]
+    print("PREEMPT-PARITY-OK", s["preemptions"], s["replayed_tokens"])
+    """)
+    assert "PREEMPT-PARITY-OK" in out
+
+
 def test_sharded_engine_model_axis_and_memory_stats():
     """A tier mesh with a 'model' axis (2x2: tensor-sharded params) runs
     end to end; per-shard KV high-water marks land in memory_stats and
