@@ -21,7 +21,11 @@ stall-vs-preempt A/B (``preempt_ab``) re-runs one point on an
 over-subscribed KV arena under a deterministic virtual clock with
 ``--preemption none`` vs ``youngest``: evict-and-replay should improve
 tail TTFT over stalling at equal completed work (conservation is a
-hard error in both arms).
+hard error in both arms).  A prefix-cache A/B (``prefix_ab``) serves a
+shared-prefix workload (``--shared-prefix-frac 0.8``, fixed δ,
+virtual clock) with refcounted KV prefix sharing on vs off: live
+prefill tokens should drop ≥2x at bit-identical stream checksums
+(mismatch is a hard error).
 
     PYTHONPATH=src python -m benchmarks.serving_throughput
 
@@ -280,6 +284,55 @@ def main() -> None:
           f"{preempt_ab['ttft_p95_improvement_pct']:+.1f}% vs stalls",
           flush=True)
 
+    # prefix-cache A/B: the same shared-prefix workload (every prompt's
+    # first 80% of tokens come from one base sequence — system-prompt
+    # traffic) served with refcounted KV prefix sharing on vs off.
+    # Deterministic VirtualClock + fixed δ, so the cache may only change
+    # *where prompt KV comes from*, never a token: identical stream
+    # checksums are a hard error otherwise.  The headline is live
+    # prefill tokens actually computed — cached tokens are admitted
+    # straight past prefill — which should drop ≥2x at frac 0.8.
+    prefix_ab = {"length_dist": "uniform", "rate": RATES[0],
+                 "shared_prefix_frac": 0.8, "delta": 0.5}
+    for arm, extra in (("off", []), ("on", ["--prefix-cache"])):
+        args = serve_async.make_parser().parse_args(
+            base_argv("uniform", RATES[0])
+            + ["--shared-prefix-frac", "0.8", "--delta", "0.5"] + extra)
+        t0 = time.time()
+        s = serve_async.run(args, VirtualClock())
+        pc = s.get("prefix_cache") or {}
+        shared_hw = sum(t.get("kv_shared_high_water_blocks", 0)
+                        for t in s["kv_arena"])
+        prefix_ab[arm] = {
+            "completed": s["completed"],
+            "throughput": s["throughput"],
+            "ttft_p50": s["ttft_p50"],
+            "prefill_live_tokens": s["prefill_live_tokens"],
+            "prefill_processed_tokens": s["prefill_processed_tokens"],
+            "stream_checksum": s["stream_checksum"],
+            "prefix_hit_rate": pc.get("hit_rate"),
+            "prefix_cached_tokens": pc.get("cached_tokens"),
+            "prefix_cached_token_frac": pc.get("cached_token_frac"),
+            "kv_shared_high_water_blocks": shared_hw,
+            "wall_s": time.time() - t0,
+        }
+        print(f"prefix A/B [{arm}]: live prefill tokens "
+              f"{s['prefill_live_tokens']}, ttft p50 {s['ttft_p50']:.2f}"
+              + (f", hit rate {pc['hit_rate']:.2f} "
+                 f"(cached {pc['cached_tokens']} tok)"
+                 if arm == "on" and pc else ""), flush=True)
+    if prefix_ab["on"]["stream_checksum"] \
+            != prefix_ab["off"]["stream_checksum"]:
+        raise RuntimeError(
+            "prefix cache changed token streams: checksum "
+            f"{prefix_ab['on']['stream_checksum']} on vs "
+            f"{prefix_ab['off']['stream_checksum']} off")
+    prefix_ab["prefill_token_reduction"] = (
+        prefix_ab["off"]["prefill_live_tokens"]
+        / max(prefix_ab["on"]["prefill_live_tokens"], 1))
+    print(f"prefix A/B: {prefix_ab['prefill_token_reduction']:.2f}x fewer "
+          "live prefill tokens, streams bit-identical", flush=True)
+
     bench = {
         "bench": "serving_throughput",
         "slots": SLOTS,
@@ -292,6 +345,7 @@ def main() -> None:
         "step_ab": step_ab,
         "trace_overhead": trace_overhead,
         "preempt_ab": preempt_ab,
+        "prefix_ab": prefix_ab,
         "flops_saving_vs_always_expensive": [
             1.0 - p["flops_per_request_cascade"]
             / p["flops_per_request_always_expensive"] for p in points],

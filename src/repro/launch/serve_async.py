@@ -18,6 +18,18 @@ reports realized launches/tick either way).  ``--dense-kv`` or
 ``--no-chunked-prefill`` fall back to the uniform packed prefill
 (uniform lengths only).
 
+``--prefix-cache`` turns on refcounted KV prefix sharing (chunked paged
+prefill only): each shard's pool indexes finished prompt chunks at block
+boundaries, later requests with the same leading tokens map those blocks
+read-only and start prefill at the first uncached chunk (cached tokens
+cost 0 admission budget); writes past a shared prefix copy-on-write into
+fresh blocks.  ``--shared-prefix-frac F`` makes the synthetic workload
+exercise it: every request's first ``F``·length tokens come from one
+shared base prompt (system-prompt traffic), the rest stay unique.  Token
+streams are bit-identical with the cache on or off under a fixed
+``--delta``; the summary records the hit rate, cached-token fraction,
+and a stream checksum for cache-A/B comparison.
+
 The gate threshold is set from an escalation *budget* by default
 (δ = the budget-quantile of recently observed sequence confidences —
 the operator caps cost, the runtime finds δ); pass ``--delta`` for a
@@ -63,6 +75,7 @@ trace with named per-tier launch annotations.  See docs/serving.md.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 
 import jax
@@ -124,6 +137,7 @@ def build_engine(args, clock=None, tracer=None):
         prefill_token_budget=args.prefill_token_budget,
         use_unified_step=False if getattr(args, "split_step", False)
         else None,
+        prefix_cache=bool(getattr(args, "prefix_cache", False)),
         clock=clock if clock is not None else WallClock(),
         tracer=tracer,
         profile_annotations=bool(getattr(args, "jax_profile", None)),
@@ -166,6 +180,39 @@ def sample_lengths(dist: str, n: int, max_len: int, min_len: int,
     return np.clip(np.rint(lens), min_len, max_len).astype(np.int64)
 
 
+def apply_shared_prefix(prompts: np.ndarray, lengths: np.ndarray,
+                        frac: float, vocab: int, seed: int) -> np.ndarray:
+    """Overwrite the first ``frac``·length tokens of every prompt with one
+    shared base sequence (system-prompt traffic); the tail stays unique.
+    ``frac=0`` is the identity, ``frac=1`` makes prompts pure prefixes of
+    each other (maximal sharing)."""
+    if not frac:
+        return prompts
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"--shared-prefix-frac must be in [0, 1], "
+                         f"got {frac}")
+    base = bigram_lm(num_seqs=1, seq_len=prompts.shape[1], vocab=vocab,
+                     seed=seed + 7_777_777)[0]
+    out = prompts.copy()
+    for i, n in enumerate(lengths):
+        k = int(frac * int(n))
+        out[i, :k] = base[:k]
+    return out
+
+
+def stream_checksum(engine) -> str:
+    """Order-independent digest of every request's final (tier, state,
+    token stream) — two runs serving the same workload bit-identically
+    agree on it regardless of internal scheduling (the cache-A/B and
+    sharded-parity oracle)."""
+    h = hashlib.sha256()
+    for req in sorted(engine.requests, key=lambda r: r.rid):
+        h.update(f"{req.rid}:{req.tier}:{req.state.name}:".encode())
+        h.update(np.asarray(req.tokens, np.int64).tobytes())
+        h.update(b"|")
+    return h.hexdigest()
+
+
 def snapshot_line(snap: dict) -> str:
     """One-line periodic progress record (``--metrics-interval``)."""
     esc = "/".join(f"{r:.2f}" for r in snap["escalation_rates"])
@@ -194,6 +241,9 @@ def run(args, clock=None) -> dict:
     lengths = sample_lengths(args.length_dist, args.requests,
                              args.prompt_len, args.min_prompt_len,
                              args.seed)
+    prompts = apply_shared_prefix(
+        prompts, lengths, getattr(args, "shared_prefix_frac", 0.0),
+        vocab, args.seed)
     arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
     # warmup compiles every tier and then resets the clock, so arrival
     # timestamps are relative to the start of serving, not construction
@@ -257,6 +307,12 @@ def run(args, clock=None) -> dict:
         summary["faults"] = engine.faults.describe()
         summary["fault_events"] = len(engine.faults.log)
     summary["kv_arena"] = engine.memory_stats()
+    # prefix-cache A/B provenance: config knobs plus an order-independent
+    # digest of every final token stream (bit-identity oracle)
+    summary["prefix_cache_enabled"] = engine.prefix_cache
+    summary["shared_prefix_frac"] = float(
+        getattr(args, "shared_prefix_frac", 0.0) or 0.0)
+    summary["stream_checksum"] = stream_checksum(engine)
     # sharded serving: per-tier mesh layout (None entries: single-device)
     summary["tier_meshes"] = engine.mesh_topology()
     summary["device_count"] = jax.device_count()
@@ -312,6 +368,16 @@ def report(s: dict) -> None:
               + ("ok" if cons.get("ok")
                  else ("interrupted" if s.get("interrupted")
                        else f"VIOLATED ({cons})")))
+    pc = s.get("prefix_cache") or {}
+    if s.get("prefix_cache_enabled") and pc.get("lookups"):
+        shared_hw = sum(t.get("kv_shared_high_water_blocks", 0)
+                        for t in s.get("kv_arena", [])
+                        if isinstance(t, dict))
+        print(f"  prefix cache  hit rate {pc['hit_rate']:.2f} "
+              f"({pc['hits']}/{pc['lookups']} admissions)  "
+              f"cached tokens {pc['cached_tokens']} "
+              f"({pc['cached_token_frac']:.2f} of prompt tokens)  "
+              f"shared-block hw {shared_hw}")
     rates = ", ".join(f"{r:.3f}" for r in s["escalation_rates"])
     deltas = ", ".join(f"{d:.4f}" for d in s["delta"])
     target = ("" if s.get("escalation_budget") is None
@@ -380,6 +446,18 @@ def make_parser() -> argparse.ArgumentParser:
                     help="KV arena size in blocks per tier (default: fully "
                          "provisioned slots*pages_per_row+1; smaller "
                          "over-subscribes, attention-only models)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted KV prefix sharing: index finished "
+                         "prompt chunks per shard, admit later requests "
+                         "with matching leading tokens straight past them "
+                         "(copy-on-write past the shared prefix; needs "
+                         "chunked paged prefill)")
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    metavar="F",
+                    help="overwrite the first F·length tokens of every "
+                         "prompt with one shared base sequence (synthetic "
+                         "system-prompt traffic for exercising "
+                         "--prefix-cache); 0 leaves prompts unique")
     ap.add_argument("--dense-kv", action="store_true",
                     help="PR 1 dense one-page-per-request arena instead of "
                          "the block-paged arena + paged decode kernel")

@@ -228,7 +228,8 @@ class _TierRuntime:
                  kv_blocks: Optional[int] = None,
                  use_chunked_prefill: bool = False,
                  prefill_chunk: int = 128,
-                 use_unified_step: bool = False):
+                 use_unified_step: bool = False,
+                 prefix_cache: bool = False):
         self.spec = spec
         self.capacity = capacity
         self.prompt_len = prompt_len          # max prompt length (tokens)
@@ -236,6 +237,7 @@ class _TierRuntime:
         self.chunked = use_chunked_prefill
         self.unified = use_unified_step and use_chunked_prefill
         self.chunk = min(prefill_chunk, prompt_len)
+        self.prefix = bool(prefix_cache) and self.paged and self.chunked
         self.mesh = spec.mesh
         self.data_shards = spec.data_shards()
         if capacity % self.data_shards:
@@ -245,7 +247,9 @@ class _TierRuntime:
         if use_paged_kv:
             self.pool = TierSlotPool(spec.cfg, capacity, max_seq,
                                      block_size=block_size,
-                                     num_blocks=kv_blocks, mesh=spec.mesh)
+                                     num_blocks=kv_blocks, mesh=spec.mesh,
+                                     prefix_chunk=(self.chunk if self.prefix
+                                                   else None))
         else:
             self.pool = DenseTierSlotPool(spec.cfg, capacity, max_seq,
                                           mesh=spec.mesh)
@@ -446,6 +450,7 @@ class CascadeEngine:
                  prefill_chunk: int = 128,
                  prefill_token_budget: Optional[int] = None,
                  use_unified_step: Optional[bool] = None,
+                 prefix_cache: bool = False,
                  tracer: Optional[obs.Tracer] = None,
                  profile_annotations: bool = False,
                  clock=None,
@@ -502,6 +507,20 @@ class CascadeEngine:
         id) and each launch in a named ``TraceAnnotation`` so an opt-in
         device-profiler window correlates with the host tracer.
 
+        ``prefix_cache`` turns on **refcounted prefix caching** (requires
+        the chunked block-paged path): each tier's pool keeps a
+        per-shard prefix index over chunk-aligned prompt prefixes, and
+        admission matches a submitted prompt's longest cached prefix,
+        maps those KV blocks read-only into the new row's page table
+        (copy-on-write isolates any block a boundary splits), and starts
+        chunked prefill at the first uncached token — cached tokens cost
+        0 prefill work and 0 admission budget.  Completed chunk
+        boundaries are published back to the index as rows prefill;
+        eviction is refcount-aware LRU (docs/serving.md "Prefix
+        caching").  Token streams are bit-identical with the cache on or
+        off under a fixed-δ gate: shared KV equals what re-prefilling
+        the same tokens would write, and greedy decode is deterministic.
+
         ``preemption_policy`` trades stalls for evictions when the KV
         block pool runs dry (docs/serving.md "Overload and failure
         semantics"): ``youngest`` evicts the most recently bound row on
@@ -541,6 +560,13 @@ class CascadeEngine:
                 "and recurrent-state tiers keep the legacy split "
                 "chunk+decode path (use_unified_step=False)")
         self.unified_step = use_unified_step
+        if prefix_cache and not use_chunked_prefill:
+            raise ValueError(
+                "prefix caching requires chunked paged prefill "
+                "(use_paged_kv=True, attention-only tiers): shared prefix "
+                "blocks are matched and published at chunk boundaries, and "
+                "the resumed prefill starts mid-prompt")
+        self.prefix_cache = bool(prefix_cache)
         if prefill_chunk <= 0:
             raise ValueError("prefill_chunk must be positive")
         slots_per_tier = ([int(slots)] * m if np.isscalar(slots)
@@ -614,7 +640,8 @@ class CascadeEngine:
                          kv_blocks=nb,
                          use_chunked_prefill=use_chunked_prefill,
                          prefill_chunk=self.prefill_chunk,
-                         use_unified_step=use_unified_step)
+                         use_unified_step=use_unified_step,
+                         prefix_cache=prefix_cache)
             for spec, cap, nb in zip(self.tiers, slots_per_tier,
                                      kv_blocks_per_tier)]
         self.requests: List[Request] = []
@@ -749,6 +776,38 @@ class CascadeEngine:
                 best, best_free = s, free
         return best
 
+    def _pick_shard_prefix(self, tier: int, rt: _TierRuntime, req: Request):
+        """Chunked admission's shard choice plus the longest cached
+        prefix there, as ``(shard, cached_tokens, blocks)``.  Among
+        shards with a free row whose pool passes ``can_admit``, prefer
+        the longest prefix match, then the most free blocks (lowest
+        shard id on ties) — with the cache off this reduces exactly to
+        :meth:`_pick_shard`.  A shard whose pool cannot take the request
+        *with* its match (the pinned blocks stop being LRU-evictable) is
+        retried without it, so caching never blocks an admission the
+        uncached path would have made."""
+        alloc = self.scheduler.allocators[tier]
+        plen = req.prompt_tokens
+        best = None
+        for s in range(rt.data_shards):
+            if alloc.free_in(s) == 0:
+                continue
+            cached, blocks = (rt.pool.match_prefix(req.prompt, s)
+                              if rt.prefix else (0, []))
+            span = cached + min(rt.chunk, plen - cached)
+            if not rt.pool.can_admit(span, s, cached=cached,
+                                     prefix_blocks=blocks):
+                if not cached or not rt.pool.can_admit(
+                        min(rt.chunk, plen), s):
+                    continue
+                cached, blocks = 0, []
+            key = (cached, rt.pool.blocks.free_in(s), -s)
+            if best is None or key > best[0]:
+                best = (key, s, cached, blocks)
+        if best is None:
+            return None, 0, []
+        return best[1], best[2], best[3]
+
     def _trace_req(self, req: Request, state: str,
                    tier: int, shard: Optional[int]) -> None:
         if self.tracer is not None:
@@ -785,8 +844,6 @@ class CascadeEngine:
             # old accounting (full prompt length, prefill-only window).
             # No compute here — the token batch runs in _tier_step.
             fresh = 0
-            cost = ((lambda r: min(rt.chunk, r.prompt_tokens))
-                    if rt.unified else None)
             while True:
                 head = self.scheduler.peek(tier, now)
                 if head is None:
@@ -797,9 +854,18 @@ class CascadeEngine:
                 # (Eq 7 cost and stats.requests stay per-request); the
                 # replayed compute is visible as replayed_tokens instead
                 replay = head.state is RequestState.PREEMPTED
-                shard = self._pick_shard(tier, rt, min(rt.chunk, plen))
+                shard, cached, pblocks = \
+                    self._pick_shard_prefix(tier, rt, head)
                 if shard is None:
                     break
+                # admission billing skips the cached prefix entirely:
+                # unified tiers charge the first *uncached* chunk, split
+                # tiers the uncached suffix — cached chunks cost 0
+                cost = ((lambda r, c=cached:
+                         min(rt.chunk, r.prompt_tokens - c))
+                        if rt.unified else
+                        (lambda r, c=cached: r.prompt_tokens - c)
+                        if cached else None)
                 reqs, slot_ids = self.scheduler.admit(
                     tier, now, limit=1,
                     token_budget=self.prefill_token_budget,
@@ -810,13 +876,22 @@ class CascadeEngine:
                 if not reqs:
                     break               # over budget this tick
                 req, slot = reqs[0], slot_ids[0]
-                rt.pool.bind(slot, min(rt.chunk, plen),
-                             row_tokens=plen + self.gen_len)
+                rt.pool.bind(slot, cached + min(rt.chunk, plen - cached),
+                             row_tokens=plen + self.gen_len,
+                             prefix=(cached, pblocks) if cached else None)
                 rt.slot_req[slot] = req
-                rt.prefill_pos[slot] = 0
+                # chunked prefill resumes at the first uncached token
+                rt.prefill_pos[slot] = cached
                 self._trace_req(req, "PREFILL", tier, shard)
-                self._budget_used[tier] += (min(rt.chunk, plen)
-                                            if rt.unified else plen)
+                if rt.prefix:
+                    self.metrics.record_prefix_lookup(tier, cached, plen)
+                    if self.tracer is not None:
+                        self.tracer.prefix_cache_event(
+                            tier, req.rid, cached, plen,
+                            tick=self.tick_id, shard=shard)
+                self._budget_used[tier] += (min(rt.chunk, plen - cached)
+                                            if rt.unified
+                                            else plen - cached)
                 self._admitted[tier] += 1
                 fresh += 0 if replay else 1
             if fresh:
@@ -1135,6 +1210,11 @@ class CascadeEngine:
                 held = [rt.pool.blocks.reserved_in(s) for s in shards]
                 if any(held):
                     line += f" withheld_by_shard={held}"
+                if rt.prefix:
+                    line += (" prefix_entries_by_shard="
+                             f"{[rt.pool.prefix_index_entries(s) for s in shards]}"
+                             " evictable_by_shard="
+                             f"{[rt.pool.evictable_in(s) for s in shards]}")
             lines.append(line)
         return "; ".join(lines)
 
@@ -1211,6 +1291,11 @@ class CascadeEngine:
         # stay unfetched until something must be emitted
         for s in plan.prefill_rows:
             rt.prefill_pos[s] += int(plan.q_len[s])
+            if rt.prefix:
+                # the launch above scattered this chunk's KV: completed
+                # chunk boundaries are now publishable prefix entries
+                rt.pool.publish_prefix(s, rt.slot_req[s].prompt,
+                                       int(rt.prefill_pos[s]))
         t_dec = self.clock.now()
         for s in plan.finishing:
             req = rt.slot_req[s]
@@ -1268,6 +1353,9 @@ class CascadeEngine:
                                                rt.capacity * plan.width)
             for s in plan.prefill_rows:
                 rt.prefill_pos[s] += int(plan.q_len[s])
+                if rt.prefix:
+                    rt.pool.publish_prefix(s, rt.slot_req[s].prompt,
+                                           int(rt.prefill_pos[s]))
             t_dec = self.clock.now()
             for s in plan.finishing:
                 req = rt.slot_req[s]

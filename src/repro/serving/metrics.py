@@ -76,6 +76,15 @@ class ServingMetrics:
         self.preemptions_by_tier = [0] * len(tiers)
         self.replayed_tokens_by_tier = [0] * len(tiers)
         self.retries_by_tier = [0] * len(tiers)
+        # prefix-cache telemetry (engine records one lookup per chunked
+        # admission when the cache is enabled): hits are admissions that
+        # mapped a cached prefix; cached_prefix_tokens are prompt tokens
+        # served from shared KV blocks — prefill work (and admission
+        # budget) the cascade never paid
+        self.prefix_lookups_by_tier = [0] * len(tiers)
+        self.prefix_hits_by_tier = [0] * len(tiers)
+        self.prefix_cached_tokens_by_tier = [0] * len(tiers)
+        self.prefix_prompt_tokens_by_tier = [0] * len(tiers)
         # per-tick wall-time intervals (the engine passes each tick's
         # clock reading to record_step; consecutive deltas feed the
         # tick-duration histogram in summary())
@@ -141,6 +150,17 @@ class ServingMetrics:
             agree = req.tokens_by_tier[g] == req.tokens_by_tier[g + 1]
             self.calibration.record_outcome(
                 g, req.seq_conf_by_tier[g], agree, req.prompt_tokens)
+
+    def record_prefix_lookup(self, tier: int, cached_tokens: int,
+                             prompt_tokens: int) -> None:
+        """One prefix-cache lookup at admission: `cached_tokens` of the
+        request's `prompt_tokens` were served from shared KV blocks
+        (0 on a miss)."""
+        self.prefix_lookups_by_tier[tier] += 1
+        if cached_tokens:
+            self.prefix_hits_by_tier[tier] += 1
+            self.prefix_cached_tokens_by_tier[tier] += int(cached_tokens)
+        self.prefix_prompt_tokens_by_tier[tier] += int(prompt_tokens)
 
     def record_prefill_tokens(self, live: int, processed: int) -> None:
         """One prefill execution: `live` real prompt tokens inside a
@@ -294,6 +314,26 @@ class ServingMetrics:
             "replayed_tokens_by_tier": list(self.replayed_tokens_by_tier),
             "launch_retries": sum(self.retries_by_tier),
             "launch_retries_by_tier": list(self.retries_by_tier),
+            # prefix cache: hit rate over lookups, tokens served from
+            # shared blocks (the prefill work saved), and the fraction
+            # of all admitted prompt tokens the cache absorbed
+            "prefix_cache": {
+                "lookups": sum(self.prefix_lookups_by_tier),
+                "hits": sum(self.prefix_hits_by_tier),
+                "hit_rate": (sum(self.prefix_hits_by_tier)
+                             / sum(self.prefix_lookups_by_tier)
+                             if sum(self.prefix_lookups_by_tier)
+                             else float("nan")),
+                "cached_tokens": sum(self.prefix_cached_tokens_by_tier),
+                "cached_token_frac": (
+                    sum(self.prefix_cached_tokens_by_tier)
+                    / sum(self.prefix_prompt_tokens_by_tier)
+                    if sum(self.prefix_prompt_tokens_by_tier)
+                    else float("nan")),
+                "hits_by_tier": list(self.prefix_hits_by_tier),
+                "cached_tokens_by_tier":
+                    list(self.prefix_cached_tokens_by_tier),
+            },
             "conservation": self.conservation(),
             "escalation_rates": [g.escalation_rate
                                  for g in self.stats.gates],

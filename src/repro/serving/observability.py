@@ -136,6 +136,17 @@ class Tracer:
                       "pid": ENGINE_PID, "tid": tid, "s": "t",
                       "args": args})
 
+    def prefix_cache_event(self, tier: int, rid: int, cached_tokens: int,
+                           prompt_tokens: int, **args) -> None:
+        """One prefix-cache lookup at admission, as an instant on the
+        tier's engine lane: ``prefix_cache_hit`` when a cached prefix
+        was mapped (args carry how many of the prompt's tokens it
+        covers), ``prefix_cache_miss`` otherwise."""
+        self.instant(
+            "prefix_cache_hit" if cached_tokens else "prefix_cache_miss",
+            tier, rid=rid, cached_tokens=int(cached_tokens),
+            prompt_tokens=int(prompt_tokens), **args)
+
     def counter(self, name: str, value: float, tid: int = 0) -> None:
         """A counter track sample (queue depth, live rows, ...)."""
         self._append({"name": name, "ph": "C", "ts": self.now_us(),

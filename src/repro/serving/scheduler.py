@@ -156,7 +156,10 @@ class CascadeScheduler:
         ``token_cost`` maps a request to its budget charge — default its
         full prompt length (the legacy currency); the unified engine
         charges only the first chunk, since later chunks bill later
-        ticks' windows.  The window's first *admitted request* is always
+        ticks' windows, and with the prefix cache on both engine paths
+        subtract the matched cached prefix first (tokens served from
+        shared KV blocks are never prefilled, so they cost 0 admission
+        budget).  The window's first *admitted request* is always
         admitted even when over budget (a prompt longer than the whole
         budget must not starve): with ``admitted_before`` (requests
         already admitted in this window) the guard keys on admissions,

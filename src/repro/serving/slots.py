@@ -27,6 +27,26 @@ and new admissions must leave ``worst_remaining(oldest)`` blocks free.
 Since every row releases all its blocks when it finishes, the oldest row
 always completes, then the next-oldest inherits the guarantee.
 
+**Refcounted prefix sharing** (``TierSlotPool(prefix_chunk=...)``): every
+mapping of a block — a row's page-table entry or a prefix-index entry —
+holds one reference; :meth:`BlockAllocator.free` decrements and a block
+returns to the free list only at refcount 0.  The per-shard prefix index
+is a hash map keyed by the exact token bytes of chunk-aligned prompt
+prefixes (boundaries are chunk multiples rounded **down** to a block
+boundary, so a published block is full and never written again — the
+publisher's next scatter starts at or past the boundary).  Admission
+matches the longest indexed prefix, maps those blocks read-only into the
+new row's page table (pinning them with a refcount), and chunked prefill
+resumes at the first uncached token.  Any write past a shared boundary
+lands in a fresh private block; if an index entry's boundary splits a
+block (possible only for entries not produced by the aligned publisher,
+e.g. hand-built ones), :meth:`TierSlotPool.bind` copies that block on
+write into a private page before any scatter.  Eviction is
+refcount-aware LRU over index entries: only blocks whose every reference
+is an index reference can return to the free list, so releasing a
+preempted victim never reclaims blocks still shared with the index or
+other rows.
+
 **Sharded pools** (multi-device serving): when a tier runs on a mesh
 with ``D`` data shards, its ``capacity`` rows and its block pool are
 partitioned into ``D`` contiguous ranges — shard ``d`` owns rows
@@ -130,6 +150,15 @@ class BlockAllocator:
     reserved null block, so it exposes one fewer usable block.
     ``alloc(shard)`` pops from that shard's free list; per-shard
     high-water marks feed the BENCH json's per-shard KV accounting.
+
+    Blocks are **refcounted** for prefix sharing: ``alloc`` hands out a
+    block at refcount 1, :meth:`ref` adds a reference (an extra row
+    page-table mapping or a prefix-index entry), and :meth:`free`
+    decrements — the block rejoins the free list only when the count
+    reaches 0.  A block is therefore in exactly one of three states:
+    free (on a shard free list), withheld (:meth:`reserve`), or live
+    (refcount >= 1); ``shared_high_water`` tracks the peak number of
+    blocks with refcount >= 2.
     """
 
     def __init__(self, num_blocks: int, shards: int = 1):
@@ -149,11 +178,14 @@ class BlockAllocator:
             for s in range(shards)]
         self._used = set()
         self._used_by_shard = [0] * shards
+        self._refcount = {}             # live block -> refs (>= 1)
+        self._shared = 0                # live blocks with refcount >= 2
         # blocks withheld from the free lists by fault injection
         # (reserve()/restore()) — never allocated, never in _used
         self._reserved: List[List[int]] = [[] for _ in range(shards)]
         self.high_water = 0
         self.high_water_by_shard = [0] * shards
+        self.shared_high_water = 0
 
     def shard_of(self, block: int) -> int:
         return block // self._span
@@ -164,10 +196,30 @@ class BlockAllocator:
         b = self._free[shard].pop()
         self._used.add(b)
         self._used_by_shard[shard] += 1
+        self._refcount[b] = 1
         self.high_water = max(self.high_water, len(self._used))
         self.high_water_by_shard[shard] = max(
             self.high_water_by_shard[shard], self._used_by_shard[shard])
         return b
+
+    def ref(self, block: int) -> None:
+        """Add a reference to a live block (an extra page-table mapping
+        or a prefix-index entry).  Sharing a block that is not currently
+        allocated raises — a free or withheld block's contents are about
+        to be overwritten by the next occupant."""
+        if block not in self._used:
+            raise ValueError(
+                f"block {block} is not allocated (cannot share it)")
+        rc = self._refcount[block] + 1
+        self._refcount[block] = rc
+        if rc == 2:
+            self._shared += 1
+            self.shared_high_water = max(self.shared_high_water,
+                                         self._shared)
+
+    def refcount(self, block: int) -> int:
+        """Current reference count (0 for free/withheld/null blocks)."""
+        return self._refcount.get(block, 0)
 
     def free(self, block: int) -> None:
         # double-free guard: a block id outside the used set (already
@@ -177,10 +229,26 @@ class BlockAllocator:
         if block not in self._used:
             raise ValueError(
                 f"block {block} is not allocated (double free?)")
+        rc = self._refcount[block] - 1
+        if rc > 0:
+            # still shared: drop one reference, keep the block live
+            self._refcount[block] = rc
+            if rc == 1:
+                self._shared -= 1
+            return
+        del self._refcount[block]
         self._used.remove(block)
         shard = self.shard_of(block)
         self._used_by_shard[shard] -= 1
         self._free[shard].append(block)
+
+    def used_in(self, shard: int) -> int:
+        return self._used_by_shard[shard]
+
+    @property
+    def num_shared(self) -> int:
+        """Live blocks currently referenced more than once."""
+        return self._shared
 
     def reserve(self, n: int, shard: int = 0) -> int:
         """Withhold up to `n` free blocks on `shard` (fault injection:
@@ -216,6 +284,20 @@ class BlockAllocator:
     @property
     def num_used(self) -> int:
         return len(self._used)
+
+
+class PrefixEntry:
+    """One cached prompt prefix: ``ntokens`` block-aligned tokens whose
+    KV lives in ``blocks`` (all on one shard).  The entry holds one
+    allocator reference per listed block; ``last_use`` orders LRU
+    eviction."""
+
+    __slots__ = ("ntokens", "blocks", "last_use")
+
+    def __init__(self, ntokens: int, blocks: List[int], last_use: int):
+        self.ntokens = ntokens
+        self.blocks = blocks
+        self.last_use = last_use
 
 
 # -- pytree scatter helpers --------------------------------------------------
@@ -282,9 +364,12 @@ class TierSlotPool:
 
     def __init__(self, cfg, capacity: int, max_seq: int, dtype=jnp.float32,
                  *, block_size: int = 16, num_blocks: Optional[int] = None,
-                 mesh=None, data_shards: Optional[int] = None):
+                 mesh=None, data_shards: Optional[int] = None,
+                 prefix_chunk: Optional[int] = None):
         if block_size <= 0:
             raise ValueError("block_size must be positive")
+        if prefix_chunk is not None and prefix_chunk <= 0:
+            raise ValueError("prefix_chunk must be positive")
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
@@ -332,6 +417,16 @@ class TierSlotPool:
         self._row_blocks: List[List[int]] = [[] for _ in range(capacity)]
         self._row_demand: List[int] = [self.pages_per_row] * capacity
         self._order: List[int] = []     # bound rows, oldest first
+        # -- prefix cache state (inert when prefix_chunk is None) -------
+        self.prefix_chunk = prefix_chunk
+        self._index: List[dict] = [dict() for _ in range(self.data_shards)]
+        self._index_refs: dict = {}     # block -> index references held
+        self._lru = 0                   # monotonic LRU clock
+        self._row_shared: List[int] = [0] * capacity   # read-only pages
+        self._row_published: List[int] = [0] * capacity  # chunks published
+        self._released_shared: dict = {}  # slot -> live blocks at release
+        self.prefix_evictions = 0
+        self.prefix_cow_copies = 0
 
     # -- admission-side block accounting -----------------------------------
 
@@ -363,46 +458,222 @@ class TierSlotPool:
     def blocks_for(self, ntokens: int) -> int:
         return math.ceil(ntokens / self.block_size)
 
-    def can_admit(self, prompt_len: int, shard: int = 0) -> bool:
-        """True if a new request's prompt pages fit on `shard` while
-        leaving that shard's oldest bound row its worst-case remaining
-        demand."""
-        need = self.blocks_for(prompt_len)
-        return self.blocks.free_in(shard) - need >= self._oldest_worst(shard)
+    # -- prefix index (refcounted block sharing) ----------------------------
+
+    @property
+    def prefix_enabled(self) -> bool:
+        return self.prefix_chunk is not None
+
+    def _prefix_key(self, prompt, ntokens: int) -> bytes:
+        """Index key for the first `ntokens` of `prompt`: the exact token
+        bytes (a hash map keyed by content — no collision handling
+        needed, unlike a lossy hash chain)."""
+        return np.ascontiguousarray(
+            np.asarray(prompt[:ntokens]), dtype=np.int32).tobytes()
+
+    def _prefix_boundaries(self, limit: int) -> List[int]:
+        """Publishable prefix boundaries <= `limit`, ascending: chunk
+        multiples rounded down to a block boundary, so every block under
+        a boundary is full and append-frozen by the time it is shared."""
+        out = []
+        k, chunk, bs = 1, self.prefix_chunk, self.block_size
+        while k * chunk <= limit:
+            b = (k * chunk // bs) * bs
+            if b > 0 and (not out or b > out[-1]):
+                out.append(b)
+            k += 1
+        return out
+
+    def match_prefix(self, prompt, shard: int):
+        """Longest indexed prefix of `prompt` on `shard`, as
+        ``(ntokens, blocks)`` — ``(0, [])`` on a miss.  The match is
+        capped at ``len(prompt) - 1`` tokens so at least one prompt
+        token is always prefilled (the final chunk computes the
+        first-token logits).  Touches the entry's LRU stamp; the caller
+        must :meth:`bind` with the match before anything else allocates
+        on this shard (eviction could otherwise reclaim the blocks)."""
+        if self.prefix_chunk is None or len(prompt) < 2:
+            return 0, []
+        idx = self._index[shard]
+        for b in reversed(self._prefix_boundaries(len(prompt) - 1)):
+            ent = idx.get(self._prefix_key(prompt, b))
+            if ent is not None:
+                self._lru += 1
+                ent.last_use = self._lru
+                return ent.ntokens, list(ent.blocks)
+        return 0, []
+
+    def publish_prefix(self, slot: int, prompt, upto: int) -> int:
+        """Insert `slot`'s completed chunk boundaries (prompt KV written
+        for ``[0, upto)``) into its shard's prefix index, taking one
+        block reference per listed block.  Re-publishing an existing key
+        only refreshes its LRU stamp.  Returns entries added."""
+        if self.prefix_chunk is None:
+            return 0
+        upto = min(int(upto), len(prompt))
+        idx = self._index[self.shard_of(slot)]
+        chunk, bs = self.prefix_chunk, self.block_size
+        added, k = 0, self._row_published[slot] + 1
+        while k * chunk <= upto:
+            b = (k * chunk // bs) * bs
+            if b > 0:
+                key = self._prefix_key(prompt, b)
+                self._lru += 1
+                ent = idx.get(key)
+                if ent is None:
+                    blocks = [int(self.page_table[slot, j])
+                              for j in range(b // bs)]
+                    for blk in blocks:
+                        self.blocks.ref(blk)
+                        self._index_refs[blk] = \
+                            self._index_refs.get(blk, 0) + 1
+                    idx[key] = PrefixEntry(b, blocks, self._lru)
+                    added += 1
+                else:
+                    ent.last_use = self._lru
+            k += 1
+        self._row_published[slot] = k - 1
+        return added
+
+    def _evict_entry(self, shard: int, key: bytes) -> None:
+        ent = self._index[shard].pop(key)
+        for b in ent.blocks:
+            n = self._index_refs[b] - 1
+            if n:
+                self._index_refs[b] = n
+            else:
+                del self._index_refs[b]
+            self.blocks.free(b)
+        self.prefix_evictions += 1
+
+    def _reclaim(self, shard: int, need_free: int) -> bool:
+        """Evict LRU prefix entries on `shard` until its free list holds
+        `need_free` blocks.  Only blocks whose every reference is an
+        index reference actually return to the free list — blocks shared
+        with live rows (or longer entries) just drop one reference."""
+        idx = self._index[shard]
+        while idx and self.blocks.free_in(shard) < need_free:
+            key = min(idx, key=lambda kk: idx[kk].last_use)
+            self._evict_entry(shard, key)
+        return self.blocks.free_in(shard) >= need_free
+
+    def evictable_in(self, shard: int) -> int:
+        """Blocks on `shard` that dropping the whole prefix index would
+        return to the free list (every reference is an index
+        reference)."""
+        if self.prefix_chunk is None:
+            return 0
+        seen, n = set(), 0
+        for ent in self._index[shard].values():
+            for b in ent.blocks:
+                if b not in seen:
+                    seen.add(b)
+                    if self.blocks.refcount(b) == self._index_refs.get(b, 0):
+                        n += 1
+        return n
+
+    def prefix_index_entries(self, shard: Optional[int] = None) -> int:
+        if shard is not None:
+            return len(self._index[shard])
+        return sum(len(i) for i in self._index)
+
+    def _alloc_reclaiming(self, shard: int) -> Optional[int]:
+        b = self.blocks.alloc(shard)
+        if b is None and self._reclaim(shard, 1):
+            b = self.blocks.alloc(shard)
+        return b
+
+    def can_admit(self, prompt_len: int, shard: int = 0, *,
+                  cached: int = 0, prefix_blocks: Sequence[int] = ()) -> bool:
+        """True if a new request's pages for its first ``prompt_len``
+        tokens fit on `shard` while leaving that shard's oldest bound
+        row its worst-case remaining demand.  With a prefix match,
+        `cached` tokens are served by `prefix_blocks` (only the suffix
+        pages need fresh blocks); LRU-evictable index blocks count
+        toward availability, minus the matched blocks that admission
+        would pin (they stop being evictable once a row maps them)."""
+        need = self.blocks_for(prompt_len) - cached // self.block_size
+        avail = self.blocks.free_in(shard) + self.evictable_in(shard)
+        if cached:
+            avail -= sum(
+                1 for b in set(prefix_blocks[:cached // self.block_size])
+                if self.blocks.refcount(b) == self._index_refs.get(b, 0) > 0)
+        return avail - need >= self._oldest_worst(shard)
 
     def bind(self, slot: int, ntokens: int,
-             row_tokens: Optional[int] = None) -> None:
-        """Claim `slot` (newest) and allocate pages for its first
-        ``ntokens`` (the whole prompt under one-shot prefill; the first
-        chunk under chunked prefill — later chunks grow via
-        :meth:`ensure_blocks`).  Blocks come from `slot`'s data shard.
-        ``row_tokens`` bounds the row's lifetime demand
-        (``prompt_len + gen_len``; default ``max_seq``) for the
+             row_tokens: Optional[int] = None,
+             prefix: Optional[tuple] = None) -> None:
+        """Claim `slot` (newest) and map pages for its first ``ntokens``
+        (the whole prompt under one-shot prefill; the cached prefix plus
+        the first uncached chunk under chunked prefill — later chunks
+        grow via :meth:`ensure_blocks`).  Fresh blocks come from
+        `slot`'s data shard.  ``row_tokens`` bounds the row's lifetime
+        demand (``prompt_len + gen_len``; default ``max_seq``) for the
         oldest-first reserve accounting.  Callers must check
-        :meth:`can_admit` first."""
+        :meth:`can_admit` first.
+
+        ``prefix=(cached, blocks)`` (from :meth:`match_prefix`) maps the
+        first ``cached // block_size`` blocks read-only into the page
+        table, pinning each with a refcount before anything else can
+        evict them.  If ``cached`` splits a block (an unaligned entry —
+        the engine's publisher only emits block-aligned boundaries), the
+        split block is **copied on write**: its contents go to a fresh
+        private page so the row's own scatters never touch shared
+        memory."""
         if self._row_blocks[slot]:
             raise ValueError(f"slot {slot} already bound")
         shard = self.shard_of(slot)
-        need = self.blocks_for(ntokens)
-        if self.blocks.free_in(shard) < need:
-            raise RuntimeError("bind without can_admit: no free blocks")
+        cached, pblocks = (0, []) if prefix is None else prefix
+        full_shared = cached // self.block_size
+        need = self.blocks_for(ntokens) - full_shared
         demand = self.blocks_for(self.max_seq if row_tokens is None
                                  else min(row_tokens, self.max_seq))
-        if demand < need:
+        if demand < self.blocks_for(ntokens):
             raise ValueError(f"row_tokens={row_tokens} smaller than the "
                              f"{ntokens} tokens being bound")
+        # pin the shared prefix first: once the row holds a reference,
+        # reclaim below cannot evict the matched blocks from under us
+        for j in range(full_shared):
+            self.blocks.ref(pblocks[j])
+            self._row_blocks[slot].append(pblocks[j])
+            self.page_table[slot, j] = pblocks[j]
+        self._row_shared[slot] = full_shared
         self._row_demand[slot] = demand
+        self._row_published[slot] = 0
         self._order.append(slot)
-        for j in range(need):
+        if self.blocks.free_in(shard) < need and \
+                not self._reclaim(shard, need):
+            # roll back the shared pins so the failed bind leaks nothing
+            for b in self._row_blocks[slot]:
+                self.blocks.free(b)
+            self._row_blocks[slot] = []
+            self._row_shared[slot] = 0
+            self._row_demand[slot] = self.pages_per_row
+            self.page_table[slot] = NULL_BLOCK
+            self._order.remove(slot)
+            raise RuntimeError("bind without can_admit: no free blocks")
+        for j in range(full_shared, self.blocks_for(ntokens)):
             b = self.blocks.alloc(shard)
             self._row_blocks[slot].append(b)
             self.page_table[slot, j] = b
+        if cached % self.block_size:
+            # copy-on-write for the split block: the row resumes writing
+            # mid-page, so it needs a private copy of the shared tokens
+            self._copy_blocks([pblocks[full_shared]],
+                              [int(self.page_table[slot, full_shared])])
+            self.prefix_cow_copies += 1
+
+    def shared_pages(self, slot: int) -> int:
+        """Leading read-only (prefix-shared) pages mapped into `slot`."""
+        return self._row_shared[slot]
 
     def ensure_blocks(self, slot: int, pos: int) -> bool:
         """Grow `slot`'s page table to cover token index `pos` with
         blocks from its data shard.  Returns False (row must stall this
         tick) if the reserve discipline denies the allocation; a shard's
-        oldest bound row is never denied."""
+        oldest bound row is never denied.  When the free list runs
+        short, LRU prefix entries are evicted first — blocks whose only
+        references are index references return to the free list."""
         page = pos // self.block_size
         if page >= self.pages_per_row:
             raise ValueError(f"pos {pos} beyond max_seq {self.max_seq}")
@@ -411,8 +682,9 @@ class TierSlotPool:
         while len(self._row_blocks[slot]) <= page:
             if not is_oldest and \
                     self.blocks.free_in(shard) - 1 < self._oldest_worst(shard):
-                return False
-            b = self.blocks.alloc(shard)
+                if not self._reclaim(shard, self._oldest_worst(shard) + 1):
+                    return False
+            b = self._alloc_reclaiming(shard)
             if b is None:
                 return False
             j = len(self._row_blocks[slot])
@@ -425,19 +697,41 @@ class TierSlotPool:
         return list(self._order)
 
     def release(self, slot: int) -> None:
-        """Return `slot`'s blocks to the free list and unmap its pages.
-        Stale device memory is never attended: the pages are unreachable
-        once the table row is zeroed, and the next occupant overwrites a
-        reused block before its positions pass the per-row mask.
+        """Drop `slot`'s block references and unmap its pages.  A block
+        rejoins the free list only when its refcount hits zero — blocks
+        still referenced by the prefix index (or another row sharing the
+        prefix) stay live, so releasing a preempted victim never
+        reclaims memory out from under a reader.  Stale device memory is
+        never attended: the pages are unreachable once the table row is
+        zeroed, and the next occupant overwrites a reused block before
+        its positions pass the per-row mask.
+
         Releasing an unbound slot raises (double-release guard: the
         engine's finish, preemption, and failure paths must each release
-        a row exactly once)."""
+        a row exactly once).  The error distinguishes a plain double
+        release from one whose earlier release left blocks live via
+        shared references — on a preemption replay of a cache-hit row
+        the latter means "the blocks are with the prefix index, not
+        leaked", which needs no allocator surgery."""
         if slot not in self._order:
+            still = self._released_shared.get(slot, 0)
+            if still:
+                raise ValueError(
+                    f"slot {slot} is already released; {still} of its "
+                    "blocks remain live via shared references (prefix "
+                    "index or other rows) — still shared, not leaked, "
+                    "so there is nothing left to release")
             raise ValueError(f"slot {slot} is not bound (double release?)")
+        still_live = 0
         for b in self._row_blocks[slot]:
             self.blocks.free(b)
+            if self.blocks.refcount(b) > 0:
+                still_live += 1
+        self._released_shared[slot] = still_live
         self._row_blocks[slot] = []
         self._row_demand[slot] = self.pages_per_row
+        self._row_shared[slot] = 0
+        self._row_published[slot] = 0
         self.page_table[slot] = NULL_BLOCK
         self._order.remove(slot)
 
@@ -472,6 +766,25 @@ class TierSlotPool:
         return self.blocks.restore()
 
     # -- device-side writes ------------------------------------------------
+
+    def _copy_blocks(self, src: Sequence[int], dst: Sequence[int]) -> None:
+        """Copy whole KV blocks ``src[i] -> dst[i]`` in every paged leaf
+        (the copy-on-write primitive: a row taking over a partially
+        shared block duplicates it before its first scatter)."""
+        src_ids = jnp.asarray(src, jnp.int32)
+        dst_ids = jnp.asarray(dst, jnp.int32)
+
+        def cp(full, meta):
+            kind, ax = meta
+            if kind != "paged":
+                return full
+            gi = [slice(None)] * full.ndim
+            gi[ax] = src_ids
+            si = [slice(None)] * full.ndim
+            si[ax] = dst_ids
+            return full.at[tuple(si)].set(full[tuple(gi)])
+
+        self.cache = jax.tree.map(cp, self.cache, self._meta)
 
     def write_prefill(self, slot_ids: Sequence[int], part_cache) -> None:
         """Scatter a packed prefill cache (rows ``0..n-1``) into the tier
@@ -534,6 +847,12 @@ class TierSlotPool:
             "data_shards": self.data_shards,
             "kv_high_water_blocks_by_shard":
                 list(self.blocks.high_water_by_shard),
+            # prefix cache: peak blocks mapped by >1 reference, live
+            # index entries, LRU evictions, copy-on-write block copies
+            "kv_shared_high_water_blocks": self.blocks.shared_high_water,
+            "prefix_index_entries": self.prefix_index_entries(),
+            "prefix_evictions": self.prefix_evictions,
+            "prefix_cow_copies": self.prefix_cow_copies,
             # what the one-page-per-request arena (PR 1) would allocate
             "dense_equiv_bytes": per_token * self.capacity * self.max_seq,
         }

@@ -450,3 +450,110 @@ def test_serve_async_keyboard_interrupt_partial_summary(tmp_path):
     assert s["interrupted"]
     assert s["completed"] < 8                  # stopped mid-run
     assert trace.exists() and s["trace_events"] > 0
+
+
+# ---------------------------------------------------------------------------
+# chaos x prefix cache: shrink and preemption storms against a warm index
+# ---------------------------------------------------------------------------
+
+
+def _shared_prompts(cfg, n=8, seed=0):
+    """Prompts agreeing on their first 9 tokens (warm prefix-cache
+    traffic) with unique 3-token tails."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    out = []
+    for _ in range(n):
+        p = base.copy()
+        p[9:] = rng.integers(0, cfg.vocab_size, 3)
+        out.append(p)
+    return out
+
+
+@pytest.fixture(scope="module")
+def shared_ref_streams(tiny_parts):
+    """Fault-free, cache-off reference streams for the shared-prefix
+    workload (the chaos x prefix-cache oracle)."""
+    eng = _build(tiny_parts, slots=4)
+    _drain(eng, _shared_prompts(tiny_parts[0]))
+    return _streams(eng)
+
+
+def _checked_shrink(pool):
+    """Wrap `pool.shrink` to audit, at every shrink, that withheld
+    blocks are never referenced (shrink draws from the free list only —
+    a refcount > 0 block must never be pulled out from under a reader)
+    and that the full allocator invariant suite still holds."""
+    from tests.test_slots_properties import check_invariants
+    orig = pool.shrink
+
+    def shrink(n):
+        took = orig(n)
+        withheld = {b for lst in pool.blocks._reserved for b in lst}
+        live = set(pool.blocks._refcount)
+        assert not (withheld & live), \
+            f"shrink withheld referenced blocks {withheld & live}"
+        check_invariants(pool)
+        return took
+
+    pool.shrink = shrink
+    return pool
+
+
+def test_shrink_against_warm_prefix_cache(tiny_parts, shared_ref_streams):
+    """Mid-run pool shrinkage while the prefix index is warm: withheld
+    blocks must all be unreferenced (free-list only), streams stay
+    bit-identical, and conservation holds at drain."""
+    from tests.test_slots_properties import check_invariants
+    plan = FaultPlan(seed=3, shrinks=(Shrink(tick=3, tier=0, blocks=6,
+                                             restore_tick=10),))
+    eng = _build(tiny_parts, slots=4, kv_blocks=14, prefix_cache=True,
+                 preemption_policy="youngest", faults=plan)
+    _checked_shrink(eng.runtimes[0].pool)
+    s = _drain(eng, _shared_prompts(tiny_parts[0]))
+    assert s["completed"] == 8 and s["failed"] == 0
+    assert _streams(eng) == shared_ref_streams
+    assert any(e[1] == "shrink" for e in plan.log)     # shrink fired
+    check_invariants(eng.runtimes[0].pool)
+
+
+def test_preemption_storm_against_warm_prefix_cache(tiny_parts,
+                                                    shared_ref_streams):
+    """Preemption churn on an over-subscribed arena with the cache on:
+    releasing a victim whose blocks the index still references reclaims
+    nothing out from under a reader, replays may legitimately re-hit the
+    cache, and every stream matches the fault-free cache-off oracle."""
+    from tests.test_slots_properties import check_invariants
+    eng = _build(tiny_parts, slots=4, kv_blocks=16, prefix_cache=True,
+                 preemption_policy="youngest")
+    s = _drain(eng, _shared_prompts(tiny_parts[0]))
+    assert s["completed"] == 8 and s["failed"] == 0
+    assert _streams(eng) == shared_ref_streams
+    assert s["prefix_cache"]["hits"] > 0               # the cache was warm
+    assert s["preemptions"] > 0                        # churn really hit it
+    check_invariants(eng.runtimes[0].pool)
+
+
+def test_combo_chaos_with_prefix_cache(tiny_parts, shared_ref_streams):
+    """The full storm: shrink + escalation storm + probabilistic launch
+    failures, two tiers, over-subscribed tier-0 arena, preemption, and
+    the prefix cache on in both tiers.  Tier-0 streams of every request
+    still match the fault-free cache-off oracle and both pools'
+    invariants hold at drain."""
+    from tests.test_slots_properties import check_invariants
+    plan = FaultPlan(seed=11,
+                     shrinks=(Shrink(tick=3, tier=0, blocks=6,
+                                     restore_tick=9),),
+                     storms=(Storm(4, 7, 0),),
+                     launch_fail_prob=0.2)
+    eng = _build(tiny_parts, tiers=2, slots=4, kv_blocks=[14, None],
+                 prefix_cache=True, preemption_policy="youngest",
+                 faults=plan)
+    _checked_shrink(eng.runtimes[0].pool)
+    s = _drain(eng, _shared_prompts(tiny_parts[0]))
+    assert s["completed"] + s["failed"] == 8
+    assert all(list(r.tokens_by_tier[0]) == shared_ref_streams[r.rid]
+               for r in eng.requests)
+    assert len(plan.log) > 0
+    for rt in eng.runtimes:
+        check_invariants(rt.pool)

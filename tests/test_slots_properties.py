@@ -1,0 +1,507 @@
+"""Allocator-invariant property suite for the refcounted prefix cache.
+
+A white-box model checker (:func:`check_invariants`) audits the full
+allocator state after every operation:
+
+  * refcounts are positive for live blocks and zero elsewhere, and every
+    count equals the references actually outstanding (row page-table
+    mappings + prefix-index entries);
+  * no block is simultaneously free and referenced — the free lists, the
+    withheld (shrink) lists, and the live set partition the arena;
+  * per-shard conservation: ``free + live + withheld`` equals the
+    shard's usable span (minus the null block on shard 0);
+  * page tables mirror the row block lists exactly, shared (read-only)
+    pages form a prefix of each row, and the null block never leaks.
+
+A seeded fuzzer then drives random interleavings of admission
+(bind with/without a prefix match, including unaligned copy-on-write
+binds), chunked growth, publishing, release/preemption, LRU reclaim,
+and fault-injection shrink/unshrink against the checker.  The
+deterministic parametrized runs execute everywhere; the
+hypothesis-driven layer (via :mod:`tests._hyp_compat`) widens the same
+driver to 200 random interleavings in CI, where hypothesis is
+installed.
+
+Deterministic regression tests at the bottom pin the guard-message
+contract: double-free, share-after-free, plain double release, and the
+"already released but its blocks are still shared" case are distinct
+errors (the last one tells the caller nothing leaked).
+"""
+import random
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.slots import (NULL_BLOCK, BlockAllocator, PrefixEntry,
+                                 TierSlotPool)
+from tests._hyp_compat import given, settings, st
+
+BS = 4          # block size
+CHUNK = 8       # prefix_chunk
+MAX_SEQ = 32
+CAPACITY = 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("gemma3-1b", "smoke")
+
+
+def make_pool(cfg, shards=1, num_blocks=None, oversubscribe=False):
+    if num_blocks is None:
+        full = CAPACITY * (MAX_SEQ // BS) + 1
+        num_blocks = (full // 2 + shards) if oversubscribe else full
+        num_blocks += (-num_blocks) % shards
+    return TierSlotPool(cfg, CAPACITY, MAX_SEQ, block_size=BS,
+                        num_blocks=num_blocks, data_shards=shards,
+                        prefix_chunk=CHUNK)
+
+
+# -- the model checker -------------------------------------------------------
+
+
+def check_invariants(pool: TierSlotPool) -> None:
+    alloc = pool.blocks
+    free, withheld = set(), set()
+    for s in range(alloc.shards):
+        fs, rs = alloc._free[s], alloc._reserved[s]
+        assert len(set(fs)) == len(fs), f"shard {s} free list has dupes"
+        assert len(set(rs)) == len(rs), f"shard {s} reserved list has dupes"
+        lo, hi = s * alloc._span, (s + 1) * alloc._span
+        assert all(lo <= b < hi for b in fs + rs), \
+            f"shard {s} holds out-of-range block ids"
+        free |= set(fs)
+        withheld |= set(rs)
+    live = set(alloc._used)
+    # the three states partition the arena; the null block is in none
+    assert not (free & live), "block both free and live"
+    assert not (free & withheld), "block both free and withheld"
+    assert not (withheld & live), "block both withheld and live"
+    assert NULL_BLOCK not in free | live | withheld, "null block escaped"
+    for s in range(alloc.shards):
+        usable = alloc._span - (1 if s == 0 else 0)
+        assert alloc.free_in(s) + alloc.used_in(s) + alloc.reserved_in(s) \
+            == usable, f"shard {s} conservation violated"
+    # refcount bookkeeping: live blocks only, all positive
+    assert set(alloc._refcount) == live
+    assert all(rc >= 1 for rc in alloc._refcount.values())
+    # every reference is accounted for: rows + index entries
+    row_refs = Counter(b for blocks in pool._row_blocks for b in blocks)
+    idx_refs = Counter(b for shard_idx in pool._index
+                       for ent in shard_idx.values() for b in ent.blocks)
+    assert dict(idx_refs) == pool._index_refs
+    for b in live:
+        assert alloc.refcount(b) == row_refs[b] + idx_refs[b], \
+            f"block {b}: rc {alloc.refcount(b)} != " \
+            f"{row_refs[b]} row refs + {idx_refs[b]} index refs"
+    for b in free | withheld:
+        assert row_refs[b] == 0 and idx_refs[b] == 0, \
+            f"non-live block {b} is referenced"
+    assert alloc.num_shared == sum(
+        1 for b in live if alloc._refcount[b] >= 2)
+    # page tables mirror the row block lists; shared pages are a prefix
+    for slot in range(pool.capacity):
+        blocks = pool._row_blocks[slot]
+        assert pool._row_shared[slot] <= len(blocks)
+        for j in range(pool.pages_per_row):
+            want = blocks[j] if j < len(blocks) else NULL_BLOCK
+            assert pool.page_table[slot, j] == want, \
+                f"page_table[{slot},{j}] = {pool.page_table[slot, j]}, " \
+                f"row blocks say {want}"
+        if blocks:
+            assert slot in pool._order
+        else:
+            assert slot not in pool._order
+
+
+# -- the fuzz driver ---------------------------------------------------------
+
+
+class Driver:
+    """One random interleaving of pool operations, invariant-checked
+    after every step.  Prompts draw from a tiny base set so prefix
+    matches (and therefore sharing, CoW, and eviction pressure) actually
+    occur."""
+
+    def __init__(self, pool: TierSlotPool, rng: random.Random):
+        self.pool = pool
+        self.rng = rng
+        # rows: slot -> (prompt, prefill progress in tokens)
+        self.rows = {}
+        self.bases = [np.arange(100 * (i + 1), 100 * (i + 1) + MAX_SEQ,
+                                dtype=np.int32) for i in range(2)]
+
+    def _prompt(self):
+        base = self.rng.choice(self.bases)
+        plen = self.rng.randint(2, MAX_SEQ - 1)
+        p = base[:plen].copy()
+        if self.rng.random() < 0.4:   # unique suffix past a shared head
+            cut = self.rng.randint(1, plen)
+            p[cut:] = self.rng.randrange(10_000) + np.arange(plen - cut)
+        return p
+
+    def op_admit(self):
+        free = [s for s in range(self.pool.capacity) if s not in self.rows]
+        if not free:
+            return
+        slot = self.rng.choice(free)
+        shard = self.pool.shard_of(slot)
+        prompt = self._prompt()
+        plen = len(prompt)
+        cached, blks = self.pool.match_prefix(prompt, shard)
+        span = cached + min(CHUNK, plen - cached)
+        if cached and self.pool.can_admit(span, shard, cached=cached,
+                                          prefix_blocks=blks):
+            self.pool.bind(slot, span, row_tokens=plen,
+                           prefix=(cached, blks))
+            self.rows[slot] = (prompt, span)
+        elif self.pool.can_admit(min(CHUNK, plen), shard):
+            # can_admit True must mean bind succeeds (deadlock freedom)
+            self.pool.bind(slot, min(CHUNK, plen), row_tokens=plen)
+            self.rows[slot] = (prompt, min(CHUNK, plen))
+
+    def op_admit_unaligned(self):
+        """Copy-on-write path: bind against a hand-picked cached length
+        that splits a block (the aligned publisher never emits these)."""
+        free = [s for s in range(self.pool.capacity) if s not in self.rows]
+        shard_entries = [(sh, ent) for sh in range(self.pool.data_shards)
+                         for ent in self.pool._index[sh].values()
+                         if ent.ntokens > BS]
+        if not free or not shard_entries:
+            return
+        shard, ent = self.rng.choice(shard_entries)
+        slots = [s for s in free if self.pool.shard_of(s) == shard]
+        if not slots:
+            return
+        slot = self.rng.choice(slots)
+        cached = ent.ntokens - self.rng.randint(1, BS - 1)  # splits a block
+        prompt = np.concatenate([
+            np.zeros(cached, np.int32),
+            self.rng.randrange(10_000) + np.arange(4, dtype=np.int32)])
+        plen = len(prompt)
+        span = cached + min(CHUNK, plen - cached)
+        if self.pool.can_admit(span, shard, cached=cached,
+                               prefix_blocks=ent.blocks):
+            before = self.pool.prefix_cow_copies
+            self.pool.bind(slot, span, row_tokens=plen,
+                           prefix=(cached, list(ent.blocks)))
+            assert self.pool.prefix_cow_copies == before + 1
+            self.rows[slot] = (prompt, span)
+
+    def op_grow(self):
+        rows = [(s, p, pos) for s, (p, pos) in self.rows.items()
+                if pos < len(p)]
+        if not rows:
+            return
+        slot, prompt, pos = self.rng.choice(rows)
+        step = min(CHUNK, len(prompt) - pos)
+        if self.pool.ensure_blocks(slot, pos + step - 1):
+            self.rows[slot] = (prompt, pos + step)
+
+    def op_publish(self):
+        if not self.rows:
+            return
+        slot = self.rng.choice(list(self.rows))
+        prompt, pos = self.rows[slot]
+        self.pool.publish_prefix(slot, prompt, pos)
+
+    def op_release(self):
+        if not self.rows:
+            return
+        slot = self.rng.choice(list(self.rows))
+        self.pool.release(slot)
+        del self.rows[slot]
+
+    def op_release_unbound(self):
+        unbound = [s for s in range(self.pool.capacity)
+                   if s not in self.rows]
+        if not unbound:
+            return
+        with pytest.raises(ValueError, match="already released|not bound"):
+            self.pool.release(self.rng.choice(unbound))
+
+    def op_double_free(self):
+        alloc = self.pool.blocks
+        shard = self.rng.randrange(alloc.shards)
+        if not alloc._free[shard]:
+            return
+        with pytest.raises(ValueError, match="double free"):
+            alloc.free(self.rng.choice(alloc._free[shard]))
+
+    def op_shrink(self):
+        self.pool.shrink(self.rng.randint(1, 4))
+
+    def op_unshrink(self):
+        self.pool.unshrink()
+
+    def op_reclaim(self):
+        shard = self.rng.randrange(self.pool.data_shards)
+        want = self.pool.blocks.free_in(shard) + self.rng.randint(1, 3)
+        self.pool._reclaim(shard, want)
+
+    OPS = (op_admit, op_admit, op_grow, op_grow, op_publish, op_publish,
+           op_release, op_admit_unaligned, op_release_unbound,
+           op_double_free, op_shrink, op_unshrink, op_reclaim)
+
+    def run(self, steps: int):
+        check_invariants(self.pool)
+        for _ in range(steps):
+            self.rng.choice(self.OPS)(self)
+            check_invariants(self.pool)
+        # drain: every row releases cleanly and sharing ends at 0 rows
+        for slot in list(self.rows):
+            self.pool.release(slot)
+            del self.rows[slot]
+            check_invariants(self.pool)
+
+
+@pytest.mark.parametrize("shards", (1, 2))
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzz_interleavings(cfg, shards, seed):
+    pool = make_pool(cfg, shards=shards, oversubscribe=seed % 2 == 1)
+    Driver(pool, random.Random(seed)).run(steps=60)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.sampled_from([1, 2]), st.booleans())
+def test_fuzz_interleavings_hypothesis(cfg, seed, shards, oversub):
+    """The CI layer: 200 hypothesis-driven interleavings of the same
+    driver (skipped when hypothesis is not installed — the parametrized
+    deterministic runs above still execute)."""
+    pool = make_pool(cfg, shards=shards, oversubscribe=oversub)
+    Driver(pool, random.Random(seed)).run(steps=40)
+
+
+# -- deterministic refcount / sharing unit tests -----------------------------
+
+
+def test_refcount_lifecycle():
+    alloc = BlockAllocator(8)
+    b = alloc.alloc(0)
+    assert alloc.refcount(b) == 1 and alloc.num_shared == 0
+    alloc.ref(b)
+    assert alloc.refcount(b) == 2 and alloc.num_shared == 1
+    assert alloc.shared_high_water == 1
+    alloc.free(b)                    # drop to 1: still live
+    assert alloc.refcount(b) == 1 and alloc.num_shared == 0
+    assert b in alloc._used and b not in alloc._free[0]
+    alloc.free(b)                    # drop to 0: back on the free list
+    assert alloc.refcount(b) == 0
+    assert b in alloc._free[0]
+
+
+def test_ref_of_free_block_raises():
+    alloc = BlockAllocator(8)
+    b = alloc.alloc(0)
+    alloc.free(b)
+    with pytest.raises(ValueError, match="cannot share"):
+        alloc.ref(b)
+    with pytest.raises(ValueError, match="cannot share"):
+        alloc.ref(NULL_BLOCK)
+
+
+def test_double_free_message():
+    alloc = BlockAllocator(8)
+    b = alloc.alloc(0)
+    alloc.free(b)
+    with pytest.raises(ValueError, match=rf"block {b} is not allocated "
+                                         r"\(double free\?\)"):
+        alloc.free(b)
+
+
+def test_prefix_boundaries_align_down(cfg):
+    pool = make_pool(cfg)            # chunk 8, block 4: already aligned
+    assert pool._prefix_boundaries(24) == [8, 16, 24]
+    assert pool._prefix_boundaries(7) == []
+    pool.prefix_chunk = 6            # unaligned chunk rounds down
+    assert pool._prefix_boundaries(24) == [4, 12, 16, 24]
+
+
+def test_match_caps_below_full_prompt(cfg):
+    """A fully cached prompt still computes its last token's logits: the
+    match is capped at len(prompt) - 1, so an exact-length hit misses."""
+    pool = make_pool(cfg)
+    prompt = np.arange(50, 58, dtype=np.int32)   # 8 tokens == one chunk
+    pool.bind(0, 8, row_tokens=12)
+    pool.publish_prefix(0, prompt, 8)
+    assert pool.match_prefix(prompt, 0) == (0, [])          # capped
+    longer = np.arange(50, 62, dtype=np.int32)
+    n, blks = pool.match_prefix(longer, 0)
+    assert n == 8 and len(blks) == 2                        # genuine hit
+
+
+def test_publish_and_share_refcounts(cfg):
+    pool = make_pool(cfg)
+    prompt = np.arange(0, 20, dtype=np.int32)
+    pool.bind(0, 8, row_tokens=24)
+    pool.publish_prefix(0, prompt, 8)
+    n, blks = pool.match_prefix(prompt, 0)
+    assert (n, len(blks)) == (8, 2)
+    assert all(pool.blocks.refcount(b) == 2 for b in blks)  # row + index
+    pool.bind(1, 8 + CHUNK, row_tokens=24, prefix=(8, blks))
+    assert pool.shared_pages(1) == 2
+    assert all(pool.blocks.refcount(b) == 3 for b in blks)
+    pool.release(0)                  # publisher leaves; blocks stay live
+    assert all(pool.blocks.refcount(b) == 2 for b in blks)
+    assert pool.match_prefix(prompt, 0)[0] == 8
+    pool.release(1)
+    assert all(pool.blocks.refcount(b) == 1 for b in blks)  # index only
+    assert pool.evictable_in(0) == len(set(blks))
+
+
+def test_release_errors_distinguish_shared_from_double(cfg):
+    """Satellite regression: the double-release guard must say *which*
+    failure happened — plain double release vs an earlier release whose
+    blocks remain live through shared references (not a leak)."""
+    pool = make_pool(cfg)
+    with pytest.raises(ValueError, match=r"slot 3 is not bound "
+                                         r"\(double release\?\)"):
+        pool.release(3)
+    prompt = np.arange(0, 20, dtype=np.int32)
+    pool.bind(0, 8, row_tokens=24)
+    pool.publish_prefix(0, prompt, 8)           # index shares row 0's blocks
+    pool.release(0)
+    with pytest.raises(ValueError, match=r"slot 0 is already released; "
+                                         r"2 of its blocks remain live via "
+                                         r"shared references"):
+        pool.release(0)
+    # a row with no shared blocks keeps the plain message
+    pool.bind(1, 4, row_tokens=8)
+    pool.release(1)
+    with pytest.raises(ValueError, match=r"slot 1 is not bound "
+                                         r"\(double release\?\)"):
+        pool.release(1)
+
+
+def test_lru_eviction_order_and_counters(cfg):
+    pool = make_pool(cfg, num_blocks=33)
+    p1 = np.arange(0, 20, dtype=np.int32)
+    p2 = np.arange(40, 60, dtype=np.int32)
+    pool.bind(0, 8, row_tokens=24)
+    pool.publish_prefix(0, p1, 8)
+    pool.bind(1, 8, row_tokens=24)
+    pool.publish_prefix(1, p2, 8)
+    pool.match_prefix(p1, 0)                     # p1 becomes most recent
+    pool.release(0)
+    pool.release(1)
+    assert pool.prefix_index_entries(0) == 2
+    # force one eviction: p2's entry (least recently used) must go first
+    pool._reclaim(0, pool.blocks.free_in(0) + 2)
+    assert pool.prefix_evictions == 1
+    assert pool.match_prefix(p2, 0) == (0, [])
+    assert pool.match_prefix(p1, 0)[0] == 8
+
+
+def test_eviction_keeps_row_shared_blocks(cfg):
+    """Reclaim may only return blocks whose every reference is an index
+    reference: entries shared with a live row lose the entry but free no
+    blocks."""
+    pool = make_pool(cfg, num_blocks=33)
+    prompt = np.arange(0, 20, dtype=np.int32)
+    pool.bind(0, 8, row_tokens=24)
+    pool.publish_prefix(0, prompt, 8)
+    n, blks = pool.match_prefix(prompt, 0)
+    pool.bind(1, 8 + CHUNK, row_tokens=24, prefix=(n, blks))
+    pool.release(0)
+    free_before = pool.blocks.free_in(0)
+    assert pool.evictable_in(0) == 0             # row 1 still maps them
+    pool._reclaim(0, free_before + 1)            # drops the entry...
+    assert pool.prefix_index_entries(0) == 0
+    assert pool.blocks.free_in(0) == free_before  # ...but frees nothing
+    assert all(pool.blocks.refcount(b) == 1 for b in blks)
+    check_invariants(pool)
+
+
+def test_shrink_takes_only_unreferenced_blocks(cfg):
+    pool = make_pool(cfg)
+    prompt = np.arange(0, 20, dtype=np.int32)
+    pool.bind(0, 8, row_tokens=24)
+    pool.publish_prefix(0, prompt, 8)
+    took = pool.shrink(6)
+    assert took > 0
+    withheld = set(pool.blocks._reserved[0])
+    live = set(pool.blocks._refcount)
+    assert not (withheld & live)
+    check_invariants(pool)
+    pool.unshrink()
+    check_invariants(pool)
+
+
+def test_cow_copy_duplicates_device_blocks(cfg):
+    """_copy_blocks must byte-copy every paged leaf: fill the source
+    block with a sentinel, copy, and read the destination back."""
+    import jax.numpy as jnp
+
+    pool = make_pool(cfg)
+    src, dst = pool.blocks.alloc(0), pool.blocks.alloc(0)
+
+    def fill(full, meta):
+        kind, ax = meta
+        if kind != "paged":
+            return full
+        idx = [slice(None)] * full.ndim
+        idx[ax] = src
+        return full.at[tuple(idx)].set(jnp.asarray(1.25, full.dtype))
+
+    pool.cache = jax.tree.map(fill, pool.cache, pool._meta)
+    pool._copy_blocks([src], [dst])
+    checked = 0
+    for leaf, meta in zip(
+            jax.tree.leaves(pool.cache),
+            jax.tree.flatten(pool._meta,
+                             is_leaf=lambda x: isinstance(x, tuple))[0]):
+        if meta[0] != "paged":
+            continue
+        idx = [slice(None)] * leaf.ndim
+        idx[meta[1]] = dst
+        np.testing.assert_allclose(np.asarray(leaf[tuple(idx)]), 1.25)
+        checked += 1
+    assert checked > 0
+
+
+def test_unaligned_prefix_entry_triggers_cow(cfg):
+    """An index entry whose boundary splits a block (never produced by
+    the aligned publisher, but legal) must copy the split block before
+    the new row can write into it."""
+    pool = make_pool(cfg)
+    prompt = np.arange(0, 20, dtype=np.int32)
+    pool.bind(0, 8, row_tokens=24)
+    pool.publish_prefix(0, prompt, 8)
+    blocks = [int(pool.page_table[0, 0]), int(pool.page_table[0, 1])]
+    for b in blocks:                 # hand-built unaligned entry
+        pool.blocks.ref(b)
+        pool._index_refs[b] = pool._index_refs.get(b, 0) + 1
+    pool._index[0][pool._prefix_key(prompt, 6)] = \
+        PrefixEntry(6, list(blocks), 999)
+    check_invariants(pool)
+    pool.bind(1, 8, row_tokens=24, prefix=(6, blocks))
+    assert pool.prefix_cow_copies == 1
+    assert pool.shared_pages(1) == 1             # only the full block
+    assert int(pool.page_table[1, 0]) == blocks[0]
+    assert int(pool.page_table[1, 1]) != blocks[1]
+    check_invariants(pool)
+
+
+def test_bind_rollback_on_exhaustion_leaks_nothing(cfg):
+    """A bind that passes the shared-pin stage but cannot allocate its
+    fresh pages must roll the pins back (no refcount drift)."""
+    pool = make_pool(cfg, num_blocks=9)          # 8 usable blocks + null
+    prompt = np.arange(0, 20, dtype=np.int32)
+    pool.bind(0, 16, row_tokens=16)              # 4 blocks
+    pool.publish_prefix(0, prompt, 16)           # entries at 8 and 16
+    n, blks = pool.match_prefix(prompt, 0)
+    assert (n, len(blks)) == (16, 4)
+    pool.bind(1, 20, row_tokens=20, prefix=(n, blks))   # 4 shared + 1 fresh
+    pool.bind(2, 12, row_tokens=12)              # drain the free list
+    assert pool.blocks.free_in(0) == 0
+    assert pool.evictable_in(0) == 0             # entries shared with rows
+    with pytest.raises(RuntimeError, match="bind without can_admit"):
+        pool.bind(3, 20, row_tokens=20, prefix=(n, blks))
+    assert pool._row_blocks[3] == []
+    assert all(int(b) == NULL_BLOCK for b in pool.page_table[3])
+    assert all(pool.blocks.refcount(b) > 0 for b in blks)  # pins rolled back
+    check_invariants(pool)
