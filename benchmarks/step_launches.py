@@ -1,16 +1,21 @@
-"""Launch-count A/B: unified token-batch execution vs the split
-chunk+decode path, on an identical mixed-length serving workload.
+"""Execution-backend A/B/C: ragged flat token-batch vs padded unified
+vs the split chunk+decode path, on an identical mixed-length workload.
 
-The unified engine executes every tick as ONE compiled mixed
-prefill+decode program per tier (``kernels/mixed_attention.py`` behind
-``transformer.mixed_step``) with one blocking ``device_get``; the split
+The ragged engine (the default) packs a tick's live tokens into one
+flat ``[1, W]`` batch at a bucketed width and launches ONE compiled
+program per tier per tick (``kernels/ragged_attention.py`` behind
+``transformer.ragged_step``) — compute is O(live tokens).  The padded
+unified backend (``--no-ragged-step``) launches one mixed
+``[capacity, width]`` program, paying for every dead slot; the split
 escape hatch (``--split-step``) dispatches the legacy chunk_fn +
 step_fn pair — two launches on every mixed tick.  This benchmark runs
-both backends over the same deterministic workload (virtual clock, same
-seed/arrivals/lengths) and reports per-tier launches and host syncs,
-absolute and per tick, plus wall time — and asserts the two backends
-produced identical token counts (the parity suite asserts bit-identical
-streams; here we just guard the A/B comparison's apples-to-apples-ness).
+all three over the same deterministic workload (virtual clock, same
+seed/arrivals/lengths) and reports per-tier launches, host syncs,
+live-vs-processed token slots (the wasted-slot ratio), compiled-program
+counts, and wall time — and asserts identical token counts plus
+bit-identical stream checksums (the parity suite in
+tests/test_ragged_step.py proves the same per token; here it guards the
+A/B's apples-to-apples-ness).
 
     PYTHONPATH=src python -m benchmarks.step_launches
 
@@ -34,8 +39,11 @@ DIST = os.environ.get("REPRO_STEP_BENCH_DIST", "lognormal")
 OUT = os.environ.get("REPRO_STEP_BENCH_OUT",
                      "experiments/bench/step_launches.json")
 
+MODES = {"ragged": [], "padded": ["--no-ragged-step"],
+         "split": ["--split-step"]}
 
-def run_mode(split: bool) -> dict:
+
+def run_mode(mode: str) -> dict:
     from repro.launch import serve_async
     from repro.serving.engine import VirtualClock
 
@@ -44,12 +52,13 @@ def run_mode(split: bool) -> dict:
         "--slots", str(SLOTS), "--gen-len", str(GEN_LEN),
         "--prompt-len", str(PROMPT_LEN), "--prefill-chunk", str(CHUNK),
         "--length-dist", DIST, "--virtual-clock",
-    ] + (["--split-step"] if split else [])
+    ] + MODES[mode]
     args = serve_async.make_parser().parse_args(argv)
     t0 = time.time()
     s = serve_async.run(args, VirtualClock())
     return {
         "unified_step": s["unified_step"],
+        "ragged_step": s["ragged_step"],
         "steps": s["steps"],
         "completed": s["completed"],
         "tokens": int(s["completed"]) * GEN_LEN,
@@ -58,6 +67,13 @@ def run_mode(split: bool) -> dict:
         "launches_per_tick": s["launches_per_tick"],
         "host_syncs": s["host_syncs"],
         "host_syncs_per_tick": s["host_syncs_per_tick"],
+        "step_live_tokens": s["step_live_tokens"],
+        "step_processed_tokens": s["step_processed_tokens"],
+        "wasted_slot_ratio": s["wasted_slot_ratio"],
+        "mid_run_recompiles": s["mid_run_recompiles"],
+        "compiled_programs": [c["compiled_programs"]
+                              for c in s["compiled_programs"]],
+        "stream_checksum": s["stream_checksum"],
         "tier_names": s["tier_names"],
         "wall_s": time.time() - t0,
     }
@@ -68,17 +84,25 @@ def main() -> None:
 
     import jax
 
-    unified = run_mode(split=False)
-    split = run_mode(split=True)
-    assert unified["unified_step"] and not split["unified_step"]
-    # same workload, same per-request decode lengths: completed-token
-    # counts must agree or the A/B compares different work
-    assert unified["tokens"] == split["tokens"], (unified, split)
+    results = {mode: run_mode(mode) for mode in MODES}
+    ragged, padded, split = (results[m] for m in
+                             ("ragged", "padded", "split"))
+    assert ragged["ragged_step"] and ragged["unified_step"]
+    assert padded["unified_step"] and not padded["ragged_step"]
+    assert not split["unified_step"]
+    # same workload, same per-request decode lengths AND bit-identical
+    # streams, or the A/B compares different work
+    assert ragged["tokens"] == padded["tokens"] == split["tokens"], results
+    assert ragged["stream_checksum"] == padded["stream_checksum"] \
+        == split["stream_checksum"], results
+    assert ragged["mid_run_recompiles"] == 0, ragged
 
-    for mode, r in (("unified", unified), ("split", split)):
+    for mode, r in results.items():
         print(f"{mode:8s} launches {r['launches']} "
               f"({[round(x, 3) for x in r['launches_per_tick']]}/tick)  "
-              f"host-syncs {r['host_syncs']} over {r['steps']} ticks, "
+              f"host-syncs {r['host_syncs']} over {r['steps']} ticks  "
+              f"wasted-slot {r['wasted_slot_ratio']:.3f}  "
+              f"programs {r['compiled_programs']}, "
               f"{r['wall_s']:.1f}s wall", flush=True)
 
     bench = {
@@ -92,11 +116,15 @@ def main() -> None:
             "python": platform.python_version(),
             "platform": platform.platform(),
         },
-        "unified": unified,
+        "ragged": ragged,
+        "padded": padded,
         "split": split,
         "launch_reduction": (
-            1.0 - unified["launches_total"] / split["launches_total"]
+            1.0 - ragged["launches_total"] / split["launches_total"]
             if split["launches_total"] else float("nan")),
+        "wasted_slot_reduction": (
+            padded["wasted_slot_ratio"] - ragged["wasted_slot_ratio"]),
+        "streams_bit_identical": True,
     }
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:

@@ -14,6 +14,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.mixed_attention import mixed_attention as _mixed
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.ragged_attention import ragged_attention as _ragged
 from repro.kernels.prefill_attention import \
     paged_prefill_attention as _paged_prefill
 from repro.kernels.router_gate import router_gate as _router
@@ -59,6 +60,16 @@ def mixed_attention(q, k_pages, v_pages, page_table, q_start, q_len, *,
                   k_scale=k_scale, v_scale=v_scale, window=window,
                   interpret=_default_interpret()
                   if interpret is None else interpret)
+
+
+def ragged_attention(q, k_pages, v_pages, page_table, q_start, q_len, *,
+                     k_scale=None, v_scale=None, window=None,
+                     tile_q=16, interpret=None):
+    return _ragged(q, k_pages, v_pages, page_table, q_start, q_len,
+                   k_scale=k_scale, v_scale=v_scale, window=window,
+                   tile_q=tile_q,
+                   interpret=_default_interpret()
+                   if interpret is None else interpret)
 
 
 def rwkv6_scan(r, k, v, w, u, *, interpret=None):

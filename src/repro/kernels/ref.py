@@ -138,6 +138,50 @@ def mixed_attention_ref(q, k_pages, v_pages, page_table, q_start, q_len, *,
         k_scale=k_scale, v_scale=v_scale, window=window)
 
 
+def ragged_attention_ref(q, k_pages, v_pages, page_table, q_start, q_len,
+                         *, k_scale=None, v_scale=None, window=None):
+    """Gather-then-attend oracle for the ragged flat token-batch kernel
+    (``kernels/ragged_attention.py``).
+
+    q is ``[W, KV, G, hd]`` — the tick's tokens packed contiguously:
+    row b owns flat slots ``[row_start[b], row_start[b] + q_len[b])``
+    where ``row_start`` is the exclusive prefix sum of ``q_len``.  Flat
+    slot ``t`` of row b sits at absolute position
+    ``q_start[b] + t - row_start[b]`` and attends keys gathered through
+    that row's page table, exactly as in
+    :func:`paged_prefill_attention_ref`.  Padding slots past
+    ``sum(q_len)`` output zeros.  Returns ``[W, KV, G, hd]``.
+    """
+    W, KV, G, hd = q.shape
+    B, P = page_table.shape
+    bs = k_pages.shape[1]
+    k = k_pages[page_table].astype(jnp.float32)       # [B,P,bs,KV,hd]
+    v = v_pages[page_table].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[page_table].astype(jnp.float32)[..., None]
+        v = v * v_scale[page_table].astype(jnp.float32)[..., None]
+    T = P * bs
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    csum = jnp.cumsum(q_len)
+    tok = jnp.arange(W)
+    row = jnp.minimum(jnp.searchsorted(csum, tok, side="right"), B - 1)
+    valid = tok < csum[-1]
+    row_start = csum - q_len
+    pos_q = q_start[row] + (tok - row_start[row])     # [W] abs positions
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("wkgd,wtkd->wkgt", q.astype(jnp.float32), k[row]) * scale
+    t_idx = jnp.arange(T)[None, None, None, :]
+    pq = pos_q[:, None, None, None]
+    mask = t_idx <= pq
+    if window is not None:
+        mask &= t_idx > pq - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("wkgt,wtkd->wkgd", p, v[row])
+    return jnp.where(valid[:, None, None, None], out, 0.0).astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u):
     """All inputs [B,H,T,hd] except u [H,hd].  Returns y [B,H,T,hd].
 

@@ -12,9 +12,14 @@ Real traffic has mixed prompt lengths: ``--length-dist
 prefill (``--prefill-chunk`` tokens per row per tick, admission capped at
 ``--prefill-token-budget`` tokens per tier per tick) serves them with no
 cross-row padding beyond each row's last chunk.  Each tick runs as ONE
-unified mixed prefill+decode program per tier (``--split-step`` keeps
-the legacy two-launch chunk+decode pair as the A/B baseline; the summary
-reports realized launches/tick either way).  ``--dense-kv`` or
+unified prefill+decode program per tier — by default the **ragged flat
+token-batch** program, whose live tokens pack contiguously into a
+``[1, W]`` batch at a bucketed power-of-two width (``--flat-buckets``
+overrides the bucket set) so compute is O(live tokens);
+``--no-ragged-step`` keeps the padded ``[slots, width]`` mixed program
+and ``--split-step`` the legacy two-launch chunk+decode pair (the A/B
+baselines; the summary reports realized launches/tick, the wasted-slot
+ratio, and the compiled-program count either way).  ``--dense-kv`` or
 ``--no-chunked-prefill`` fall back to the uniform packed prefill
 (uniform lengths only).
 
@@ -137,6 +142,8 @@ def build_engine(args, clock=None, tracer=None):
         prefill_token_budget=args.prefill_token_budget,
         use_unified_step=False if getattr(args, "split_step", False)
         else None,
+        use_ragged_step=getattr(args, "ragged_step", None),
+        flat_buckets=getattr(args, "flat_buckets", None),
         prefix_cache=bool(getattr(args, "prefix_cache", False)),
         clock=clock if clock is not None else WallClock(),
         tracer=tracer,
@@ -293,6 +300,17 @@ def run(args, clock=None) -> dict:
                                 if engine.chunked_prefill else None)
     summary["chunked_prefill"] = engine.chunked_prefill
     summary["unified_step"] = engine.unified_step
+    summary["ragged_step"] = engine.ragged_step
+    summary["flat_buckets"] = [rt.flat_buckets if rt.ragged else None
+                               for rt in engine.runtimes]
+    # compiled-program accounting: warmed vs launched widths per tier
+    # (mid_run_recompiles nonzero means a tick launched a width warmup
+    # never compiled — the failure mode the bucketed layout eliminates)
+    summary["compiled_programs"] = engine.compile_stats()
+    summary["mid_run_recompiles"] = sum(
+        len(c["mid_run_recompiles"]) for c in summary["compiled_programs"])
+    summary["admitted_tokens_by_tier"] = \
+        list(engine.scheduler.admitted_tokens)
     summary["escalation_budget"] = (None if args.delta is not None
                                     else args.escalation_budget)
     summary["delta"] = [engine.scheduler.delta(g)
@@ -344,13 +362,24 @@ def report(s: dict) -> None:
     # realized launch efficiency: compiled-program dispatches and
     # blocking device_gets per engine tick, per tier (the unified
     # token-batch path's budget is one of each per active tier per tick)
-    mode = "unified" if s.get("unified_step") else "split"
+    mode = ("ragged" if s.get("ragged_step")
+            else "unified" if s.get("unified_step") else "split")
     print(f"  launches/tick [{mode}] "
           + "  ".join(f"{n}={l:.2f}" for n, l in
                       zip(s["tier_names"], s["launches_per_tick"]))
           + "   host-syncs/tick "
           + "  ".join(f"{n}={h:.2f}" for n, h in
                       zip(s["tier_names"], s["host_syncs_per_tick"])))
+    if s.get("step_processed_tokens"):
+        cp = s.get("compiled_programs") or []
+        progs = "  ".join(f"{c['tier']}={c['compiled_programs']}"
+                          for c in cp)
+        recomp = s.get("mid_run_recompiles", 0)
+        print(f"  token slots  live {s['step_live_tokens']}"
+              f"/{s['step_processed_tokens']} processed "
+              f"(wasted-slot ratio {s['wasted_slot_ratio']:.3f})   "
+              f"compiled programs {progs}"
+              + (f"   MID-RUN RECOMPILES {recomp}" if recomp else ""))
     overloaded = (s.get("shed") or s.get("failed") or s.get("preemptions")
                   or s.get("launch_retries")
                   or s.get("preemption_policy", "none") != "none"
@@ -434,6 +463,22 @@ def make_parser() -> argparse.ArgumentParser:
                          "the unified mixed token-batch program (the "
                          "launch-count A/B escape hatch; default: unified "
                          "on paged attention-only tiers)")
+    ap.add_argument("--ragged-step", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="ragged flat [1, W] token-batch layout inside "
+                         "unified execution: live tokens pack "
+                         "contiguously at a bucketed width, so a tick's "
+                         "compute is O(live tokens).  --no-ragged-step "
+                         "keeps the padded [slots, width] mixed program "
+                         "(the bit-identical A/B baseline).  Default: "
+                         "ragged whenever unified execution is on")
+    ap.add_argument("--flat-buckets", type=int, nargs="*", default=None,
+                    metavar="W",
+                    help="compiled flat widths for --ragged-step (default "
+                         "powers of two from 8 up to slots*prefill-chunk; "
+                         "widths > 16 must be multiples of the kernel's "
+                         "16-token query tile, and the largest must cover "
+                         "slots*prefill-chunk)")
     ap.add_argument("--delta", type=float, default=None,
                     help="fixed gate threshold (overrides the budget)")
     ap.add_argument("--escalation-budget", type=float, default=0.25,

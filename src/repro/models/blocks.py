@@ -5,7 +5,7 @@ Every mixer has the signature::
     y, new_cache, = mixer(p, cfg, spec, x, cache, pos, mode, pages=None)
 
 with ``mode in {'train', 'prefill', 'prefill_chunk', 'mixed_step',
-'decode'}``.  In train mode caches are ignored (``None`` in / ``None``
+'ragged_step', 'decode'}``.  In train mode caches are ignored (``None`` in / ``None``
 out); prefill returns a populated cache; decode consumes ``x`` of
 seq-len 1 and a cache, and returns the updated cache.  ``pos`` is
 ``[B, S]`` int32 absolute positions (decode: ``[B, 1]``).  ``pages``
@@ -18,7 +18,10 @@ prefill_chunk each live row advances one fixed-size chunk of its prompt
 per call; mixed_step is the unified token-batch step where decode rows
 additionally ride in the same batch with ``q_len == 1`` (attention
 only; recurrent mixers raise, their state cannot be replayed
-chunk-wise).
+chunk-wise).  ragged_step is the flat O(live tokens) form of
+mixed_step: the batch is one flat ``[1, W]`` token row packed by the
+prefix sum of ``q_len``, and ``pages`` additionally carries
+``"q_start": [R] int32`` per-engine-row first positions.
 
 Every ffn has the signature ``y, aux = ffn(p, cfg, spec, x, cache, mode)``
 where ``aux`` is a dict of auxiliary scalars (MoE load-balance / router
@@ -223,6 +226,60 @@ def attention(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
         y = out.astype(x.dtype).reshape(B, S, H * hd) @ p["wo"]
         return y, new_cache
 
+    if mode == "ragged_step":
+        # Ragged flat token-batch step: the batch is ONE flat row of
+        # S == W token slots — engine row b's q_len[b] live tokens pack
+        # contiguously at flat slots [row_start[b], row_start[b] +
+        # q_len[b]) (row_start = exclusive prefix sum of q_len), the
+        # tail past sum(q_len) is bucket padding.  Compute is O(live
+        # tokens): a decode row contributes one slot, not a chunk-wide
+        # stripe.  Each flat token's owning engine row is recovered from
+        # the prefix sum (searchsorted over cumsum(q_len)); its KV write
+        # scatters through THAT row's page table at the token's absolute
+        # position (pos[0, t]), padding tokens to the reserved null
+        # block 0; then the flat flash program is
+        # kernels/ragged_attention gathering per-row pages via the same
+        # prefix-sum work layout.
+        if pages is None:
+            raise ValueError("ragged_step requires pages={'page_table', "
+                             "'q_len', 'q_start'} over a block-paged "
+                             "cache")
+        from repro.kernels import ops as kernel_ops
+        pt = pages["page_table"]                        # [R, P] int32
+        q_len = pages["q_len"]                          # [R] int32
+        q_start = pages["q_start"]                      # [R] int32
+        R, P = pt.shape
+        bs = cache["k"].shape[1]
+        csum = jnp.cumsum(q_len)
+        tok = jnp.arange(S)
+        row = jnp.minimum(
+            jnp.searchsorted(csum, tok, side="right"), R - 1)
+        valid = tok < csum[-1]
+        p_tok = pos[0]                                  # [W] abs positions
+        page = jnp.minimum(p_tok // bs, P - 1)
+        blk = jnp.where(valid, pt[row, page], 0)
+        off = p_tok % bs
+        quant = "k_scale" in cache
+        if quant:
+            kq, ksc = _quant_i8(k)
+            vq, vsc = _quant_i8(v)
+            ck = cache["k"].at[blk, off].set(kq[0])
+            cv = cache["v"].at[blk, off].set(vq[0])
+            cks = cache["k_scale"].at[blk, off].set(ksc[0])
+            cvs = cache["v_scale"].at[blk, off].set(vsc[0])
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            out = kernel_ops.ragged_attention(
+                q[0], ck, cv, pt, q_start, q_len, k_scale=cks,
+                v_scale=cvs, window=spec.window)
+        else:
+            ck = cache["k"].at[blk, off].set(k[0].astype(cache["k"].dtype))
+            cv = cache["v"].at[blk, off].set(v[0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            out = kernel_ops.ragged_attention(
+                q[0], ck, cv, pt, q_start, q_len, window=spec.window)
+        y = out[None].astype(x.dtype).reshape(B, S, H * hd) @ p["wo"]
+        return y, new_cache
+
     if mode == "decode" and pages is not None:
         # Block-paged decode: the KV cache is a shared pool of fixed-size
         # blocks [N, bs, KV, hd]; row b's live tokens are reached through
@@ -373,7 +430,7 @@ def _causal_conv(x, w, b, cache, mode):
 
 
 def mamba(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
-    if mode in ("prefill_chunk", "mixed_step"):
+    if mode in ("prefill_chunk", "mixed_step", "ragged_step"):
         raise NotImplementedError(
             "chunked/unified token-batch steps carry no recurrent state "
             "across chunks; mamba layers require the dense uniform "
@@ -443,7 +500,7 @@ def _token_shift(x, x_prev, mode):
 
 
 def rwkv6(p, cfg: ModelConfig, spec, x, cache, pos, mode, pages=None):
-    if mode in ("prefill_chunk", "mixed_step"):
+    if mode in ("prefill_chunk", "mixed_step", "ragged_step"):
         raise NotImplementedError(
             "chunked/unified token-batch steps carry no recurrent state "
             "across chunks; rwkv6 layers require the dense uniform "
@@ -516,7 +573,7 @@ def _zero_aux():
 
 def dense_ffn(p, cfg: ModelConfig, spec, x, cache, mode):
     if spec.act == "rwkv_cmix":
-        if mode in ("prefill_chunk", "mixed_step"):
+        if mode in ("prefill_chunk", "mixed_step", "ragged_step"):
             raise NotImplementedError(
                 "chunked/unified token-batch steps carry no token-shift "
                 "state across chunks; rwkv_cmix ffns require the dense "
@@ -620,7 +677,8 @@ def apply_layer(p, cfg: ModelConfig, layer, x, cache, pos, mode, pages=None):
     x = x + y
 
     new_cache = None
-    if mode in ("decode", "prefill", "prefill_chunk", "mixed_step"):
+    if mode in ("decode", "prefill", "prefill_chunk", "mixed_step",
+                "ragged_step"):
         new_cache = {"mixer": new_mix if new_mix is not None else {},
                      "ffn": new_ffn if new_ffn is not None else {}}
     return x, new_cache, aux

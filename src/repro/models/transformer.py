@@ -100,7 +100,8 @@ def _logits(params, cfg: ModelConfig, x):
 def _embed(params, cfg: ModelConfig, batch, mode):
     tokens = batch["tokens"]
     x = params["embed"][tokens]  # gather; vocab-sharded -> GSPMD collective
-    if cfg.frontend and mode in ("prefill_chunk", "mixed_step"):
+    if cfg.frontend and mode in ("prefill_chunk", "mixed_step",
+                                 "ragged_step"):
         raise NotImplementedError(
             "chunked/unified token-batch steps do not inject modality "
             "frontend embeddings; frontend models require the dense "
@@ -130,18 +131,22 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
 
     batch: {"tokens": [B,S] int32, optional "frontend_embeds": [B,fl,fd]}
     pos:   [B,S] absolute positions (defaults to arange for train/prefill;
-           required for decode, prefill_chunk, and mixed_step).
+           required for decode, prefill_chunk, mixed_step, and
+           ragged_step).
     pages: ``{"page_table": [B, P] int32}`` selects the block-paged KV
            layout (cache from ``init_paged_cache``); decode,
-           prefill_chunk, and mixed_step.  prefill_chunk/mixed_step
-           additionally need ``"q_len": [B] int32`` (live tokens per row
-           this step) and per-row positions in ``pos`` — see
-           :func:`repro.models.blocks.attention`.
+           prefill_chunk, mixed_step, and ragged_step.
+           prefill_chunk/mixed_step additionally need
+           ``"q_len": [B] int32`` (live tokens per row this step) and
+           per-row positions in ``pos``; ragged_step takes a flat
+           ``[1, W]`` token batch with ``"q_start": [R]`` per-row first
+           positions — see :func:`repro.models.blocks.attention`.
     """
     x = _embed(params, cfg, batch, mode)
     B, S = batch["tokens"].shape
     if pos is None:
-        if mode in ("decode", "prefill_chunk", "mixed_step"):
+        if mode in ("decode", "prefill_chunk", "mixed_step",
+                    "ragged_step"):
             raise ValueError(f"{mode} requires pos")
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
 
@@ -160,7 +165,7 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
     if cfg.num_periods:
         c = cache.get("period") if cache else None
         collect = bool(cfg.early_exit_periods) and mode not in (
-            "decode", "prefill_chunk", "mixed_step")
+            "decode", "prefill_chunk", "mixed_step", "ragged_step")
         x, nc, aux, exits = _apply_periods(params, cfg, x, c, pos, mode, aux,
                                            collect_exits=collect, pages=pages)
         if nc is not None:
@@ -238,6 +243,34 @@ def mixed_step(params, cfg: ModelConfig, tokens, cache, pos, pages):
     rows = jnp.arange(logits.shape[0])
     last = jnp.maximum(pages["q_len"] - 1, 0)
     return logits[rows, last], new_cache
+
+
+def ragged_step(params, cfg: ModelConfig, tokens, cache, pos, pages):
+    """One ragged flat token-batch prefill+decode step (O(live tokens)).
+
+    tokens [1, W] int32 — the tick's live tokens packed contiguously:
+    engine row b's ``pages['q_len'][b]`` tokens occupy flat slots
+    ``[row_start[b], row_start[b] + q_len[b])`` (row_start = exclusive
+    prefix sum of q_len over engine rows), the tail past ``sum(q_len)``
+    is bucket padding.  pos [1, W] per-token absolute positions; pages
+    {"page_table": [R, P], "q_len": [R], "q_start": [R]} over a
+    block-paged cache, where R is the engine row count (slot capacity)
+    and ``q_start[b]`` is row b's first absolute position this tick.
+    Scatters every live token's KV through its owning row's page table
+    and runs the flat flash program
+    (:func:`repro.models.blocks.attention` mode="ragged_step",
+    attention via ``kernels/ragged_attention.py``), then gathers each
+    row's logits at its last live flat slot ``row_start + q_len - 1`` —
+    returning (last_logits [R, V], new_cache) in engine-row order, the
+    same contract as :func:`mixed_step`.  ``q_len == 0`` rows return
+    unspecified logits; the engine discards them.
+    """
+    logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
+                                   mode="ragged_step", cache=cache,
+                                   pos=pos, pages=pages)
+    csum = jnp.cumsum(pages["q_len"])
+    last = jnp.clip(csum - 1, 0, tokens.shape[1] - 1)
+    return logits[0, last], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, pages=None):

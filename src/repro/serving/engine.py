@@ -179,19 +179,24 @@ class StepPlan:
     slot-pool state, then executed by one of two backends behind the same
     interface:
 
-    * **unified** (default on paged attention-only tiers): one
+    * **ragged flat** (the default on paged attention-only tiers): one
+      :meth:`_TierRuntime.run_ragged` launch consumes the flat packing —
+      every live row's tokens concatenated into ``flat_tokens [1, W]``
+      (W a bucketed power-of-two width), so the tick's compute is
+      O(live tokens) end-to-end.
+    * **padded unified** (``use_ragged_step=False``): one
       :meth:`_TierRuntime.run_mixed` launch consumes
       ``tokens``/``pos``/``q_len`` verbatim — every live row's work in a
-      single compiled program per tick.
+      single compiled program per tick at ``[capacity, width]``.
     * **split** (``use_unified_step=False`` escape hatch; the only option
       for dense-arena and recurrent-state tiers): the legacy
       ``chunk_fn`` + ``step_fn`` pair, two launches on mixed ticks.
 
-    The executors consume ``tokens``/``pos``/``q_len`` and the three row
-    lists; ``kind`` and ``shard`` are the plan's per-row record of the
-    same decisions (introspection: tests and debugging read them, the
-    launch does not — a stall is equally expressed by exclusion from
-    ``prefill_rows``/``decode_rows``).
+    The executors consume ``tokens``/``pos``/``q_len`` (or the flat
+    fields) and the three row lists; ``kind`` and ``shard`` are the
+    plan's per-row record of the same decisions (introspection: tests
+    and debugging read them, the launch does not — a stall is equally
+    expressed by exclusion from ``prefill_rows``/``decode_rows``).
     """
     width: int                  # token slots per row (chunk; 1 decode-only)
     kind: np.ndarray            # [capacity] int8 KIND_*
@@ -202,11 +207,22 @@ class StepPlan:
     prefill_rows: List[int]     # live prefill rows (q_len > 0)
     decode_rows: List[int]      # decode rows (unified: stalls excluded)
     finishing: List[int]        # prefill rows whose last chunk completes
+    # ragged flat layout (None on padded/split plans): live tokens of all
+    # rows packed contiguously in slot order, padded up to the bucket
+    flat_width: Optional[int] = None        # bucketed W >= sum(q_len)
+    flat_tokens: Optional[np.ndarray] = None    # [1, W] int32
+    flat_pos: Optional[np.ndarray] = None       # [1, W] int32 abs pos
+    q_start: Optional[np.ndarray] = None        # [capacity] int32 row pos0
 
     @property
     def live_prefill_tokens(self) -> int:
         return int(self.q_len[self.prefill_rows].sum()) \
             if self.prefill_rows else 0
+
+    @property
+    def live_tokens(self) -> int:
+        """Real tokens this tick computes (prefill chunks + decode)."""
+        return int(self.q_len.sum())
 
 
 class _TierRuntime:
@@ -229,6 +245,8 @@ class _TierRuntime:
                  use_chunked_prefill: bool = False,
                  prefill_chunk: int = 128,
                  use_unified_step: bool = False,
+                 use_ragged_step: bool = False,
+                 flat_buckets: Optional[Sequence[int]] = None,
                  prefix_cache: bool = False):
         self.spec = spec
         self.capacity = capacity
@@ -236,7 +254,17 @@ class _TierRuntime:
         self.paged = use_paged_kv
         self.chunked = use_chunked_prefill
         self.unified = use_unified_step and use_chunked_prefill
+        self.ragged = bool(use_ragged_step) and self.unified
         self.chunk = min(prefill_chunk, prompt_len)
+        # ragged flat widths: compiled program shapes are drawn from a
+        # small fixed bucket set (powers of two up to the worst-case
+        # capacity*chunk tick), so a mixed-length run never recompiles
+        # mid-run; warmed/launched width sets feed the compile counter
+        self.flat_buckets = (self._default_buckets()
+                             if flat_buckets is None
+                             else self._validate_buckets(flat_buckets))
+        self.warmed_widths: set = set()
+        self.launched_widths: set = set()
         self.prefix = bool(prefix_cache) and self.paged and self.chunked
         self.mesh = spec.mesh
         self.data_shards = spec.data_shards()
@@ -306,6 +334,19 @@ class _TierRuntime:
             tok, conf = pick(logits)
             return tok, conf, new_cache
 
+        def ragged_fn(params, tokens, cache, pos, page_table, q_len,
+                      q_start):
+            # ragged flat token-batch step: the tick's live tokens packed
+            # contiguously in [1, W] (W bucketed), so compute is O(live
+            # tokens) instead of O(capacity * width); returns per-row
+            # last-position picks in engine-row order like mixed_fn
+            pages = {"page_table": page_table, "q_len": q_len,
+                     "q_start": q_start}
+            logits, new_cache = transformer.ragged_step(
+                params, cfg, tokens, cache, pos, pages)
+            tok, conf = pick(logits)
+            return tok, conf, new_cache
+
         self.prefill_fn = jax.jit(prefill_fn)
         # Donate the cache so XLA updates the slot arena in place instead
         # of copying it every token (2x peak cache memory otherwise).  CPU
@@ -314,6 +355,47 @@ class _TierRuntime:
         self.step_fn = jax.jit(step_fn, donate_argnums=donate)
         self.chunk_fn = jax.jit(chunk_fn, donate_argnums=donate)
         self.mixed_fn = jax.jit(mixed_fn, donate_argnums=donate)
+        self.ragged_fn = jax.jit(ragged_fn, donate_argnums=donate)
+
+    # -- ragged flat-width buckets ------------------------------------------
+
+    def _default_buckets(self) -> List[int]:
+        """Powers of two from 8 up to the first covering the worst-case
+        tick (every row prefilling a full chunk = capacity * chunk live
+        tokens)."""
+        worst = max(self.capacity * self.chunk, 1)
+        buckets, w = [], 8
+        while w < worst:
+            buckets.append(w)
+            w *= 2
+        buckets.append(w)
+        return buckets
+
+    def _validate_buckets(self, buckets: Sequence[int]) -> List[int]:
+        out = sorted({int(b) for b in buckets})
+        if not out or out[0] <= 0:
+            raise ValueError(f"flat_buckets must be positive: {buckets}")
+        for b in out:
+            if b > 16 and b % 16:
+                raise ValueError(
+                    f"flat bucket {b} must be a multiple of the ragged "
+                    "kernel's 16-token query tile (widths <= 16 are "
+                    "single-tile and exempt)")
+        worst = self.capacity * self.chunk
+        if out[-1] < worst:
+            raise ValueError(
+                f"largest flat bucket {out[-1]} cannot cover the "
+                f"worst-case tick of {worst} live tokens "
+                f"({self.capacity} slots x {self.chunk}-token chunks)")
+        return out
+
+    def bucket_width(self, live_tokens: int) -> int:
+        """Smallest bucket holding `live_tokens` (>= 1 slot)."""
+        need = max(int(live_tokens), 1)
+        for b in self.flat_buckets:
+            if b >= need:
+                return b
+        return self.flat_buckets[-1]
 
     # -- device placement ---------------------------------------------------
 
@@ -373,15 +455,40 @@ class _TierRuntime:
                 self.page_table_device(mask_rows=mask_rows))
 
     def run_mixed(self, tokens, pos, qlen):
-        """The unified token-batch launch: one compiled program serves
-        every live row's tick — prefill chunks and decode tokens share
-        the batch, so no page-table masking is needed (each row scatters
-        into and attends its *own* pages inside the same program)."""
+        """The padded unified token-batch launch: one compiled program
+        serves every live row's tick — prefill chunks and decode tokens
+        share the batch, so no page-table masking is needed (each row
+        scatters into and attends its *own* pages inside the same
+        program)."""
+        self.launched_widths.add(int(np.asarray(tokens).shape[1]))
         with self._ctx():
             return self.mixed_fn(
                 self.params, self.put_rows(tokens), self.pool.cache,
                 self.put_rows(pos), self.page_table_device(),
                 self.put_rows(qlen))
+
+    def put_flat(self, arr):
+        """A flat ``[1, W]`` per-tick array onto the tier's devices,
+        replicated (the leading dim is not the row dim, so it cannot
+        shard over the data axes; GSPMD mixes the replicated flat batch
+        with the row-sharded page table and KV arena)."""
+        arr = np.asarray(arr)
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, NamedSharding(self.mesh,
+                                                 PartitionSpec()))
+
+    def run_ragged(self, flat_tokens, flat_pos, qlen, qstart):
+        """The ragged flat token-batch launch: ONE compiled program at a
+        bucketed flat width serves the tick's live tokens — each token
+        scatters KV through and attends its owning row's pages, so the
+        program's compute is O(live tokens), not O(capacity * width)."""
+        self.launched_widths.add(int(np.asarray(flat_tokens).shape[1]))
+        with self._ctx():
+            return self.ragged_fn(
+                self.params, self.put_flat(flat_tokens), self.pool.cache,
+                self.put_flat(flat_pos), self.page_table_device(),
+                self.put_rows(qlen), self.put_rows(qstart))
 
     def page_table_device(self, mask_rows: Sequence[int] = ()):
         """Device page tables; ``mask_rows`` (rows mid-prefill during a
@@ -450,6 +557,8 @@ class CascadeEngine:
                  prefill_chunk: int = 128,
                  prefill_token_budget: Optional[int] = None,
                  use_unified_step: Optional[bool] = None,
+                 use_ragged_step: Optional[bool] = None,
+                 flat_buckets: Optional[Sequence[int]] = None,
                  prefix_cache: bool = False,
                  tracer: Optional[obs.Tracer] = None,
                  profile_annotations: bool = False,
@@ -494,6 +603,24 @@ class CascadeEngine:
         escape hatch (legacy ``chunk_fn`` + ``step_fn``, two launches on
         mixed ticks) — the A/B baseline; token streams are bit-identical
         between the two.
+
+        ``use_ragged_step`` (default: auto — on exactly when unified
+        execution is on) selects the **ragged flat token-batch layout**
+        inside unified execution: each tick's live tokens are packed
+        contiguously into one ``[1, W]`` flat batch (W drawn from a
+        small power-of-two bucket set, ``flat_buckets``), executed by
+        ONE compiled ragged-attention program per tier per tick
+        (``transformer.ragged_step`` over
+        ``kernels/ragged_attention.py``) whose compute is O(live
+        tokens) end-to-end — idle slots cost nothing instead of a
+        padded row.  All bucket widths compile at :meth:`warmup`, so a
+        mixed-length run never recompiles mid-run
+        (:meth:`compile_stats`).  ``use_ragged_step=False`` keeps the
+        padded ``[capacity, width]`` mixed program — the bit-identical
+        escape hatch and A/B baseline; ``flat_buckets`` overrides the
+        bucket set (each width > 16 must be a multiple of the kernel's
+        16-token query tile, and the largest must cover
+        ``capacity * prefill_chunk``).
 
         ``tracer`` attaches a :class:`repro.serving.observability.Tracer`:
         the engine then records per-request lifecycle spans and per-tick
@@ -560,6 +687,18 @@ class CascadeEngine:
                 "and recurrent-state tiers keep the legacy split "
                 "chunk+decode path (use_unified_step=False)")
         self.unified_step = use_unified_step
+        if use_ragged_step is None:
+            use_ragged_step = use_unified_step
+        elif use_ragged_step and not use_unified_step:
+            raise ValueError(
+                "the ragged flat token-batch layout runs inside unified "
+                "token-batch execution (use_unified_step=True); the split "
+                "and dense paths have no flat batch to pack")
+        self.ragged_step = bool(use_ragged_step) and use_unified_step
+        if flat_buckets is not None and not self.ragged_step:
+            raise ValueError(
+                "flat_buckets sizes the ragged flat layout's compiled "
+                "widths; it requires use_ragged_step")
         if prefix_cache and not use_chunked_prefill:
             raise ValueError(
                 "prefix caching requires chunked paged prefill "
@@ -641,6 +780,8 @@ class CascadeEngine:
                          use_chunked_prefill=use_chunked_prefill,
                          prefill_chunk=self.prefill_chunk,
                          use_unified_step=use_unified_step,
+                         use_ragged_step=self.ragged_step,
+                         flat_buckets=flat_buckets,
                          prefix_cache=prefix_cache)
             for spec, cap, nb in zip(self.tiers, slots_per_tier,
                                      kv_blocks_per_tier)]
@@ -1056,9 +1197,27 @@ class CascadeEngine:
             decode_rows = list(dec)
             for s in dec:
                 kind[s] = KIND_DECODE
+        flat_width = flat_tokens = flat_pos = q_start = None
+        if rt.ragged:
+            # flat packing: live tokens of all rows concatenated in slot
+            # order, padded up to the smallest bucket width (padding
+            # scatters to the null block and emits nothing)
+            flat_width = rt.bucket_width(int(qlen.sum()))
+            flat_tokens = np.zeros((1, flat_width), np.int32)
+            flat_pos = np.zeros((1, flat_width), np.int32)
+            q_start = pos[:, 0].astype(np.int32).copy()
+            o = 0
+            for s in range(cap):
+                n = int(qlen[s])
+                if n:
+                    flat_tokens[0, o:o + n] = tokens[s, :n]
+                    flat_pos[0, o:o + n] = pos[s, :n]
+                    o += n
         return StepPlan(width=width, kind=kind, tokens=tokens, pos=pos,
                         q_len=qlen, shard=shard, prefill_rows=prefill_rows,
-                        decode_rows=decode_rows, finishing=finishing)
+                        decode_rows=decode_rows, finishing=finishing,
+                        flat_width=flat_width, flat_tokens=flat_tokens,
+                        flat_pos=flat_pos, q_start=q_start)
 
     # -- overload: preemption, load shedding, single-request failure --------
 
@@ -1262,13 +1421,21 @@ class CascadeEngine:
             if not plan.prefill_rows and not plan.decode_rows:
                 return 0                # every live row stalled
             t0 = tr.now_us() if tr is not None else 0.0
+            kind = "run_ragged" if rt.ragged else "run_mixed"
             try:
-                with obs.annotation(f"run_mixed/{rt.spec.name}",
+                with obs.annotation(f"{kind}/{rt.spec.name}",
                                     self.profile_annotations):
-                    tok, conf, cache = self._launch(
-                        tier, "run_mixed",
-                        lambda p=plan: rt.run_mixed(p.tokens, p.pos,
-                                                    p.q_len))
+                    if rt.ragged:
+                        tok, conf, cache = self._launch(
+                            tier, kind,
+                            lambda p=plan: rt.run_ragged(
+                                p.flat_tokens, p.flat_pos, p.q_len,
+                                p.q_start))
+                    else:
+                        tok, conf, cache = self._launch(
+                            tier, kind,
+                            lambda p=plan: rt.run_mixed(p.tokens, p.pos,
+                                                        p.q_len))
             except _RetryExhausted as e:
                 self._fail_one(tier, rt,
                                plan.prefill_rows + plan.decode_rows, now, e)
@@ -1281,12 +1448,23 @@ class CascadeEngine:
         if tr is not None:
             # async dispatch: this phase is host-side launch cost (incl.
             # put_rows transfers); device wait shows under device_get
-            tr.phase("launch", tier, t0, tick=self.tick_id, kind="mixed",
-                     width=plan.width)
+            tr.phase("launch", tier, t0, tick=self.tick_id,
+                     kind="ragged" if rt.ragged else "mixed",
+                     width=plan.flat_width if rt.ragged else plan.width)
         self.metrics.record_launches(tier, 1)
+        # exact live-vs-processed token accounting: the ragged program
+        # computes flat_width token slots (bucket padding only), the
+        # padded program capacity * width
+        self.metrics.record_step_tokens(
+            tier, plan.live_tokens,
+            plan.flat_width if rt.ragged else rt.capacity * plan.width)
         if plan.prefill_rows:
-            self.metrics.record_prefill_tokens(plan.live_prefill_tokens,
-                                               rt.capacity * plan.width)
+            # ragged: chunk tokens occupy exactly their live slots; the
+            # bucket padding is already charged to wasted_slot_ratio
+            self.metrics.record_prefill_tokens(
+                plan.live_prefill_tokens,
+                plan.live_prefill_tokens if rt.ragged
+                else rt.capacity * plan.width)
         # host state advances on host-known lengths only; device outputs
         # stay unfetched until something must be emitted
         for s in plan.prefill_rows:
@@ -1351,6 +1529,8 @@ class CascadeEngine:
             self.metrics.record_launches(tier, 1)
             self.metrics.record_prefill_tokens(plan.live_prefill_tokens,
                                                rt.capacity * plan.width)
+            self.metrics.record_step_tokens(tier, plan.live_prefill_tokens,
+                                            rt.capacity * plan.width)
             for s in plan.prefill_rows:
                 rt.prefill_pos[s] += int(plan.q_len[s])
                 if rt.prefix:
@@ -1458,6 +1638,7 @@ class CascadeEngine:
             tr.phase("launch", tier, t0, tick=self.tick_id, kind="decode",
                      width=1)
         self.metrics.record_launches(tier, 1)
+        self.metrics.record_step_tokens(tier, len(active), rt.capacity)
         return {"active": active, "tok": nxt, "conf": conf}
 
     def _finish(self, tier: int, now: float) -> None:
@@ -1606,6 +1787,29 @@ class CascadeEngine:
             })
         return out
 
+    def compile_stats(self) -> List[dict]:
+        """Per-tier compiled-program accounting for the token-batch
+        executors: the widths :meth:`warmup` compiled, the widths ticks
+        actually launched, and any launched outside the warmed set — a
+        mid-run recompile, which the bucketed ragged layout exists to
+        eliminate (test-asserted)."""
+        out = []
+        for rt in self.runtimes:
+            mid = sorted(rt.launched_widths - rt.warmed_widths) \
+                if rt.warmed_widths else []
+            out.append({
+                "tier": rt.spec.name,
+                "backend": ("ragged" if rt.ragged else
+                            "unified" if rt.unified else
+                            "split" if rt.chunked else "legacy"),
+                "warmed_widths": sorted(rt.warmed_widths),
+                "launched_widths": sorted(rt.launched_widths),
+                "compiled_programs": len(rt.warmed_widths
+                                         | rt.launched_widths),
+                "mid_run_recompiles": mid,
+            })
+        return out
+
     def reset_clock(self) -> None:
         """Restart the clock at t=0.  Call after compilation / setup and
         before submitting timed requests, so arrival timestamps are
@@ -1622,14 +1826,28 @@ class CascadeEngine:
         resetting the clock so compile time never counts against request
         latency."""
         for rt in self.runtimes:
+            if rt.ragged:
+                # every bucket width of the one-per-tick ragged program
+                # compiles here (q_len all zero: the dummy writes land in
+                # the null block), so a mixed-length run never pays a
+                # mid-run recompile — compile_stats() asserts this
+                zr = np.zeros(rt.capacity, np.int32)
+                for w in rt.flat_buckets:
+                    z = np.zeros((1, w), np.int32)
+                    _, _, rt.pool.cache = rt.run_ragged(z, z, zr, zr)
+                rt.warmed_widths = set(rt.flat_buckets)
+                rt.launched_widths = set()
+                continue
             if rt.unified:
-                # both compiled widths of the one-per-tick program: the
-                # mixed token batch (any prefill row live) and the
-                # width-1 decode-only batch
+                # both compiled widths of the padded one-per-tick
+                # program: the mixed token batch (any prefill row live)
+                # and the width-1 decode-only batch
                 for w in dict.fromkeys((rt.chunk, 1)):
                     z = np.zeros((rt.capacity, w), np.int32)
                     _, _, rt.pool.cache = rt.run_mixed(
                         z, z, np.zeros(rt.capacity, np.int32))
+                rt.warmed_widths = set(dict.fromkeys((rt.chunk, 1)))
+                rt.launched_widths = set()
                 continue
             if rt.chunked:
                 ztok = np.zeros((rt.capacity, rt.chunk), np.int32)

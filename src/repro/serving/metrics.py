@@ -55,6 +55,14 @@ class ServingMetrics:
         # prefill keeps the ratio near 1; pad-to-max burns the difference)
         self.prefill_live_tokens = 0
         self.prefill_processed_tokens = 0
+        # step-batch padding tax, per tier: live tokens each launch
+        # really computed vs token slots its fixed-shape program
+        # processed (ragged flat layout: bucket padding only; padded
+        # mixed program: capacity * width; split: both launches).  The
+        # wasted-slot ratio in summary() is 1 - live/processed; the
+        # per-tick series feeds the bench sweep's per-point ratio.
+        self.step_live_tokens = [0] * len(tiers)
+        self.step_processed_tokens = [0] * len(tiers)
         # launch efficiency: compiled-program dispatches and blocking
         # device->host fetches, per tier (the unified token-batch path's
         # win: one launch + one device_get per active tier per tick; the
@@ -167,6 +175,13 @@ class ServingMetrics:
         fixed-shape batch of `processed` token slots."""
         self.prefill_live_tokens += int(live)
         self.prefill_processed_tokens += int(processed)
+
+    def record_step_tokens(self, tier: int, live: int,
+                           processed: int) -> None:
+        """One token-batch launch of `tier`: `live` real tokens inside a
+        compiled program that processed `processed` token slots."""
+        self.step_live_tokens[tier] += int(live)
+        self.step_processed_tokens[tier] += int(processed)
 
     def record_launches(self, tier: int, n: int = 1) -> None:
         """`n` compiled-program dispatches (prefill/chunk/decode/mixed
@@ -283,6 +298,22 @@ class ServingMetrics:
             "prefill_live_token_ratio": (
                 self.prefill_live_tokens / self.prefill_processed_tokens
                 if self.prefill_processed_tokens else float("nan")),
+            "step_live_tokens": sum(self.step_live_tokens),
+            "step_processed_tokens": sum(self.step_processed_tokens),
+            "step_live_tokens_by_tier": list(self.step_live_tokens),
+            "step_processed_tokens_by_tier":
+                list(self.step_processed_tokens),
+            # the padding tax of the token-batch executors: fraction of
+            # processed token slots that held no live token (the ragged
+            # flat layout's whole point is driving this toward 0)
+            "wasted_slot_ratio": (
+                1.0 - sum(self.step_live_tokens)
+                / sum(self.step_processed_tokens)
+                if sum(self.step_processed_tokens) else float("nan")),
+            "wasted_slot_ratio_by_tier": [
+                1.0 - l / p if p else float("nan")
+                for l, p in zip(self.step_live_tokens,
+                                self.step_processed_tokens)],
             "launches": list(self.launches_by_tier),
             "launches_per_tick": [
                 n / self.steps if self.steps else float("nan")

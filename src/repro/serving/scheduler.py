@@ -74,6 +74,11 @@ class CascadeScheduler:
         # queue[0] = arrivals; queue[m>0] = escalations from gate m-1
         self.queues: List[Deque[Request]] = [deque()
                                              for _ in range(num_tiers)]
+        # exact admission-token accounting: tokens admit() charged
+        # against its budget windows, per tier (the one-currency ledger:
+        # under unified execution each admission bills its first chunk,
+        # so this is the admitted prefill work in budget currency)
+        self.admitted_tokens = [0] * num_tiers
 
     # -- submission --------------------------------------------------------
 
@@ -188,6 +193,7 @@ class CascadeScheduler:
             reqs.append(req)
             slots.append(slot)
             used += need
+        self.admitted_tokens[tier] += used - budget_used
         return reqs, slots
 
     def release(self, tier: int, slot: int) -> None:

@@ -276,11 +276,14 @@ def test_mixed_length_submit_validation(tiny_parts):
 
 def test_prefill_token_accounting(tiny_parts):
     """The padding-tax metric: live prompt tokens vs token slots the
-    fixed-shape prefill batches processed.  Unified admission charges
-    first chunks only (3 + 4 = 7 fits the 8-token budget, so both
-    requests enter at tick 0: three chunked ticks of capacity*chunk = 8
-    token slots); the legacy split window charges full prompts (3 + 9
-    exceeds it, delaying the 9-token request to tick 1: four ticks)."""
+    prefill batches processed.  The ragged flat layout (the default)
+    packs only live tokens, so its ratio is exactly 1.  The padded
+    mixed program pays capacity*chunk slots per chunked tick; unified
+    admission charges first chunks only (3 + 4 = 7 fits the 8-token
+    budget, so both requests enter at tick 0: three chunked ticks of
+    capacity*chunk = 8 token slots).  The legacy split window charges
+    full prompts (3 + 9 exceeds it, delaying the 9-token request to
+    tick 1: four ticks of capacity*chunk = 8)."""
     cfg, fast_p, exp_p = tiny_parts
     rng = np.random.default_rng(2)
     prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
@@ -295,9 +298,13 @@ def test_prefill_token_accounting(tiny_parts):
 
     s = run()
     assert s["prefill_live_tokens"] == 12
+    assert s["prefill_processed_tokens"] == 12
+    assert s["prefill_live_token_ratio"] == pytest.approx(1.0)
+    assert s["prompt_len_max"] == 9
+    s = run(use_ragged_step=False)
+    assert s["prefill_live_tokens"] == 12
     assert s["prefill_processed_tokens"] == 24
     assert s["prefill_live_token_ratio"] == pytest.approx(12 / 24)
-    assert s["prompt_len_max"] == 9
     s = run(use_unified_step=False)
     assert s["prefill_live_tokens"] == 12
     assert s["prefill_processed_tokens"] == 32
