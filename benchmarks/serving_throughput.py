@@ -32,12 +32,23 @@ hard error in both arms).  A prefix-cache A/B (``prefix_ab``) serves a
 shared-prefix workload (``--shared-prefix-frac 0.8``, fixed δ,
 virtual clock) with refcounted KV prefix sharing on vs off: live
 prefill tokens should drop ≥2x at bit-identical stream checksums
-(mismatch is a hard error).
+(mismatch is a hard error).  A speculative-decoding A/B (``spec_ab``)
+serves a self-speculation workload (same model + param seed on both
+tiers, δ=1.0 so everything escalates; decode-heavy single-wave
+traffic — the regime speculation targets, see the section comment)
+with ``--speculate`` at k∈{0,2,4} vs the escalation-only oracle: k≥2
+must beat the oracle's output tokens/s with the accept rate recorded,
+and ALL arms — including k=0 — must produce bit-identical stream
+checksums (hard error otherwise; greedy speculative acceptance emits
+scoring-model argmaxes only, so this holds at any k).
 
     PYTHONPATH=src python -m benchmarks.serving_throughput
 
 Scale knobs: REPRO_SERVE_BENCH_{REQUESTS,SLOTS,GEN_LEN,PROMPT_LEN,
-CHUNK,DISTS,TIER_MESH} (smoke defaults).  The BENCH json records the
+CHUNK,DISTS,TIER_MESH}, plus REPRO_SERVE_BENCH_SECTIONS (comma list
+choosing which sections run — CI smokes pick one) and the spec_ab
+overrides REPRO_SERVE_BENCH_SPEC_{MODEL,REQUESTS,GEN_LEN}.  The BENCH json
+records the
 host's device count, each tier's mesh topology, and per-data-shard KV
 block high-water marks.
 """
@@ -62,6 +73,12 @@ DISTS = tuple(os.environ.get("REPRO_SERVE_BENCH_DISTS",
 TIER_MESH = os.environ.get("REPRO_SERVE_BENCH_TIER_MESH", "")
 OUT = os.environ.get("REPRO_SERVE_BENCH_OUT",
                      "experiments/bench/serving_throughput.json")
+# comma-separated subset of sections to run (CI smokes pick one section
+# instead of the full sweep); default: everything
+SECTIONS = frozenset(os.environ.get(
+    "REPRO_SERVE_BENCH_SECTIONS",
+    "points,step_ab,trace_overhead,preempt_ab,prefix_ab,spec_ab"
+).split(","))
 
 
 def check_open_loop(s: dict) -> None:
@@ -121,59 +138,60 @@ def main() -> None:
         return argv
 
     points = []
-    for dist in DISTS:
-        for rate in RATES:
-            args = serve_async.make_parser().parse_args(
-                base_argv(dist, rate))
-            t0 = time.time()
-            s = serve_async.run(args)
-            check_open_loop(s)
-            points.append({
-                "rate": rate,
-                "length_dist": dist,
-                "max_prompt_len": PROMPT_LEN,
-                "prompt_len_mean": s["prompt_len_mean"],
-                "prefill_chunk": s["prefill_chunk"],
-                "offered_rate": s["offered_rate"],
-                "requests": s["requests"],
-                "throughput": s["throughput"],
-                "latency_p50": s["latency_p50"],
-                "latency_p95": s["latency_p95"],
-                "ttft_p50": s["ttft_p50"],
-                "ttft_p50_by_prompt_bucket":
-                    s["ttft_p50_by_prompt_bucket"],
-                "prefill_live_tokens": s["prefill_live_tokens"],
-                "prefill_processed_tokens": s["prefill_processed_tokens"],
-                "prefill_live_token_ratio": s["prefill_live_token_ratio"],
-                "escalation_rate": s["escalation_rates"][0],
-                "escalation_budget": s["escalation_budget"],
-                "tier_utilization": s["tier_utilization"],
-                "flops_per_request_cascade": s["flops_per_request_cascade"],
-                "flops_per_request_always_expensive":
-                    s["flops_per_request_always_expensive"],
-                # mesh topology + per-shard KV high-water (kv_arena
-                # carries kv_high_water_blocks_by_shard per tier)
-                "tier_meshes": s["tier_meshes"],
-                "step_exec": launch_stats(s),
-                "kv_arena": s["kv_arena"],
-                "kv_high_water_bytes_total":
-                    sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
-                "kv_dense_equiv_bytes_total":
-                    sum(t["dense_equiv_bytes"] for t in s["kv_arena"]),
-                # streaming gate calibration (conf/esc histograms,
-                # reliability bins, ECE against the escalation-outcome
-                # agreement proxy — see docs/serving.md)
-                "gate_calibration": s["gate_calibration"],
-                "wall_s": time.time() - t0,
-            })
-            print(f"dist={dist} rate={rate}: "
-                  f"throughput {s['throughput']:.2f} req/s "
-                  f"(offered {s['offered_rate']:.2f}), "
-                  f"p50 {s['latency_p50']:.3f}s, "
-                  f"ttft p50 {s['ttft_p50']:.3f}s, "
-                  f"live-token ratio {s['prefill_live_token_ratio']:.3f}, "
-                  f"esc {s['escalation_rates'][0]:.3f} "
-                  f"(budget {s['escalation_budget']})", flush=True)
+    if "points" in SECTIONS:
+        for dist in DISTS:
+            for rate in RATES:
+                args = serve_async.make_parser().parse_args(
+                    base_argv(dist, rate))
+                t0 = time.time()
+                s = serve_async.run(args)
+                check_open_loop(s)
+                points.append({
+                    "rate": rate,
+                    "length_dist": dist,
+                    "max_prompt_len": PROMPT_LEN,
+                    "prompt_len_mean": s["prompt_len_mean"],
+                    "prefill_chunk": s["prefill_chunk"],
+                    "offered_rate": s["offered_rate"],
+                    "requests": s["requests"],
+                    "throughput": s["throughput"],
+                    "latency_p50": s["latency_p50"],
+                    "latency_p95": s["latency_p95"],
+                    "ttft_p50": s["ttft_p50"],
+                    "ttft_p50_by_prompt_bucket":
+                        s["ttft_p50_by_prompt_bucket"],
+                    "prefill_live_tokens": s["prefill_live_tokens"],
+                    "prefill_processed_tokens": s["prefill_processed_tokens"],
+                    "prefill_live_token_ratio": s["prefill_live_token_ratio"],
+                    "escalation_rate": s["escalation_rates"][0],
+                    "escalation_budget": s["escalation_budget"],
+                    "tier_utilization": s["tier_utilization"],
+                    "flops_per_request_cascade": s["flops_per_request_cascade"],
+                    "flops_per_request_always_expensive":
+                        s["flops_per_request_always_expensive"],
+                    # mesh topology + per-shard KV high-water (kv_arena
+                    # carries kv_high_water_blocks_by_shard per tier)
+                    "tier_meshes": s["tier_meshes"],
+                    "step_exec": launch_stats(s),
+                    "kv_arena": s["kv_arena"],
+                    "kv_high_water_bytes_total":
+                        sum(t["kv_high_water_bytes"] for t in s["kv_arena"]),
+                    "kv_dense_equiv_bytes_total":
+                        sum(t["dense_equiv_bytes"] for t in s["kv_arena"]),
+                    # streaming gate calibration (conf/esc histograms,
+                    # reliability bins, ECE against the escalation-outcome
+                    # agreement proxy — see docs/serving.md)
+                    "gate_calibration": s["gate_calibration"],
+                    "wall_s": time.time() - t0,
+                })
+                print(f"dist={dist} rate={rate}: "
+                      f"throughput {s['throughput']:.2f} req/s "
+                      f"(offered {s['offered_rate']:.2f}), "
+                      f"p50 {s['latency_p50']:.3f}s, "
+                      f"ttft p50 {s['ttft_p50']:.3f}s, "
+                      f"live-token ratio {s['prefill_live_token_ratio']:.3f}, "
+                      f"esc {s['escalation_rates'][0]:.3f} "
+                      f"(budget {s['escalation_budget']})", flush=True)
 
     # flat-vs-padded-vs-split three-way A/B over offered rates (mixed
     # lengths, fixed δ so the gate is identical across arms): the same
@@ -185,60 +203,62 @@ def main() -> None:
     # token streams); flat must win throughput against both arms and
     # carry strictly less slot padding than the padded program.
     ab_dist = "lognormal" if "lognormal" in DISTS else DISTS[0]
-    ab_rates = (RATES[0], (RATES[0] + RATES[1]) / 2.0, RATES[1])
-    ab_arms = (("flat", []), ("padded", ["--no-ragged-step"]),
-               ("split", ["--split-step"]))
-    step_ab = {"length_dist": ab_dist, "delta": 0.5,
-               "rates": list(ab_rates), "points": []}
-    for rate in ab_rates:
-        pt = {"rate": rate}
-        for mode, extra in ab_arms:
-            args = serve_async.make_parser().parse_args(
-                base_argv(ab_dist, rate) + ["--delta", "0.5"] + extra)
-            t0 = time.time()
-            s = serve_async.run(args)
-            check_open_loop(s)
-            pt[mode] = dict(
-                launch_stats(s),
-                ragged_step=s["ragged_step"],
-                throughput=s["throughput"],
-                latency_p50=s["latency_p50"],
-                ttft_p50=s["ttft_p50"],
-                step_live_tokens=s["step_live_tokens"],
-                step_processed_tokens=s["step_processed_tokens"],
-                wasted_slot_ratio=s["wasted_slot_ratio"],
-                mid_run_recompiles=s["mid_run_recompiles"],
-                stream_checksum=s["stream_checksum"],
-                wall_s=time.time() - t0)
-            print(f"step A/B [{mode}] rate={rate}: throughput "
-                  f"{pt[mode]['throughput']:.2f} req/s, "
-                  f"wasted-slot {pt[mode]['wasted_slot_ratio']:.3f}, "
-                  f"launches/tick "
-                  f"{[round(x, 3) for x in pt[mode]['launches_per_tick']]}",
-                  flush=True)
-        if len({pt[m]["stream_checksum"] for m, _ in ab_arms}) != 1:
-            raise RuntimeError(
-                f"execution backends disagree on token streams at "
-                f"rate {rate}: "
-                + ", ".join(f"{m}={pt[m]['stream_checksum']}"
-                            for m, _ in ab_arms))
-        pt["checksums_equal"] = True
-        if pt["flat"]["wasted_slot_ratio"] \
-                >= pt["padded"]["wasted_slot_ratio"]:
-            raise RuntimeError(
-                f"flat wasted-slot ratio {pt['flat']['wasted_slot_ratio']}"
-                f" not below padded "
-                f"{pt['padded']['wasted_slot_ratio']} at rate {rate}")
-        pt["flat_wins_throughput"] = (
-            pt["flat"]["throughput"] > pt["padded"]["throughput"]
-            and pt["flat"]["throughput"] > pt["split"]["throughput"])
-        step_ab["points"].append(pt)
-    step_ab["flat_wins_all_rates"] = all(
-        p["flat_wins_throughput"] for p in step_ab["points"])
-    print(f"step A/B: flat wins throughput at "
-          f"{sum(p['flat_wins_throughput'] for p in step_ab['points'])}"
-          f"/{len(step_ab['points'])} rates, streams bit-identical",
-          flush=True)
+    step_ab = None
+    if "step_ab" in SECTIONS:
+        ab_rates = (RATES[0], (RATES[0] + RATES[1]) / 2.0, RATES[1])
+        ab_arms = (("flat", []), ("padded", ["--no-ragged-step"]),
+                   ("split", ["--split-step"]))
+        step_ab = {"length_dist": ab_dist, "delta": 0.5,
+                   "rates": list(ab_rates), "points": []}
+        for rate in ab_rates:
+            pt = {"rate": rate}
+            for mode, extra in ab_arms:
+                args = serve_async.make_parser().parse_args(
+                    base_argv(ab_dist, rate) + ["--delta", "0.5"] + extra)
+                t0 = time.time()
+                s = serve_async.run(args)
+                check_open_loop(s)
+                pt[mode] = dict(
+                    launch_stats(s),
+                    ragged_step=s["ragged_step"],
+                    throughput=s["throughput"],
+                    latency_p50=s["latency_p50"],
+                    ttft_p50=s["ttft_p50"],
+                    step_live_tokens=s["step_live_tokens"],
+                    step_processed_tokens=s["step_processed_tokens"],
+                    wasted_slot_ratio=s["wasted_slot_ratio"],
+                    mid_run_recompiles=s["mid_run_recompiles"],
+                    stream_checksum=s["stream_checksum"],
+                    wall_s=time.time() - t0)
+                print(f"step A/B [{mode}] rate={rate}: throughput "
+                      f"{pt[mode]['throughput']:.2f} req/s, "
+                      f"wasted-slot {pt[mode]['wasted_slot_ratio']:.3f}, "
+                      f"launches/tick "
+                      f"{[round(x, 3) for x in pt[mode]['launches_per_tick']]}",
+                      flush=True)
+            if len({pt[m]["stream_checksum"] for m, _ in ab_arms}) != 1:
+                raise RuntimeError(
+                    f"execution backends disagree on token streams at "
+                    f"rate {rate}: "
+                    + ", ".join(f"{m}={pt[m]['stream_checksum']}"
+                                for m, _ in ab_arms))
+            pt["checksums_equal"] = True
+            if pt["flat"]["wasted_slot_ratio"] \
+                    >= pt["padded"]["wasted_slot_ratio"]:
+                raise RuntimeError(
+                    f"flat wasted-slot ratio {pt['flat']['wasted_slot_ratio']}"
+                    f" not below padded "
+                    f"{pt['padded']['wasted_slot_ratio']} at rate {rate}")
+            pt["flat_wins_throughput"] = (
+                pt["flat"]["throughput"] > pt["padded"]["throughput"]
+                and pt["flat"]["throughput"] > pt["split"]["throughput"])
+            step_ab["points"].append(pt)
+        step_ab["flat_wins_all_rates"] = all(
+            p["flat_wins_throughput"] for p in step_ab["points"])
+        print(f"step A/B: flat wins throughput at "
+              f"{sum(p['flat_wins_throughput'] for p in step_ab['points'])}"
+              f"/{len(step_ab['points'])} rates, streams bit-identical",
+              flush=True)
 
     # traced-vs-untraced A/B at the same representative point: tracing
     # must be observational.  Both arms run under a VirtualClock so the
@@ -246,37 +266,39 @@ def main() -> None:
     # host sync counts are then exact requirements (enforced here and
     # test-asserted in tests/test_observability.py), and the tracer's
     # host cost shows up purely as wall-time overhead.
-    from repro.serving.engine import VirtualClock
+    trace_overhead = None
+    if "trace_overhead" in SECTIONS:
+        from repro.serving.engine import VirtualClock
 
-    trace_overhead = {"length_dist": ab_dist, "rate": RATES[0]}
-    trace_path = os.path.join(tempfile.gettempdir(),
-                              "serving_throughput_trace.json")
-    for arm, extra in (("untraced", []),
-                       ("traced", ["--trace-out", trace_path])):
-        args = serve_async.make_parser().parse_args(
-            base_argv(ab_dist, RATES[0]) + extra)
-        t0 = time.time()
-        s = serve_async.run(args, VirtualClock())
-        rec = dict(launch_stats(s), throughput=s["throughput"],
-                   latency_p50=s["latency_p50"],
-                   wall_s=time.time() - t0)
-        if arm == "traced":
-            rec["trace_events"] = s["trace_events"]
-            rec["trace_dropped"] = s["trace_dropped"]
-        trace_overhead[arm] = rec
-    for key in ("steps", "launches", "host_syncs", "host_syncs_per_tick"):
-        if trace_overhead["traced"][key] != trace_overhead["untraced"][key]:
-            raise RuntimeError(
-                f"tracing changed {key}: "
-                f"{trace_overhead['traced'][key]} traced vs "
-                f"{trace_overhead['untraced'][key]} untraced")
-    w_un = trace_overhead["untraced"]["wall_s"]
-    w_tr = trace_overhead["traced"]["wall_s"]
-    trace_overhead["wall_overhead_pct"] = 100.0 * (w_tr - w_un) / w_un
-    print(f"trace A/B: untraced {w_un:.2f}s, traced {w_tr:.2f}s wall "
-          f"({trace_overhead['wall_overhead_pct']:+.2f}% overhead, "
-          f"{trace_overhead['traced']['trace_events']} events, "
-          f"host syncs/launches/steps identical)", flush=True)
+        trace_overhead = {"length_dist": ab_dist, "rate": RATES[0]}
+        trace_path = os.path.join(tempfile.gettempdir(),
+                                  "serving_throughput_trace.json")
+        for arm, extra in (("untraced", []),
+                           ("traced", ["--trace-out", trace_path])):
+            args = serve_async.make_parser().parse_args(
+                base_argv(ab_dist, RATES[0]) + extra)
+            t0 = time.time()
+            s = serve_async.run(args, VirtualClock())
+            rec = dict(launch_stats(s), throughput=s["throughput"],
+                       latency_p50=s["latency_p50"],
+                       wall_s=time.time() - t0)
+            if arm == "traced":
+                rec["trace_events"] = s["trace_events"]
+                rec["trace_dropped"] = s["trace_dropped"]
+            trace_overhead[arm] = rec
+        for key in ("steps", "launches", "host_syncs", "host_syncs_per_tick"):
+            if trace_overhead["traced"][key] != trace_overhead["untraced"][key]:
+                raise RuntimeError(
+                    f"tracing changed {key}: "
+                    f"{trace_overhead['traced'][key]} traced vs "
+                    f"{trace_overhead['untraced'][key]} untraced")
+        w_un = trace_overhead["untraced"]["wall_s"]
+        w_tr = trace_overhead["traced"]["wall_s"]
+        trace_overhead["wall_overhead_pct"] = 100.0 * (w_tr - w_un) / w_un
+        print(f"trace A/B: untraced {w_un:.2f}s, traced {w_tr:.2f}s wall "
+              f"({trace_overhead['wall_overhead_pct']:+.2f}% overhead, "
+              f"{trace_overhead['traced']['trace_events']} events, "
+              f"host syncs/launches/steps identical)", flush=True)
 
     # stall-vs-preempt A/B on an over-subscribed KV arena: same
     # deterministic workload (VirtualClock, fixed seed), arena sized so
@@ -285,42 +307,44 @@ def main() -> None:
     # blocks for the rows ahead of it — the tail TTFT (a stalled
     # admission queue) is where the policy should pay off, at equal
     # completed work (token streams are bit-identical either way).
-    over_blocks = max(
-        2 * ((PROMPT_LEN + GEN_LEN + 15) // 16) + SLOTS // 2, 8)
-    preempt_ab = {"length_dist": ab_dist, "rate": RATES[1],
-                  "kv_blocks": over_blocks}
-    for arm in ("none", "youngest"):
-        args = serve_async.make_parser().parse_args(
-            base_argv(ab_dist, RATES[1])
-            + ["--kv-blocks", str(over_blocks), "--preemption", arm])
-        t0 = time.time()
-        s = serve_async.run(args, VirtualClock())
-        preempt_ab[arm] = {
-            "completed": s["completed"],
-            "throughput": s["throughput"],
-            "ttft_p50": s["ttft_p50"],
-            "ttft_p95": s["ttft_p95"],
-            "latency_p95": s["latency_p95"],
-            "preemptions": s["preemptions"],
-            "replayed_tokens": s["replayed_tokens"],
-            "conservation_ok": s["conservation"]["ok"],
-            "wall_s": time.time() - t0,
-        }
-        if not s["conservation"]["ok"]:
-            raise RuntimeError(
-                f"preempt A/B [{arm}]: conservation violated "
-                f"{s['conservation']}")
-        print(f"preempt A/B [{arm}]: ttft p95 {s['ttft_p95']:.2f}, "
-              f"latency p95 {s['latency_p95']:.2f}, "
-              f"throughput {s['throughput']:.2f} req/tick, "
-              f"preempted {s['preemptions']} "
-              f"(replayed {s['replayed_tokens']} tok)", flush=True)
-    preempt_ab["ttft_p95_improvement_pct"] = 100.0 * (
-        preempt_ab["none"]["ttft_p95"] - preempt_ab["youngest"]["ttft_p95"]
-    ) / preempt_ab["none"]["ttft_p95"]
-    print(f"preempt A/B: p95 TTFT "
-          f"{preempt_ab['ttft_p95_improvement_pct']:+.1f}% vs stalls",
-          flush=True)
+    preempt_ab = None
+    if "preempt_ab" in SECTIONS:
+        over_blocks = max(
+            2 * ((PROMPT_LEN + GEN_LEN + 15) // 16) + SLOTS // 2, 8)
+        preempt_ab = {"length_dist": ab_dist, "rate": RATES[1],
+                      "kv_blocks": over_blocks}
+        for arm in ("none", "youngest"):
+            args = serve_async.make_parser().parse_args(
+                base_argv(ab_dist, RATES[1])
+                + ["--kv-blocks", str(over_blocks), "--preemption", arm])
+            t0 = time.time()
+            s = serve_async.run(args, VirtualClock())
+            preempt_ab[arm] = {
+                "completed": s["completed"],
+                "throughput": s["throughput"],
+                "ttft_p50": s["ttft_p50"],
+                "ttft_p95": s["ttft_p95"],
+                "latency_p95": s["latency_p95"],
+                "preemptions": s["preemptions"],
+                "replayed_tokens": s["replayed_tokens"],
+                "conservation_ok": s["conservation"]["ok"],
+                "wall_s": time.time() - t0,
+            }
+            if not s["conservation"]["ok"]:
+                raise RuntimeError(
+                    f"preempt A/B [{arm}]: conservation violated "
+                    f"{s['conservation']}")
+            print(f"preempt A/B [{arm}]: ttft p95 {s['ttft_p95']:.2f}, "
+                  f"latency p95 {s['latency_p95']:.2f}, "
+                  f"throughput {s['throughput']:.2f} req/tick, "
+                  f"preempted {s['preemptions']} "
+                  f"(replayed {s['replayed_tokens']} tok)", flush=True)
+        preempt_ab["ttft_p95_improvement_pct"] = 100.0 * (
+            preempt_ab["none"]["ttft_p95"] - preempt_ab["youngest"]["ttft_p95"]
+        ) / preempt_ab["none"]["ttft_p95"]
+        print(f"preempt A/B: p95 TTFT "
+              f"{preempt_ab['ttft_p95_improvement_pct']:+.1f}% vs stalls",
+              flush=True)
 
     # prefix-cache A/B: the same shared-prefix workload (every prompt's
     # first 80% of tokens come from one base sequence — system-prompt
@@ -330,46 +354,143 @@ def main() -> None:
     # checksums are a hard error otherwise.  The headline is live
     # prefill tokens actually computed — cached tokens are admitted
     # straight past prefill — which should drop ≥2x at frac 0.8.
-    prefix_ab = {"length_dist": "uniform", "rate": RATES[0],
-                 "shared_prefix_frac": 0.8, "delta": 0.5}
-    for arm, extra in (("off", []), ("on", ["--prefix-cache"])):
-        args = serve_async.make_parser().parse_args(
-            base_argv("uniform", RATES[0])
-            + ["--shared-prefix-frac", "0.8", "--delta", "0.5"] + extra)
-        t0 = time.time()
-        s = serve_async.run(args, VirtualClock())
-        pc = s.get("prefix_cache") or {}
-        shared_hw = sum(t.get("kv_shared_high_water_blocks", 0)
-                        for t in s["kv_arena"])
-        prefix_ab[arm] = {
-            "completed": s["completed"],
-            "throughput": s["throughput"],
-            "ttft_p50": s["ttft_p50"],
-            "prefill_live_tokens": s["prefill_live_tokens"],
-            "prefill_processed_tokens": s["prefill_processed_tokens"],
-            "stream_checksum": s["stream_checksum"],
-            "prefix_hit_rate": pc.get("hit_rate"),
-            "prefix_cached_tokens": pc.get("cached_tokens"),
-            "prefix_cached_token_frac": pc.get("cached_token_frac"),
-            "kv_shared_high_water_blocks": shared_hw,
-            "wall_s": time.time() - t0,
-        }
-        print(f"prefix A/B [{arm}]: live prefill tokens "
-              f"{s['prefill_live_tokens']}, ttft p50 {s['ttft_p50']:.2f}"
-              + (f", hit rate {pc['hit_rate']:.2f} "
-                 f"(cached {pc['cached_tokens']} tok)"
-                 if arm == "on" and pc else ""), flush=True)
-    if prefix_ab["on"]["stream_checksum"] \
-            != prefix_ab["off"]["stream_checksum"]:
-        raise RuntimeError(
-            "prefix cache changed token streams: checksum "
-            f"{prefix_ab['on']['stream_checksum']} on vs "
-            f"{prefix_ab['off']['stream_checksum']} off")
-    prefix_ab["prefill_token_reduction"] = (
-        prefix_ab["off"]["prefill_live_tokens"]
-        / max(prefix_ab["on"]["prefill_live_tokens"], 1))
-    print(f"prefix A/B: {prefix_ab['prefill_token_reduction']:.2f}x fewer "
-          "live prefill tokens, streams bit-identical", flush=True)
+    prefix_ab = None
+    if "prefix_ab" in SECTIONS:
+        prefix_ab = {"length_dist": "uniform", "rate": RATES[0],
+                     "shared_prefix_frac": 0.8, "delta": 0.5}
+        for arm, extra in (("off", []), ("on", ["--prefix-cache"])):
+            args = serve_async.make_parser().parse_args(
+                base_argv("uniform", RATES[0])
+                + ["--shared-prefix-frac", "0.8", "--delta", "0.5"] + extra)
+            t0 = time.time()
+            s = serve_async.run(args, VirtualClock())
+            pc = s.get("prefix_cache") or {}
+            shared_hw = sum(t.get("kv_shared_high_water_blocks", 0)
+                            for t in s["kv_arena"])
+            prefix_ab[arm] = {
+                "completed": s["completed"],
+                "throughput": s["throughput"],
+                "ttft_p50": s["ttft_p50"],
+                "prefill_live_tokens": s["prefill_live_tokens"],
+                "prefill_processed_tokens": s["prefill_processed_tokens"],
+                "stream_checksum": s["stream_checksum"],
+                "prefix_hit_rate": pc.get("hit_rate"),
+                "prefix_cached_tokens": pc.get("cached_tokens"),
+                "prefix_cached_token_frac": pc.get("cached_token_frac"),
+                "kv_shared_high_water_blocks": shared_hw,
+                "wall_s": time.time() - t0,
+            }
+            print(f"prefix A/B [{arm}]: live prefill tokens "
+                  f"{s['prefill_live_tokens']}, ttft p50 {s['ttft_p50']:.2f}"
+                  + (f", hit rate {pc['hit_rate']:.2f} "
+                     f"(cached {pc['cached_tokens']} tok)"
+                     if arm == "on" and pc else ""), flush=True)
+        if prefix_ab["on"]["stream_checksum"] \
+                != prefix_ab["off"]["stream_checksum"]:
+            raise RuntimeError(
+                "prefix cache changed token streams: checksum "
+                f"{prefix_ab['on']['stream_checksum']} on vs "
+                f"{prefix_ab['off']['stream_checksum']} off")
+        prefix_ab["prefill_token_reduction"] = (
+            prefix_ab["off"]["prefill_live_tokens"]
+            / max(prefix_ab["on"]["prefill_live_tokens"], 1))
+        print(f"prefix A/B: {prefix_ab['prefill_token_reduction']:.2f}x fewer "
+              "live prefill tokens, streams bit-identical", flush=True)
+
+    # speculative cascade decoding A/B (spec_ab): tokens/s vs the
+    # escalation-only oracle at a recorded accept rate.  Self-speculation
+    # configuration — the SAME model config and param seed on both tiers
+    # (--expensive-seed = --seed) under δ=1.0, so every request escalates
+    # and re-decodes on the "expensive" tier with the cheap tier's
+    # retained row drafting ahead; the tiers agree everywhere, isolating
+    # the engine-level effect (multi-token verify ticks) at accept rate
+    # ~1.  --spec-delta 0.0 keeps every draft (δ=1.0 would truncate all
+    # of them).  The workload is the regime speculation targets —
+    # decode-heavy (gen_len 2×GEN_LEN) and a single wave (requests =
+    # slots): a draft row occupies a fast-tier slot for its target's
+    # whole lifetime, so under heavily queued admission speculation
+    # trades away the fast tier's prefill/decode overlap and can LOSE
+    # end-to-end (measured: 0.88× at k=2 with 48 requests through 8
+    # slots) — that regime is `points`'s job to show, not this arm's
+    # (knobs: REPRO_SERVE_BENCH_SPEC_REQUESTS/_SPEC_GEN_LEN).  Four
+    # arms under one deterministic VirtualClock workload: no
+    # --speculate (baseline oracle), k=0 (speculation machinery on,
+    # drafting off — required bit-identical), k=2 and k=4 (must beat
+    # the baseline's output tokens/s; any checksum mismatch is a hard
+    # error).
+    spec_ab = None
+    if "spec_ab" in SECTIONS:
+        from repro.serving.engine import VirtualClock as _VClock
+        spec_model = os.environ.get("REPRO_SERVE_BENCH_SPEC_MODEL",
+                                    "gemma3-1b")
+        spec_requests = int(os.environ.get(
+            "REPRO_SERVE_BENCH_SPEC_REQUESTS", str(SLOTS)))
+        spec_gen = int(os.environ.get(
+            "REPRO_SERVE_BENCH_SPEC_GEN_LEN", str(2 * GEN_LEN)))
+        spec_ab = {"length_dist": ab_dist, "rate": RATES[0], "delta": 1.0,
+                   "spec_delta": 0.0, "model": spec_model,
+                   "requests": spec_requests, "gen_len": spec_gen,
+                   "arms": {}}
+        for arm, k in (("baseline", None), ("k0", 0), ("k2", 2),
+                       ("k4", 4)):
+            extra = ["--requests", str(spec_requests),
+                     "--gen-len", str(spec_gen),
+                     "--fast", spec_model, "--expensive", spec_model,
+                     "--expensive-seed", "0", "--delta", "1.0"]
+            if k is not None:
+                extra += ["--speculate", str(k)]
+                if k:
+                    extra += ["--spec-delta", "0.0"]
+            args = serve_async.make_parser().parse_args(
+                base_argv(ab_dist, RATES[0]) + extra)
+            t0 = time.time()
+            s = serve_async.run(args, _VClock())
+            sp = s["speculation"]
+            spec_ab["arms"][arm] = {
+                "speculation_k": s["speculation_k"],
+                "steps": s["steps"],
+                "elapsed_ticks": s["elapsed"],
+                # the ROADMAP success metric: output tokens per unit of
+                # engine time (virtual ticks here), over the makespan
+                "tokens_per_s": (s["completed"] * spec_gen / s["elapsed"]
+                                 if s["elapsed"] > 0 else float("nan")),
+                "throughput": s["throughput"],
+                "completed": s["completed"],
+                "launches": s["launches"],
+                "accept_rate": sp["accept_rate"],
+                "drafted": sp["drafted"],
+                "accepted": sp["accepted"],
+                "rolled_back": sp["rolled_back"],
+                "stream_checksum": s["stream_checksum"],
+                "wall_s": time.time() - t0,
+            }
+            a = spec_ab["arms"][arm]
+            print(f"spec A/B [{arm}]: {a['tokens_per_s']:.2f} tok/tick "
+                  f"({a['steps']} steps, launches {a['launches']}, "
+                  f"accept rate {a['accept_rate']:.2f}, "
+                  f"{a['drafted']} drafted)", flush=True)
+        if len({a["stream_checksum"]
+                for a in spec_ab["arms"].values()}) != 1:
+            raise RuntimeError(
+                "speculative decoding changed token streams: "
+                + ", ".join(f"{m}={a['stream_checksum']}"
+                            for m, a in spec_ab["arms"].items()))
+        spec_ab["checksums_equal"] = True
+        base_tkps = spec_ab["arms"]["baseline"]["tokens_per_s"]
+        for arm in ("k2", "k4"):
+            if spec_ab["arms"][arm]["tokens_per_s"] <= base_tkps:
+                raise RuntimeError(
+                    f"speculative arm {arm} did not beat the "
+                    f"escalation-only oracle: "
+                    f"{spec_ab['arms'][arm]['tokens_per_s']:.3f} vs "
+                    f"{base_tkps:.3f} tok/tick")
+        spec_ab["speedup"] = {
+            arm: spec_ab["arms"][arm]["tokens_per_s"] / base_tkps
+            for arm in ("k0", "k2", "k4")}
+        print("spec A/B: tokens/tick speedup vs escalation-only "
+              + "  ".join(f"{m}={v:.2f}x"
+                          for m, v in spec_ab["speedup"].items())
+              + ", streams bit-identical", flush=True)
 
     bench = {
         "bench": "serving_throughput",
@@ -384,6 +505,7 @@ def main() -> None:
         "trace_overhead": trace_overhead,
         "preempt_ab": preempt_ab,
         "prefix_ab": prefix_ab,
+        "spec_ab": spec_ab,
         "flops_saving_vs_always_expensive": [
             1.0 - p["flops_per_request_cascade"]
             / p["flops_per_request_always_expensive"] for p in points],

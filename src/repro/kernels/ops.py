@@ -8,6 +8,7 @@ repro.models.blocks remain the default substrate.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.confidence_gate import confidence_gate as _gate
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -28,6 +29,51 @@ def _default_interpret() -> bool:
 def confidence_gate(logits, *, interpret=None):
     return _gate(logits, interpret=_default_interpret()
                  if interpret is None else interpret)
+
+
+def spec_accept(argmax_w, conf_w, q_len, flat_tokens, k):
+    """Fused accept/reject epilogue for speculative cascade verify.
+
+    Consumes the per-position picks of a flat verify pass — ``argmax_w``
+    / ``conf_w`` shaped [W], the per-flat-slot argmax token and
+    max-softmax-prob confidence (from :func:`confidence_gate` over the
+    ``[W, V]`` logits of ``transformer.ragged_verify``, or the jnp
+    fallback) — plus the ragged layout (``q_len [R]``, the launch's
+    ``flat_tokens [1, W]``) and the static draft bound ``k``, and
+    decides acceptance device-side so the engine still pays ONE
+    ``device_get`` per tier per tick:
+
+    * ``tok``/``conf`` [R] — each row's last-live-slot pick, the exact
+      contract of the non-speculative ragged step (the gate is
+      per-position, so gating all W slots then gathering equals
+      gathering then gating).
+    * ``spec_tok``/``spec_conf`` [R, k+1] — the row's window of picks
+      starting at its first flat slot: position j is the scoring model's
+      argmax after consuming drafted token j (j=0 consumes the row's
+      last emitted token).
+    * ``acc_len`` [R] — accepted draft count: the longest prefix where
+      slot j's argmax equals the *next* drafted token in the flat batch
+      (``flat_tokens[start + j + 1]``), greedy speculative decoding's
+      acceptance rule.  Rows with ``q_len <= 1`` (no drafts) get 0.
+
+    Emitted tokens are always ``spec_tok[:acc_len + 1]`` — scoring-model
+    argmaxes, never drafts — so streams are bit-identical to the
+    non-speculative oracle at any k.
+    """
+    w = argmax_w.shape[0]
+    csum = jnp.cumsum(q_len)
+    last = jnp.clip(csum - 1, 0, w - 1)
+    start = csum - q_len
+    idx = start[:, None] + jnp.arange(k + 1, dtype=q_len.dtype)[None, :]
+    spec_tok = argmax_w[jnp.clip(idx, 0, w - 1)].astype(jnp.int32)
+    spec_conf = conf_w[jnp.clip(idx, 0, w - 1)]
+    drafted = flat_tokens[0][jnp.clip(idx + 1, 0, w - 1)]
+    valid = jnp.arange(k + 1)[None, :] < (q_len - 1)[:, None]
+    match = (spec_tok == drafted) & valid
+    acc_len = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    return {"tok": argmax_w[last].astype(jnp.int32), "conf": conf_w[last],
+            "spec_tok": spec_tok, "spec_conf": spec_conf,
+            "acc_len": acc_len}
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, interpret=None):

@@ -121,8 +121,11 @@ def build_engine(args, clock=None, tracer=None):
     exp_cfg = get_config(args.expensive, args.variant)
     fast_params = init_params(fast_cfg, jax.random.PRNGKey(args.seed),
                               jnp.float32)
-    exp_params = init_params(exp_cfg, jax.random.PRNGKey(args.seed + 1),
-                             jnp.float32)
+    exp_seed = getattr(args, "expensive_seed", None)
+    exp_params = init_params(
+        exp_cfg,
+        jax.random.PRNGKey(args.seed + 1 if exp_seed is None else exp_seed),
+        jnp.float32)
     gate_kw = ({"deltas": [args.delta]} if args.delta is not None
                else {"escalation_budget": args.escalation_budget})
     meshes = tier_meshes(args, 2)
@@ -145,6 +148,8 @@ def build_engine(args, clock=None, tracer=None):
         use_ragged_step=getattr(args, "ragged_step", None),
         flat_buckets=getattr(args, "flat_buckets", None),
         prefix_cache=bool(getattr(args, "prefix_cache", False)),
+        speculation_k=getattr(args, "speculate", 0) or 0,
+        spec_delta=getattr(args, "spec_delta", None),
         clock=clock if clock is not None else WallClock(),
         tracer=tracer,
         profile_annotations=bool(getattr(args, "jax_profile", None)),
@@ -319,6 +324,8 @@ def run(args, clock=None) -> dict:
     # mapped at peak, the number the paged arena saves vs dense; sharded
     # pools additionally report per-data-shard high-water)
     # overload & failure knobs, for the BENCH json and the report line
+    summary["speculation_k"] = engine.speculation_k
+    summary["spec_delta"] = engine.spec_delta
     summary["preemption_policy"] = engine.preemption_policy
     summary["deadline"] = ddl
     if engine.faults is not None:
@@ -407,6 +414,12 @@ def report(s: dict) -> None:
               f"cached tokens {pc['cached_tokens']} "
               f"({pc['cached_token_frac']:.2f} of prompt tokens)  "
               f"shared-block hw {shared_hw}")
+    sp = s.get("speculation") or {}
+    if s.get("speculation_k") and sp.get("drafted"):
+        print(f"  speculation k={s['speculation_k']}  "
+              f"accept rate {sp['accept_rate']:.2f} "
+              f"({sp['accepted']}/{sp['drafted']} drafts, "
+              f"{sp['rolled_back']} rolled back)")
     rates = ", ".join(f"{r:.3f}" for r in s["escalation_rates"])
     deltas = ", ".join(f"{d:.4f}" for d in s["delta"])
     target = ("" if s.get("escalation_budget") is None
@@ -479,6 +492,22 @@ def make_parser() -> argparse.ArgumentParser:
                          "widths > 16 must be multiples of the kernel's "
                          "16-token query tile, and the largest must cover "
                          "slots*prefill-chunk)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative cascade decoding: the cheap tier "
+                         "drafts up to K tokens per escalated request per "
+                         "tick and the expensive tier scores all drafted "
+                         "positions in its one ragged launch, emitting "
+                         "every accepted token (plus the bonus token) in "
+                         "a single tick.  Streams stay bit-identical to "
+                         "K=0 (greedy acceptance emits scoring-model "
+                         "argmaxes only).  Needs the ragged step; K=0 "
+                         "disables (the escalation-only oracle)")
+    ap.add_argument("--spec-delta", type=float, default=None,
+                    metavar="CONF",
+                    help="confidence floor for *keeping* drafted tokens "
+                         "(draft truncates at its first token below it); "
+                         "default: the draft tier's calibrated gate "
+                         "threshold δ")
     ap.add_argument("--delta", type=float, default=None,
                     help="fixed gate threshold (overrides the budget)")
     ap.add_argument("--escalation-budget", type=float, default=0.25,
@@ -541,6 +570,13 @@ def make_parser() -> argparse.ArgumentParser:
                          "launch=0.05' (see repro/serving/faults.py for "
                          "the grammar)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--expensive-seed", type=int, default=None,
+                    help="param-init seed for the expensive tier "
+                         "(default --seed + 1).  Setting it to --seed "
+                         "with matching --fast/--expensive configs gives "
+                         "identical tiers — the self-speculation "
+                         "configuration the spec_ab benchmark arm uses "
+                         "to measure --speculate at a known accept rate")
     ap.add_argument("--json", default=None,
                     help="also write the summary dict to this path")
     ap.add_argument("--trace-out", default=None, metavar="PATH",

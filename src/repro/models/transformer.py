@@ -219,6 +219,40 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, pos, pages):
     return logits, new_cache
 
 
+def _token_batch_forward(params, cfg: ModelConfig, tokens, cache, pos,
+                         pages, mode):
+    """Shared core of the unified token-batch steps (`mixed_step`,
+    `ragged_step`, `ragged_verify`): run :func:`forward` in ``mode``
+    over a block-paged cache and return the per-position logits plus
+    the cache-return contract — the caller picks which positions to
+    keep."""
+    logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
+                                   mode=mode, cache=cache, pos=pos,
+                                   pages=pages)
+    return logits, new_cache
+
+
+def last_slot_gather(logits, q_len, *, flat: bool):
+    """Gather each engine row's logits at its last live slot — the one
+    last-position contract both unified backends share.
+
+    ``flat=False``: logits [B,C,V], row b's slots are its own row's
+    ``[0, q_len[b])`` — last live slot is ``q_len - 1`` (clamped to 0).
+    ``flat=True``: logits [1,W,V], row b owns flat slots
+    ``[row_start[b], row_start[b] + q_len[b])`` (row_start = exclusive
+    prefix sum of q_len) — last live slot is ``cumsum(q_len) - 1``,
+    clipped into the flat width.  Rows with ``q_len == 0`` gather
+    unspecified logits in both layouts; callers discard them.
+    """
+    if flat:
+        csum = jnp.cumsum(q_len)
+        last = jnp.clip(csum - 1, 0, logits.shape[1] - 1)
+        return logits[0, last]
+    rows = jnp.arange(logits.shape[0])
+    last = jnp.maximum(q_len - 1, 0)
+    return logits[rows, last]
+
+
 def mixed_step(params, cfg: ModelConfig, tokens, cache, pos, pages):
     """One unified mixed prefill+decode token-batch step.
 
@@ -237,12 +271,9 @@ def mixed_step(params, cfg: ModelConfig, tokens, cache, pos, pages):
     token, or a decode row's next token).  ``q_len == 0`` rows return
     unspecified logits; the engine discards them.
     """
-    logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
-                                   mode="mixed_step", cache=cache,
-                                   pos=pos, pages=pages)
-    rows = jnp.arange(logits.shape[0])
-    last = jnp.maximum(pages["q_len"] - 1, 0)
-    return logits[rows, last], new_cache
+    logits, new_cache = _token_batch_forward(params, cfg, tokens, cache,
+                                             pos, pages, "mixed_step")
+    return last_slot_gather(logits, pages["q_len"], flat=False), new_cache
 
 
 def ragged_step(params, cfg: ModelConfig, tokens, cache, pos, pages):
@@ -262,15 +293,29 @@ def ragged_step(params, cfg: ModelConfig, tokens, cache, pos, pages):
     attention via ``kernels/ragged_attention.py``), then gathers each
     row's logits at its last live flat slot ``row_start + q_len - 1`` —
     returning (last_logits [R, V], new_cache) in engine-row order, the
-    same contract as :func:`mixed_step`.  ``q_len == 0`` rows return
-    unspecified logits; the engine discards them.
+    same contract as :func:`mixed_step` (both via
+    :func:`last_slot_gather`).  ``q_len == 0`` rows return unspecified
+    logits; the engine discards them.
     """
-    logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
-                                   mode="ragged_step", cache=cache,
-                                   pos=pos, pages=pages)
-    csum = jnp.cumsum(pages["q_len"])
-    last = jnp.clip(csum - 1, 0, tokens.shape[1] - 1)
-    return logits[0, last], new_cache
+    logits, new_cache = _token_batch_forward(params, cfg, tokens, cache,
+                                             pos, pages, "ragged_step")
+    return last_slot_gather(logits, pages["q_len"], flat=True), new_cache
+
+
+def ragged_verify(params, cfg: ModelConfig, tokens, cache, pos, pages):
+    """Per-position variant of :func:`ragged_step` for speculative
+    cascade verify: the same flat ``[1, W]`` layout, KV-write semantics,
+    and pages contract, but the full per-position logits come back —
+    ``(logits [1, W, V], new_cache)`` — instead of the last-slot gather,
+    so the verify tier can score *every* drafted position of a verify
+    row (``q_len = 1 + k`` flat slots) in the one batched launch.  The
+    engine's fused accept/reject epilogue
+    (:func:`repro.kernels.ops.spec_accept`) consumes the per-position
+    argmax/confidence device-side.  Padding slots and ``q_len == 0``
+    rows yield unspecified logits; callers discard them.
+    """
+    return _token_batch_forward(params, cfg, tokens, cache, pos, pages,
+                                "ragged_step")
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, pages=None):

@@ -76,7 +76,7 @@ from __future__ import annotations
 import contextlib
 import math
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 import jax
@@ -164,8 +164,9 @@ class VirtualClock:
         self.t += self.dt
 
 
-# per-row kinds in a StepPlan
-KIND_IDLE, KIND_PREFILL, KIND_DECODE, KIND_STALL = 0, 1, 2, 3
+# per-row kinds in a StepPlan (KIND_DRAFT: a retained draft row catching
+# up on its target request's emitted tokens and drafting ahead)
+KIND_IDLE, KIND_PREFILL, KIND_DECODE, KIND_STALL, KIND_DRAFT = 0, 1, 2, 3, 4
 
 
 @dataclass
@@ -213,6 +214,15 @@ class StepPlan:
     flat_tokens: Optional[np.ndarray] = None    # [1, W] int32
     flat_pos: Optional[np.ndarray] = None       # [1, W] int32 abs pos
     q_start: Optional[np.ndarray] = None        # [capacity] int32 row pos0
+    # speculative cascade decoding (speculation_k > 0; empty otherwise):
+    # verify rows are decode rows scoring drafted tokens (q_len = 1 + n),
+    # draft rows are retained lower-tier rows catching up on their target
+    # request's emitted tokens; draft_len[s] > 0 marks rows that draft
+    # ahead after catching up (the device scan masks rows past their
+    # per-row budget to the null block)
+    verify_rows: List[tuple] = field(default_factory=list)  # (slot, n)
+    draft_rows: List[int] = field(default_factory=list)
+    draft_len: Optional[np.ndarray] = None      # [capacity] int32
 
     @property
     def live_prefill_tokens(self) -> int:
@@ -247,7 +257,9 @@ class _TierRuntime:
                  use_unified_step: bool = False,
                  use_ragged_step: bool = False,
                  flat_buckets: Optional[Sequence[int]] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 speculation_k: int = 0,
+                 spec_draft: bool = False):
         self.spec = spec
         self.capacity = capacity
         self.prompt_len = prompt_len          # max prompt length (tokens)
@@ -286,6 +298,15 @@ class _TierRuntime:
         self.tok = np.zeros(capacity, np.int32)
         self.pos = np.zeros(capacity, np.int32)
         self.prefill_pos = np.zeros(capacity, np.int32)   # tokens written
+        # speculative cascade decoding: spec_k > 0 swaps the tier's
+        # ragged launch for spec_fn (ragged forward + fused accept/reject
+        # epilogue + optional draft scan — still ONE program per tick);
+        # draft_req maps retained draft rows to their escalated target
+        # request (slot_req stays None there, so every slot_req-driven
+        # path — planning, victim picking, finish — skips them for free)
+        self.spec_k = int(speculation_k)
+        self.spec_draft = bool(spec_draft) and self.spec_k > 0
+        self.draft_req: List[Optional[Request]] = [None] * capacity
         cfg = spec.cfg
 
         def pick(logits2d):
@@ -347,6 +368,56 @@ class _TierRuntime:
             tok, conf = pick(logits)
             return tok, conf, new_cache
 
+        k = self.spec_k
+        do_draft = self.spec_draft
+
+        def spec_fn(params, tokens, cache, pos, page_table, q_len,
+                    q_start, draft_len):
+            # speculative ragged step: the ragged forward keeps *all*
+            # per-position logits so verify rows (q_len = 1 + n) score
+            # every drafted position, the fused spec_accept epilogue
+            # decides acceptance device-side, and (draft tiers only) a
+            # k-1 step decode scan extends each drafting row's catch-up
+            # pick into k draft tokens — one compiled program, one fetch
+            pages = {"page_table": page_table, "q_len": q_len,
+                     "q_start": q_start}
+            logits, new_cache = transformer.ragged_verify(
+                params, cfg, tokens, cache, pos, pages)
+            am, cf = pick(logits[0])
+            out = kernel_ops.spec_accept(am, cf, q_len, tokens, k)
+            tok, conf = out["tok"], out["conf"]
+            draft_tok = jnp.zeros((q_len.shape[0], k), jnp.int32)
+            draft_conf = jnp.zeros((q_len.shape[0], k), jnp.float32)
+            if do_draft:
+                def body(carry, j):
+                    cache_c, cur_tok, cur_pos = carry
+                    # rows whose per-row draft budget is spent (or that
+                    # aren't drafting) mask to the null block: their
+                    # writes and outputs are discarded
+                    live = draft_len > j
+                    pt = jnp.where(live[:, None], page_table, 0)
+                    dl, cache_c = transformer.decode_step(
+                        params, cfg, cur_tok[:, None], cache_c,
+                        jnp.where(live, cur_pos, 0)[:, None],
+                        pages={"page_table": pt})
+                    t2, c2 = pick(dl[:, 0])
+                    return (cache_c, t2, cur_pos + 1), (t2, c2)
+
+                if k > 1:
+                    # q_start is each row's starting *sequence* position,
+                    # so q_start + q_len is where its first scan step
+                    # writes (one past the catch-up chunk)
+                    (new_cache, _, _), (dt, dc) = jax.lax.scan(
+                        body, (new_cache, tok, q_start + q_len),
+                        jnp.arange(1, k))
+                    draft_tok = jnp.concatenate([tok[None], dt]).T
+                    draft_conf = jnp.concatenate([conf[None], dc]).T
+                else:
+                    draft_tok = tok[:, None]
+                    draft_conf = conf[:, None]
+            return (tok, conf, out["spec_tok"], out["spec_conf"],
+                    out["acc_len"], draft_tok, draft_conf, new_cache)
+
         self.prefill_fn = jax.jit(prefill_fn)
         # Donate the cache so XLA updates the slot arena in place instead
         # of copying it every token (2x peak cache memory otherwise).  CPU
@@ -356,6 +427,8 @@ class _TierRuntime:
         self.chunk_fn = jax.jit(chunk_fn, donate_argnums=donate)
         self.mixed_fn = jax.jit(mixed_fn, donate_argnums=donate)
         self.ragged_fn = jax.jit(ragged_fn, donate_argnums=donate)
+        self.spec_fn = (jax.jit(spec_fn, donate_argnums=donate)
+                        if self.spec_k and self.ragged else None)
 
     # -- ragged flat-width buckets ------------------------------------------
 
@@ -490,6 +563,19 @@ class _TierRuntime:
                 self.put_flat(flat_pos), self.page_table_device(),
                 self.put_rows(qlen), self.put_rows(qstart))
 
+    def run_spec(self, flat_tokens, flat_pos, qlen, qstart, draft_len):
+        """The speculative ragged launch (``speculation_k > 0``): the
+        same flat token-batch contract as :meth:`run_ragged`, plus the
+        per-row draft budget ``draft_len [capacity]`` driving the fused
+        draft scan.  Still ONE compiled program per tier per tick."""
+        self.launched_widths.add(int(np.asarray(flat_tokens).shape[1]))
+        with self._ctx():
+            return self.spec_fn(
+                self.params, self.put_flat(flat_tokens), self.pool.cache,
+                self.put_flat(flat_pos), self.page_table_device(),
+                self.put_rows(qlen), self.put_rows(qstart),
+                self.put_rows(draft_len))
+
     def page_table_device(self, mask_rows: Sequence[int] = ()):
         """Device page tables; ``mask_rows`` (rows mid-prefill during a
         decode step) have their pages unmapped in the copy so the decode
@@ -515,6 +601,10 @@ class _TierRuntime:
     def prefilling(self) -> List[int]:
         return [s for s, r in enumerate(self.slot_req)
                 if r is not None and r.state is RequestState.PREFILL]
+
+    def draft_slots(self) -> List[int]:
+        """Rows retained as draft rows for escalated requests."""
+        return [s for s, r in enumerate(self.draft_req) if r is not None]
 
 
 class _RetryExhausted(RuntimeError):
@@ -560,6 +650,8 @@ class CascadeEngine:
                  use_ragged_step: Optional[bool] = None,
                  flat_buckets: Optional[Sequence[int]] = None,
                  prefix_cache: bool = False,
+                 speculation_k: int = 0,
+                 spec_delta: Optional[float] = None,
                  tracer: Optional[obs.Tracer] = None,
                  profile_annotations: bool = False,
                  clock=None,
@@ -706,6 +798,26 @@ class CascadeEngine:
                 "blocks are matched and published at chunk boundaries, and "
                 "the resumed prefill starts mid-prompt")
         self.prefix_cache = bool(prefix_cache)
+        if speculation_k:
+            if speculation_k < 0:
+                raise ValueError("speculation_k must be >= 0")
+            if m < 2:
+                raise ValueError(
+                    "speculative cascade decoding needs at least two "
+                    "tiers: a cheap tier to draft and an expensive tier "
+                    "to verify")
+            if not self.ragged_step:
+                raise ValueError(
+                    "speculative cascade decoding requires the ragged "
+                    "flat token-batch layout (use_ragged_step=True): the "
+                    "verify pass scores k+1 positions per row through "
+                    "the arbitrary-q_len work list")
+        if spec_delta is not None and not speculation_k:
+            raise ValueError(
+                "spec_delta truncates staged drafts; it requires "
+                "speculation_k > 0")
+        self.speculation_k = int(speculation_k)
+        self.spec_delta = None if spec_delta is None else float(spec_delta)
         if prefill_chunk <= 0:
             raise ValueError("prefill_chunk must be positive")
         slots_per_tier = ([int(slots)] * m if np.isscalar(slots)
@@ -782,9 +894,11 @@ class CascadeEngine:
                          use_unified_step=use_unified_step,
                          use_ragged_step=self.ragged_step,
                          flat_buckets=flat_buckets,
-                         prefix_cache=prefix_cache)
-            for spec, cap, nb in zip(self.tiers, slots_per_tier,
-                                     kv_blocks_per_tier)]
+                         prefix_cache=prefix_cache,
+                         speculation_k=self.speculation_k,
+                         spec_draft=(i < m - 1))
+            for i, (spec, cap, nb) in enumerate(
+                zip(self.tiers, slots_per_tier, kv_blocks_per_tier))]
         self.requests: List[Request] = []
         self._rid = 0
         # per-tier token-budget window state, reset each tick: tokens
@@ -1144,7 +1258,8 @@ class CascadeEngine:
         the unified backend consumes the plan verbatim."""
         pre = rt.prefilling() if rt.chunked else []
         dec = rt.decoding()
-        if not pre and not dec:
+        dr = rt.draft_slots() if rt.spec_draft else []
+        if not pre and not dec and not dr:
             return None
         cap = rt.capacity
         kind = np.zeros(cap, np.int8)
@@ -1169,34 +1284,94 @@ class CascadeEngine:
             chunks.append((s, st, n))
             if st + n == req.prompt_tokens:
                 finishing.append(s)
-        # batch width: the chunk when any prefill row survived its block
-        # check, else the width-1 decode-only program (a tick whose
-        # prefill rows ALL stalled decodes at width 1, not chunk width)
-        width = rt.chunk if prefill_rows else 1
-        tokens = np.zeros((cap, width), np.int32)
-        pos = np.zeros((cap, width), np.int32)
-        for s, st, n in chunks:
-            tokens[s, :n] = rt.slot_req[s].prompt[st:st + n]
-            pos[s] = st + np.arange(width)    # row's q_start is pos[s, 0]
         decode_rows: List[int] = []
+        verify_rows: List[tuple] = []
+        draft_rows: List[int] = []
+        draft_len = np.zeros(cap, np.int32)
+        dentries: List[tuple] = []            # (slot, input tokens, pos0)
         if rt.unified:
             dec_set = set(dec)
             for s in (rt.pool.bound_rows() if rt.paged else dec):
                 if s not in dec_set:
                     continue
+                req = rt.slot_req[s]
                 p = int(rt.pos[s])
-                if rt.paged and not rt.pool.ensure_blocks(s, p):
+                # speculative verify: a decode row with staged drafts
+                # scores its next token AND every drafted position in one
+                # ragged window (q_len = 1 + nd); its KV writes for
+                # rejected positions are provisional — overwritten before
+                # ever attended, so rollback needs no block machinery
+                nd = 0
+                if rt.spec_k and req.draft_tokens:
+                    nd = max(0, min(len(req.draft_tokens), rt.spec_k,
+                                    self.gen_len - len(req.tokens) - 1))
+                if nd > 0 and not rt.pool.ensure_blocks(s, p + nd):
+                    # window denied blocks: drop the drafts (the draft
+                    # row re-drafts later) and fall back to plain decode
+                    req.draft_tokens = []
+                    req.draft_confs = []
+                    nd = 0
+                if nd == 0 and rt.paged and not rt.pool.ensure_blocks(s, p):
                     kind[s] = KIND_STALL      # stall: retry next tick
                     continue
+                toks = [int(rt.tok[s])]
+                if nd > 0:
+                    toks += [int(t) for t in req.draft_tokens[:nd]]
+                    verify_rows.append((s, nd))
                 kind[s] = KIND_DECODE
-                tokens[s, 0] = rt.tok[s]
-                pos[s] = p + np.arange(width)
-                qlen[s] = 1
+                qlen[s] = len(toks)
                 decode_rows.append(s)
+                dentries.append((s, toks, p))
         else:
             decode_rows = list(dec)
             for s in dec:
                 kind[s] = KIND_DECODE
+        if rt.spec_draft:
+            # draft rows: catch up on the target request's emitted tokens
+            # (re-processing them on this cheap tier — the scan's own KV
+            # writes are always treated as garbage, so there is zero
+            # rollback bookkeeping here), then draft up to spec_k tokens
+            # ahead once fully caught up.  Opportunistic: a row denied
+            # blocks skips the tick, it never stalls the tier.
+            for s in dr:
+                req = rt.draft_req[s]
+                if req.state is not RequestState.DECODE or req.draft_tokens:
+                    continue         # target mid-prefill / drafts pending
+                base = req.prompt_tokens
+                e = len(req.tokens)
+                p0 = int(rt.pos[s])
+                c = base + e - p0
+                if c <= 0:
+                    continue         # caught up; wait for emissions
+                n = min(c, rt.chunk)
+                kd = 0
+                if n == c:           # fully caught up after this chunk
+                    kd = max(0, min(rt.spec_k, self.gen_len - e - 1))
+                need = max(p0 + n - 1, base + e + kd - 2)
+                if not rt.pool.ensure_blocks(s, need):
+                    continue
+                kind[s] = KIND_DRAFT
+                qlen[s] = n
+                draft_len[s] = kd
+                draft_rows.append(s)
+                dentries.append(
+                    (s, [int(t) for t in req.tokens[p0 - base:p0 - base + n]],
+                     p0))
+        # batch width: the chunk when any prefill row survived its block
+        # check, else the widest decode/verify/draft row (1 when every
+        # row is a plain decode — a tick whose prefill rows ALL stalled
+        # decodes at width 1, not chunk width)
+        width = rt.chunk if prefill_rows else 1
+        if dentries:
+            width = max(width, max(len(t) for _, t, _ in dentries))
+        tokens = np.zeros((cap, width), np.int32)
+        pos = np.zeros((cap, width), np.int32)
+        for s, st, n in chunks:
+            tokens[s, :n] = rt.slot_req[s].prompt[st:st + n]
+            pos[s] = st + np.arange(width)    # row's q_start is pos[s, 0]
+        for s, toks, p0 in dentries:
+            tokens[s, :len(toks)] = toks
+            pos[s] = p0 + np.arange(width)
         flat_width = flat_tokens = flat_pos = q_start = None
         if rt.ragged:
             # flat packing: live tokens of all rows concatenated in slot
@@ -1217,7 +1392,9 @@ class CascadeEngine:
                         q_len=qlen, shard=shard, prefill_rows=prefill_rows,
                         decode_rows=decode_rows, finishing=finishing,
                         flat_width=flat_width, flat_tokens=flat_tokens,
-                        flat_pos=flat_pos, q_start=q_start)
+                        flat_pos=flat_pos, q_start=q_start,
+                        verify_rows=verify_rows, draft_rows=draft_rows,
+                        draft_len=draft_len)
 
     # -- overload: preemption, load shedding, single-request failure --------
 
@@ -1256,7 +1433,8 @@ class CascadeEngine:
         req = rt.slot_req[slot]
         shard = rt.pool.shard_of(slot)
         replayed = int(rt.prefill_pos[slot]) + len(req.tokens)
-        req.preempt(now)
+        self._release_draft(req)        # replay restarts decode: any
+        req.preempt(now)                # retained draft row is stale
         rt.slot_req[slot] = None
         rt.tok[slot] = 0
         rt.pos[slot] = 0
@@ -1266,6 +1444,27 @@ class CascadeEngine:
         self.scheduler.requeue(req, tier)
         self.metrics.record_preemption(tier, replayed)
         self._trace_req(req, "PREEMPTED", tier, shard)
+
+    def _release_draft(self, req: Request) -> None:
+        """Free `req`'s retained draft row (if any): the cheap-tier row
+        kept alive at escalation to draft tokens for the expensive
+        tier's verify pass.  Idempotent; clears any staged drafts so a
+        replayed / re-queued request never verifies stale tokens."""
+        req.draft_tokens = []
+        req.draft_confs = []
+        if req.draft_slot is None:
+            return
+        drt = self.runtimes[req.draft_tier]
+        s = req.draft_slot
+        drt.draft_req[s] = None
+        drt.tok[s] = 0
+        drt.pos[s] = 0
+        drt.prefill_pos[s] = 0
+        if drt.paged:
+            drt.pool.release(s)
+        self.scheduler.release(req.draft_tier, s)
+        req.draft_tier = None
+        req.draft_slot = None
 
     def _preempt_stalled(self, tier: int, rt: _TierRuntime,
                          plan: Optional[StepPlan],
@@ -1280,8 +1479,18 @@ class CascadeEngine:
                        if plan.kind[s] == KIND_STALL]
             if not stalled:
                 return plan
+            shards = sorted({int(plan.shard[s]) for s in stalled})
+            # draft rows first: dropping one costs only speculative
+            # work (its target replays nothing), so never preempt a
+            # real request while a stalled shard still hosts a draft
+            drafts = [s for s in rt.draft_slots()
+                      if rt.pool.shard_of(s) in shards]
+            if drafts:
+                self._release_draft(rt.draft_req[drafts[-1]])
+                plan = self._build_plan(rt)
+                continue
             victim = None
-            for shard in sorted({int(plan.shard[s]) for s in stalled}):
+            for shard in shards:
                 victim = self._pick_victim(rt, shard)
                 if victim is not None:
                     break
@@ -1305,6 +1514,7 @@ class CascadeEngine:
             victim = max(rows)
         req = rt.slot_req[victim]
         shard = rt.pool.shard_of(victim) if rt.paged else None
+        self._release_draft(req)
         req.fail(now)
         rt.slot_req[victim] = None
         rt.tok[victim] = 0
@@ -1326,7 +1536,8 @@ class CascadeEngine:
         if not self._has_deadlines:
             return
         for req in self.scheduler.shed(tier, now, self._service_floor(tier)):
-            req.shed(now)
+            self._release_draft(req)    # escalated-then-shed requests
+            req.shed(now)               # may hold a cheap-tier row
             self.metrics.record_shed(tier)
             if self.tracer is not None:
                 self.tracer.request_done(req.rid, tier, None, state="SHED",
@@ -1417,15 +1628,28 @@ class CascadeEngine:
         exhaustion fails one victim, re-plans, and relaunches for the
         survivors."""
         tr = self.tracer
+        use_spec = rt.spec_k > 0 and rt.ragged
+        spec_out = None
         while True:
-            if not plan.prefill_rows and not plan.decode_rows:
+            if not plan.prefill_rows and not plan.decode_rows \
+                    and not plan.draft_rows:
                 return 0                # every live row stalled
             t0 = tr.now_us() if tr is not None else 0.0
-            kind = "run_ragged" if rt.ragged else "run_mixed"
+            kind = ("run_spec" if use_spec
+                    else "run_ragged" if rt.ragged else "run_mixed")
             try:
                 with obs.annotation(f"{kind}/{rt.spec.name}",
                                     self.profile_annotations):
-                    if rt.ragged:
+                    if use_spec:
+                        out = self._launch(
+                            tier, kind,
+                            lambda p=plan: rt.run_spec(
+                                p.flat_tokens, p.flat_pos, p.q_len,
+                                p.q_start, p.draft_len))
+                        tok, conf = out[0], out[1]
+                        spec_out = out[2:7]
+                        cache = out[7]
+                    elif rt.ragged:
                         tok, conf, cache = self._launch(
                             tier, kind,
                             lambda p=plan: rt.run_ragged(
@@ -1437,8 +1661,14 @@ class CascadeEngine:
                             lambda p=plan: rt.run_mixed(p.tokens, p.pos,
                                                         p.q_len))
             except _RetryExhausted as e:
-                self._fail_one(tier, rt,
-                               plan.prefill_rows + plan.decode_rows, now, e)
+                rows = plan.prefill_rows + plan.decode_rows
+                if rows:
+                    self._fail_one(tier, rt, rows, now, e)
+                else:
+                    # a draft-only launch exhausted its retries: drop the
+                    # speculation (the targets just decode normally)
+                    for s in plan.draft_rows:
+                        self._release_draft(rt.draft_req[s])
                 plan = self._build_plan(rt)
                 if plan is None:
                     return 0
@@ -1480,16 +1710,67 @@ class CascadeEngine:
             req.start_decode(t_dec)
             self._trace_req(req, "DECODE", tier, int(plan.shard[s]))
             rt.pos[s] = req.prompt_tokens   # next decode writes here
-        if not plan.finishing and not plan.decode_rows:
-            return 0                    # mid-prompt chunks only: no emits
-        tok, conf = self._fetch(tier, (tok, conf))
+        for s in plan.draft_rows:
+            # catch-up advances on host-known lengths, like prefill; the
+            # draft scan's own writes beyond this are always re-written
+            # by the next catch-up before they could be attended
+            rt.pos[s] += int(plan.q_len[s])
+        drafting = [s for s in plan.draft_rows if plan.draft_len[s] > 0]
+        if not plan.finishing and not plan.decode_rows and not drafting:
+            return 0            # mid-prompt chunks / pure catch-up only
+        if use_spec:
+            fetched = self._fetch(tier, (tok, conf) + tuple(spec_out))
+            tok, conf, spec_tok, spec_conf, acc_len, dtok, dconf = fetched
+        else:
+            tok, conf = self._fetch(tier, (tok, conf))
         t_emit = self.clock.now()       # post-compute (see _admit)
+        ver = dict(plan.verify_rows)
         for s in plan.finishing + plan.decode_rows:
             req = rt.slot_req[s]
-            req.emit(int(tok[s]), float(conf[s]), t_emit)
-            rt.tok[s] = tok[s]
+            nd = ver.get(s, 0)
+            if nd:
+                # greedy speculative acceptance: emit the scoring model's
+                # argmax at every accepted position plus the bonus token —
+                # the emitted stream is argmaxes only, bit-identical to
+                # non-speculative decode
+                acc = min(int(acc_len[s]), nd)
+                for j in range(acc + 1):
+                    req.emit(int(spec_tok[s, j]), float(spec_conf[s, j]),
+                             t_emit)
+                rt.tok[s] = int(spec_tok[s, acc])
+                rt.pos[s] += acc + 1
+                self.metrics.record_speculation(tier, nd, acc)
+                # per-token ground-truth agreement for the draft tier's
+                # gate: every verified draft up to (and including) the
+                # first rejection — past it the drafts' context is
+                # already wrong, so the comparison stops being oracle
+                for j in range(min(acc + 1, nd)):
+                    self.metrics.calibration.record_verify_outcome(
+                        tier - 1, float(req.draft_confs[j]), j < acc)
+                req.draft_tokens = []
+                req.draft_confs = []
+            else:
+                req.emit(int(tok[s]), float(conf[s]), t_emit)
+                rt.tok[s] = tok[s]
         for s in plan.decode_rows:
-            rt.pos[s] += 1
+            if s not in ver:
+                rt.pos[s] += 1
+        if use_spec and drafting:
+            # stage the fetched drafts on their target requests (consumed
+            # by the next tier's verify pass later this same tick),
+            # truncated at the first token the calibrated gate distrusts
+            thr = (self.spec_delta if self.spec_delta is not None
+                   else self.scheduler.delta(tier))
+            for s in drafting:
+                req = rt.draft_req[s]
+                dl = int(plan.draft_len[s])
+                keep = 0
+                for j in range(dl):
+                    if float(dconf[s, j]) < thr:
+                        break
+                    keep += 1
+                req.draft_tokens = [int(x) for x in dtok[s, :keep]]
+                req.draft_confs = [float(x) for x in dconf[s, :keep]]
         return len(plan.decode_rows)
 
     def _exec_split(self, tier: int, rt: _TierRuntime,
@@ -1676,10 +1957,28 @@ class CascadeEngine:
                 # span on the *next* tier's track: queued for escalation
                 self._trace_req(req, "ESCALATED", tier + 1, None)
                 esc += 1
+                if self.speculation_k and rt.spec_draft and rt.ragged:
+                    # speculative mode: keep this row alive as the
+                    # request's draft row — its prompt KV is already
+                    # resident, so the cheap tier can catch up on the
+                    # expensive tier's emissions and draft ahead.  The
+                    # row changes role, not owner: no pool/scheduler
+                    # release (the slots invariant checker sees one
+                    # binding throughout).
+                    self._release_draft(req)    # M>2: drop the older row
+                    rt.draft_req[slot] = req
+                    rt.slot_req[slot] = None
+                    rt.tok[slot] = 0
+                    rt.pos[slot] = req.prompt_tokens  # rewind: replay the
+                    rt.prefill_pos[slot] = 0          # target's emissions
+                    req.draft_tier = tier
+                    req.draft_slot = slot
+                    continue
             else:
                 # post-compute time: the final decode step belongs to this
                 # request's latency (`now` was sampled at step start)
                 req.complete(self.clock.now())
+                self._release_draft(req)
                 self.metrics.record_completion(req)
                 if req.tier > 0:
                     # escalation outcome: the expensive tier's answer is
@@ -1834,7 +2133,11 @@ class CascadeEngine:
                 zr = np.zeros(rt.capacity, np.int32)
                 for w in rt.flat_buckets:
                     z = np.zeros((1, w), np.int32)
-                    _, _, rt.pool.cache = rt.run_ragged(z, z, zr, zr)
+                    if rt.spec_fn is not None:
+                        out = rt.run_spec(z, z, zr, zr, zr)
+                        rt.pool.cache = out[-1]
+                    else:
+                        _, _, rt.pool.cache = rt.run_ragged(z, z, zr, zr)
                 rt.warmed_widths = set(rt.flat_buckets)
                 rt.launched_widths = set()
                 continue

@@ -84,6 +84,13 @@ class ServingMetrics:
         self.preemptions_by_tier = [0] * len(tiers)
         self.replayed_tokens_by_tier = [0] * len(tiers)
         self.retries_by_tier = [0] * len(tiers)
+        # speculative cascade decoding, indexed by the *verify* tier:
+        # drafted counts verified draft positions, accepted those the
+        # scoring model's argmax confirmed (rolled_back = the rest, whose
+        # provisional KV writes were discarded)
+        self.spec_drafted_by_tier = [0] * len(tiers)
+        self.spec_accepted_by_tier = [0] * len(tiers)
+        self.spec_rolled_back_by_tier = [0] * len(tiers)
         # prefix-cache telemetry (engine records one lookup per chunked
         # admission when the cache is enabled): hits are admissions that
         # mapped a cached prefix; cached_prefix_tokens are prompt tokens
@@ -158,6 +165,14 @@ class ServingMetrics:
             agree = req.tokens_by_tier[g] == req.tokens_by_tier[g + 1]
             self.calibration.record_outcome(
                 g, req.seq_conf_by_tier[g], agree, req.prompt_tokens)
+
+    def record_speculation(self, tier: int, drafted: int,
+                           accepted: int) -> None:
+        """One verify window resolved on `tier`: `drafted` draft
+        positions scored, `accepted` confirmed (the rest rolled back)."""
+        self.spec_drafted_by_tier[tier] += int(drafted)
+        self.spec_accepted_by_tier[tier] += int(accepted)
+        self.spec_rolled_back_by_tier[tier] += int(drafted - accepted)
 
     def record_prefix_lookup(self, tier: int, cached_tokens: int,
                              prompt_tokens: int) -> None:
@@ -364,6 +379,22 @@ class ServingMetrics:
                 "hits_by_tier": list(self.prefix_hits_by_tier),
                 "cached_tokens_by_tier":
                     list(self.prefix_cached_tokens_by_tier),
+            },
+            # speculative cascade decoding: accept rate over verified
+            # drafts (the ROADMAP success metric's denominator) and the
+            # raw draft/accept/rollback token counters per verify tier
+            "speculation": {
+                "drafted": sum(self.spec_drafted_by_tier),
+                "accepted": sum(self.spec_accepted_by_tier),
+                "rolled_back": sum(self.spec_rolled_back_by_tier),
+                "accept_rate": (sum(self.spec_accepted_by_tier)
+                                / sum(self.spec_drafted_by_tier)
+                                if sum(self.spec_drafted_by_tier)
+                                else float("nan")),
+                "drafted_by_tier": list(self.spec_drafted_by_tier),
+                "accepted_by_tier": list(self.spec_accepted_by_tier),
+                "rolled_back_by_tier":
+                    list(self.spec_rolled_back_by_tier),
             },
             "conservation": self.conservation(),
             "escalation_rates": [g.escalation_rate

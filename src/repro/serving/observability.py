@@ -292,7 +292,14 @@ class GateCalibration:
       escalated request completes, agreement between the cheap and
       expensive tiers' token streams is the online correctness proxy
       feeding the reliability bins (overall and per prompt-length
-      bucket).
+      bucket);
+    * every **verify outcome** (``record_verify_outcome``) — under
+      speculative cascade decoding, each drafted token the expensive
+      tier scored is a per-token agreement sample at the draft tier's
+      gate.  Unlike escalation outcomes this stream is *ground truth*
+      with no selection bias: the verifier scores every draft position
+      regardless of the gate's decision, so its reliability bins cover
+      the full confidence range, not just the escalated tail.
     """
 
     def __init__(self, n_gates: int, bins: int = 10):
@@ -305,6 +312,8 @@ class GateCalibration:
             {} for _ in range(n_gates)]
         self.outcomes = [0] * n_gates
         self.agreements = [0] * n_gates
+        self.verify_outcomes = [0] * n_gates
+        self.verify_accepts = [0] * n_gates
 
     def record_gate(self, gate: int, conf: float, escalated: bool) -> None:
         i = min(max(int(conf * self.bins), 0), self.bins - 1)
@@ -325,7 +334,23 @@ class GateCalibration:
                 by[bucket] = ReliabilityBins(self.bins)
             by[bucket].record(conf, agree)
 
+    def record_verify_outcome(self, gate: int, conf: float,
+                              accepted: bool) -> None:
+        """One speculative verify decision at `gate`: the draft tier
+        emitted a token with confidence `conf` and the verify tier's
+        argmax `accepted` (or rejected) it.  Streams into the same
+        reliability bins escalation outcomes feed — per-token rather
+        than per-sequence, and bias-free (every draft is scored)."""
+        self.verify_outcomes[gate] += 1
+        if accepted:
+            self.verify_accepts[gate] += 1
+        self.reliability[gate].record(conf, accepted)
+
     # -- readouts -----------------------------------------------------------
+
+    def verify_accept_rate(self, gate: int) -> float:
+        n = self.verify_outcomes[gate]
+        return self.verify_accepts[gate] / n if n else float("nan")
 
     def ece(self, gate: int) -> float:
         return self.reliability[gate].ece()
@@ -352,6 +377,8 @@ class GateCalibration:
                 "bin_edges": [i / self.bins for i in range(self.bins + 1)],
                 "outcomes": self.outcomes[g],
                 "agreement_rate": self.agreement_rate(g),
+                "verify_outcomes": self.verify_outcomes[g],
+                "verify_accept_rate": self.verify_accept_rate(g),
                 "ece": self.ece(g),
                 "reliability": self.reliability[g].diagram(),
                 "ece_by_prompt_bucket": by_bucket,

@@ -87,6 +87,15 @@ class Request:
 
     tokens: List[int] = field(default_factory=list)       # current tier
     token_conf: List[float] = field(default_factory=list)
+    # speculative cascade decoding: the cheap-tier row retained at
+    # escalation to draft ahead of this request's expensive-tier decode,
+    # plus the drafts it staged for the next verify pass.  Cleared by
+    # the engine on every terminal/replay path (never by admit(), which
+    # runs while the draft row is live).
+    draft_tier: Optional[int] = None
+    draft_slot: Optional[int] = None
+    draft_tokens: List[int] = field(default_factory=list)
+    draft_confs: List[float] = field(default_factory=list)
     seq_conf_by_tier: List[float] = field(default_factory=list)
     # per-tier token-stream snapshots (taken at gate time): tier t's
     # stream vs tier t+1's is the escalation-outcome agreement proxy

@@ -557,3 +557,54 @@ def test_combo_chaos_with_prefix_cache(tiny_parts, shared_ref_streams):
     assert len(plan.log) > 0
     for rt in eng.runtimes:
         check_invariants(rt.pool)
+
+
+# ---------------------------------------------------------------------------
+# chaos x speculative cascade decoding: shrink + preemption churn while
+# the expensive tier verifies drafted tokens on provisional KV
+# ---------------------------------------------------------------------------
+
+
+def test_speculation_chaos_matches_k0_oracle(tiny_parts):
+    """Speculative decoding under pool shrinkage and preemption churn on
+    BOTH over-subscribed arenas: draft rows are retained cheap-tier rows
+    and rejected verify suffixes are provisional KV writes, so the chaos
+    suite's two guarantees must survive them — the slots invariant
+    checker stays green on every pool, and streams (and terminal states)
+    are bit-identical to the k=0 escalation-only oracle.  δ=1.0
+    escalates every request, so the verify path sees all six; greedy
+    acceptance emits scoring-tier argmaxes only, which is why parity
+    holds at k>0, not just k=0."""
+    from tests.test_slots_properties import check_invariants
+
+    def chaos(k):
+        plan = FaultPlan(seed=7,
+                         shrinks=(Shrink(tick=3, tier=0, blocks=5,
+                                         restore_tick=9),
+                                  Shrink(tick=5, tier=1, blocks=5,
+                                         restore_tick=11)))
+        eng = _build(tiny_parts, tiers=2, slots=4, kv_blocks=[14, 14],
+                     deltas=[1.0], preemption_policy="youngest",
+                     faults=plan, speculation_k=k,
+                     spec_delta=0.0 if k else None)
+        _checked_shrink(eng.runtimes[0].pool)
+        _checked_shrink(eng.runtimes[1].pool)
+        s = _drain(eng, _prompts(tiny_parts[0]))
+        for rt in eng.runtimes:
+            check_invariants(rt.pool)
+            # no draft row leaks a binding past drain
+            assert all(r is None for r in rt.draft_req)
+        assert any(e[1] == "shrink" for e in plan.log)
+        return eng, s
+
+    oracle_eng, oracle = chaos(0)
+    assert oracle["completed"] == 6
+    for k in (2, 4):
+        eng, s = chaos(k)
+        assert s["completed"] == 6 and s["failed"] == 0
+        assert _streams(eng) == _streams(oracle_eng)
+        assert {r.rid: r.state for r in eng.requests} \
+            == {r.rid: r.state for r in oracle_eng.requests}
+        sp = s["speculation"]
+        assert sp["drafted"] > 0
+        assert sp["drafted"] == sp["accepted"] + sp["rolled_back"]

@@ -1,0 +1,184 @@
+"""Speculative cascade decoding: draft cheap, batch-verify expensive.
+
+Acceptance tests for ``speculation_k``:
+
+* **Bit-identical streams.**  Emitted tokens are always scoring-model
+  argmaxes (accepted draft prefix + the verifier's bonus token), so
+  every ``k`` — including the ``k=0`` escalation-only oracle — must
+  produce byte-for-byte the same token streams and confidences as a
+  plain engine with no speculation at all.
+* **One launch + one device_get per active tier per tick.**  The
+  verify forward, accept/reject epilogue, and the draft scan are fused
+  into a single compiled program per tier, and the tick's results come
+  back through one blocking fetch per tier — speculation must not
+  regress the unified-step contract.
+* **The speedup mechanism engages.**  Under self-speculation (both
+  tiers share parameters) every draft is accepted, so a k-draft tick
+  emits k+1 tokens per verify row and the run finishes in fewer ticks
+  with fewer expensive-tier launches.
+* **Accept/reject telemetry** feeds the draft tier's gate calibration
+  as a bias-free ground-truth stream.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import CascadeEngine, TierSpec, VirtualClock
+from repro.serving.request import RequestState
+
+
+@pytest.fixture(scope="module")
+def tiny_parts():
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("gemma3-1b", "smoke")
+    fast_p = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    exp_p = init_params(cfg, jax.random.PRNGKey(1), jnp.float32)
+    return cfg, fast_p, exp_p
+
+
+def _mk(cfg, fast_p, exp_p, k, **kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("prompt_len", 24)
+    kw.setdefault("gen_len", 8)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("kv_block_size", 4)
+    kw.setdefault("deltas", [1.0])        # escalate everything
+    kw.setdefault("clock", VirtualClock())
+    if k:
+        kw.setdefault("speculation_k", k)
+        kw.setdefault("spec_delta", 0.0)  # stage every drafted token
+    return CascadeEngine([TierSpec("fast", cfg, fast_p),
+                          TierSpec("exp", cfg, exp_p)], **kw)
+
+
+def _prompts(cfg, n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _drain(eng, prompts):
+    for p in prompts:
+        eng.submit(p, arrival_time=0.0)
+    s = eng.run(max_steps=800)
+    assert all(r.state is RequestState.DONE for r in eng.requests)
+    assert s["conservation"]["ok"], s["conservation"]
+    return s
+
+
+def _streams(eng):
+    return {r.rid: (list(r.tokens),
+                    [round(float(c), 6) for c in r.token_conf])
+            for r in eng.requests}
+
+
+def test_spec_streams_match_escalation_only_oracle(tiny_parts):
+    """Acceptance: with distinct fast/expensive models the emitted
+    streams at k∈{2,4} are bit-identical to the k=0 oracle AND to a
+    plain engine with speculation disabled entirely — greedy
+    speculative decoding never changes what the verifier would have
+    said token by token."""
+    cfg, fast_p, exp_p = tiny_parts
+    prompts = _prompts(cfg)
+    plain = _mk(cfg, fast_p, exp_p, 0)
+    _drain(plain, prompts)
+    oracle = _mk(cfg, fast_p, exp_p, 0, speculation_k=0)
+    _drain(oracle, prompts)
+    assert _streams(oracle) == _streams(plain)
+    for k in (2, 4):
+        eng = _mk(cfg, fast_p, exp_p, k)
+        s = _drain(eng, prompts)
+        assert _streams(eng) == _streams(plain), f"k={k} diverged"
+        assert s["speculation"]["drafted"] > 0, \
+            f"k={k} never staged a draft"
+
+
+def test_spec_tick_pays_one_launch_and_one_sync(tiny_parts):
+    """Acceptance: in speculation mode each tick still executes at
+    most ONE compiled program and ONE blocking device fetch per active
+    tier — the fused verify+accept+draft launch, tick by tick and in
+    aggregate, with no mid-run recompiles."""
+    cfg, fast_p, _ = tiny_parts
+    eng = _mk(cfg, fast_p, fast_p, 4)
+    eng.warmup()
+    for p in _prompts(cfg, n=5):
+        eng.submit(p, arrival_time=0.0)
+    for _ in range(400):
+        before_l = list(eng.metrics.launches_by_tier)
+        before_s = list(eng.metrics.host_syncs_by_tier)
+        eng.step()
+        for t in range(2):
+            dl = eng.metrics.launches_by_tier[t] - before_l[t]
+            ds = eng.metrics.host_syncs_by_tier[t] - before_s[t]
+            assert dl <= 1, f"tier {t} paid {dl} launches in one tick"
+            assert ds <= 1, f"tier {t} paid {ds} fetches in one tick"
+        if all(r.state is RequestState.DONE for r in eng.requests):
+            break
+    assert all(r.state is RequestState.DONE for r in eng.requests)
+    s = eng.metrics.summary()
+    assert max(s["launches_per_tick"]) <= 1.0 + 1e-9
+    assert max(s["host_syncs_per_tick"]) <= 1.0 + 1e-9
+    for rep in eng.compile_stats():
+        assert rep["mid_run_recompiles"] == [], rep
+
+
+def test_self_speculation_multiplies_tokens_per_tick(tiny_parts):
+    """With tied parameters the verifier agrees with every draft
+    (accept rate 1), so k>0 finishes the same workload in strictly
+    fewer ticks and fewer expensive-tier launches than k=0 — while
+    emitting identical streams."""
+    cfg, fast_p, _ = tiny_parts
+    prompts = _prompts(cfg, n=6, seed=9)
+    runs = {}
+    for k in (0, 4):
+        eng = _mk(cfg, fast_p, fast_p, k, speculation_k=k,
+                  spec_delta=0.0 if k else None, gen_len=12)
+        runs[k] = (eng, _drain(eng, prompts))
+    (e0, s0), (e4, s4) = runs[0], runs[4]
+    assert _streams(e4) == _streams(e0)
+    assert s4["steps"] < s0["steps"], (s4["steps"], s0["steps"])
+    assert s4["launches"][1] < s0["launches"][1]
+    sp = s4["speculation"]
+    assert sp["drafted"] > 0
+    assert sp["accepted"] == sp["drafted"]        # tied params: all accept
+    assert sp["accept_rate"] == pytest.approx(1.0)
+    assert sp["drafted"] == sp["accepted"] + sp["rolled_back"]
+
+
+def test_verify_outcomes_feed_gate_calibration(tiny_parts):
+    """Satellite: accept/reject verdicts stream into the draft tier's
+    GateCalibration as ground-truth samples (conf vs verifier
+    agreement), separate from the escalation-censored stream."""
+    cfg, fast_p, exp_p = tiny_parts
+    eng = _mk(cfg, fast_p, exp_p, 3)
+    _drain(eng, _prompts(cfg))
+    cal = eng.metrics.calibration
+    assert cal.verify_outcomes[0] > 0
+    rate = cal.verify_accept_rate(0)
+    assert 0.0 <= rate <= 1.0
+    g = cal.summary()[0]
+    assert g["verify_outcomes"] == cal.verify_outcomes[0]
+    assert g["verify_accept_rate"] == pytest.approx(rate)
+    # self-speculation: the ground-truth stream reads accept rate 1
+    eng2 = _mk(cfg, fast_p, fast_p, 3)
+    _drain(eng2, _prompts(cfg, n=4))
+    assert eng2.metrics.calibration.verify_accept_rate(0) \
+        == pytest.approx(1.0)
+
+
+def test_speculation_config_validation(tiny_parts):
+    cfg, fast_p, exp_p = tiny_parts
+    with pytest.raises(ValueError, match=">= 0"):
+        _mk(cfg, fast_p, exp_p, 0, speculation_k=-1)
+    with pytest.raises(ValueError, match="two"):
+        CascadeEngine([TierSpec("t", cfg, fast_p)], slots=2,
+                      prompt_len=16, gen_len=4, deltas=[],
+                      speculation_k=2)
+    with pytest.raises(ValueError, match="ragged"):
+        _mk(cfg, fast_p, exp_p, 0, speculation_k=2,
+            use_ragged_step=False)
+    with pytest.raises(ValueError, match="spec_delta"):
+        _mk(cfg, fast_p, exp_p, 0, spec_delta=0.5)
